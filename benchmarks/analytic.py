@@ -1,0 +1,168 @@
+"""Analytic FLOP / byte models per (arch x shape) — roofline inputs.
+
+XLA's cost_analysis counts while/scan bodies ONCE (verified in
+EXPERIMENTS.md §Dry-run), so compiled-HLO flops understate layer-stacked
+models by ~n_layers.  The matmul flop counts below use the same 2*m*n*k
+convention as XLA's flop counter and are exact for the architectures we
+define (we wrote every einsum); they are cross-checked against HLO flops
+on a 1-layer config in tests/test_roofline.py.
+
+Hardware constants (TPU v5e, per spec): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+# effective on-wire multiplier per collective (ring algorithms)
+COLL_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+               "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def _attn_flops(cfg, T, S_ctx, causal=True):
+    """Per-token projections + score/value matmuls for T query tokens
+    attending to S_ctx context (full materialized length)."""
+    h, kv, hd, d = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.d_model
+    proj = 2 * T * d * (h * hd) * 2          # q and o projections
+    proj += 2 * T * d * (kv * hd) * 2        # k and v projections
+    ctx = S_ctx / 2 if causal and T == S_ctx else S_ctx
+    if cfg.sliding_window:
+        ctx = min(ctx, cfg.sliding_window)
+    sc = 2 * T * ctx * h * hd * 2            # QK^T and PV
+    return proj + sc
+
+
+def _mlp_flops(cfg, T):
+    return 3 * 2 * T * cfg.d_model * cfg.d_ff
+
+
+def _moe_flops(cfg, T):
+    routed = 3 * 2 * T * cfg.top_k * cfg.d_model * cfg.moe_d_ff
+    shared = 3 * 2 * T * cfg.d_model * cfg.shared_d_ff if cfg.n_shared_experts else 0
+    router = 2 * T * cfg.d_model * cfg.n_experts
+    return routed + shared + router
+
+
+def _mamba_flops(cfg, T):
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    g, N, nh = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    p = d_in // nh
+    Q = cfg.ssm_chunk
+    proj = 2 * T * d * (2 * d_in + 2 * g * N + nh) + 2 * T * d_in * d
+    # SSD per chunk: scores (Q^2 g N) + y_diag (Q^2 h p) + 2 state matmuls
+    nc = max(T // Q, 1)
+    intra = 2 * nc * Q * Q * (g * N + nh * p)
+    inter = 2 * 2 * nc * Q * nh * p * N
+    return proj + intra + inter
+
+
+def _layer_flops(cfg, T, S_ctx, kind):
+    causal = kind != "decode"
+    if cfg.family in ("ssm", "hybrid"):
+        f = _mamba_flops(cfg, T)
+        return f
+    f = _attn_flops(cfg, T, S_ctx, causal)
+    if cfg.family == "moe":
+        f += _moe_flops(cfg, T)
+    else:
+        f += _mlp_flops(cfg, T)
+    return f
+
+
+def _shared_block_flops(cfg, T, S_ctx, kind):
+    return _attn_flops(cfg, T, S_ctx, kind != "decode") + _mlp_flops(cfg, T)
+
+
+def forward_flops(cfg, batch, seq, kind):
+    """Whole-model forward FLOPs for the global batch."""
+    T = batch * (1 if kind == "decode" else seq)
+    S_ctx = seq
+    f = cfg.n_layers * _layer_flops(cfg, T, S_ctx, kind)
+    if cfg.family == "hybrid" and cfg.attn_every:
+        f += (cfg.n_layers // cfg.attn_every) * _shared_block_flops(cfg, T, S_ctx, kind)
+    f += 2 * T * cfg.d_model * cfg.padded_vocab  # lm head
+    return f
+
+
+def step_flops(cfg, batch, seq, kind, remat_policy="dots"):
+    """Total executed FLOPs for the step (train = fwd + 2x bwd [+ remat])."""
+    f = forward_flops(cfg, batch, seq, kind)
+    if kind == "train":
+        mult = 3.0 if remat_policy == "dots" else 4.0  # full remat refwd
+        return f * mult
+    return f
+
+
+def model_flops(cfg, batch, seq, kind, n_params, n_active=None):
+    """The spec's MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE)."""
+    T = batch * (1 if kind == "decode" else seq)
+    n = n_active if n_active is not None else n_params
+    if kind == "train":
+        return 6.0 * n * T
+    return 2.0 * n * T
+
+
+def active_params(cfg, n_params):
+    """MoE: subtract the inactive routed-expert share."""
+    if not cfg.n_experts:
+        return n_params
+    from repro.models.moe import padded_experts
+    ep = padded_experts(cfg.n_experts)
+    per_layer_routed = 3 * cfg.d_model * cfg.moe_d_ff
+    routed_total = cfg.n_layers * ep * per_layer_routed
+    active_routed = cfg.n_layers * cfg.top_k * per_layer_routed
+    return n_params - routed_total + active_routed
+
+
+def hbm_bytes(cfg, batch, seq, kind, n_params, n_chips, microbatches=1,
+              tp=16):
+    """Per-chip HBM traffic model for one step (napkin, documented).
+
+    train : param read+write (2B each, TP+DP sharded) + Adam moments
+            (f32 m,v read+write = 16B) + activation traffic: forward save
+            + backward read of layer inputs (~6B/elem incl. recompute),
+            activations sharded batch->DP and d_model->TP.
+    decode: params once (2B, the classic decode bound) + KV cache r/w.
+    prefill: params + one activation pass.
+    """
+    P = n_params / n_chips  # params are sharded over TP and ZeRO over DP
+    dp = n_chips / tp
+    T_dp = batch * (1 if kind == "decode" else seq) / dp
+    act_layer_bytes = 6 * cfg.d_model / tp  # d_model split across TP
+    if kind == "train":
+        opt = 20 * P
+        acts = 2 * T_dp * cfg.n_layers * act_layer_bytes
+        return opt + acts
+    if kind == "prefill":
+        return 2 * P + T_dp * cfg.n_layers * act_layer_bytes
+    # decode: params + cache traffic
+    kvb = 0.0
+    if cfg.n_kv_heads:
+        slots = cfg.n_layers if cfg.family != "hybrid" else max(
+            cfg.n_layers // max(cfg.attn_every, 1), 1)
+        ctx = min(seq, cfg.sliding_window) if cfg.sliding_window else seq
+        # cache read per step (seq-sharded over TP), small write
+        kvb = slots * 2 * (batch / dp) * ctx * cfg.n_kv_heads * cfg.head_dim * 2 / tp
+    if cfg.ssm_state:
+        hp = cfg.ssm_expand * cfg.d_model // cfg.ssm_heads
+        kvb += 2 * cfg.n_layers * (batch / dp) * cfg.ssm_heads * hp * cfg.ssm_state * 4
+    return 2 * P + kvb
+
+
+def roofline_terms(cfg, batch, seq, kind, n_params, coll_bytes_by_op,
+                   n_chips=256, remat_policy="dots", microbatches=1):
+    """The three terms (seconds) from the spec, per step."""
+    f = step_flops(cfg, batch, seq, kind, remat_policy)
+    compute_s = f / (n_chips * PEAK_FLOPS)
+    mem_s = hbm_bytes(cfg, batch, seq, kind, n_params, n_chips,
+                      microbatches) / HBM_BW
+    coll_bytes = sum(COLL_FACTOR.get(k, 1.0) * v
+                     for k, v in coll_bytes_by_op.items())
+    coll_s = coll_bytes / LINK_BW  # HLO bytes are already per-device shards
+    return {"compute_s": compute_s, "memory_s": mem_s, "collective_s": coll_s}

@@ -1,0 +1,45 @@
+"""Fig. 3: expected storage gain of sorting one column,
+2*delta(kn, ceil(k*n_i^(1/k)), n) - 4*n_i, for n = 100,000."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.column_order import column_gain
+
+
+def run(n=100_000, quick=False):
+    rows = []
+    for k in (1, 2, 3, 4):
+        cards = np.unique(np.logspace(1, 5.3, 60).astype(int))
+        gains = [column_gain(n, int(c), k) for c in cards]
+        best = int(cards[int(np.argmax(gains))])
+        rows.append({"k": k, "argmax_card": best,
+                     "max_gain": float(max(gains)),
+                     "gain_at_10": float(column_gain(n, 10, k)),
+                     "gain_at_100k": float(column_gain(n, 100_000, k))})
+    return rows
+
+
+def validate(rows):
+    """Paper: gain is modal (rises then falls); maximum near
+    (n(w-1)/2)^(k/(k+1)) — the paper cites ~1,200 for k=1 and ~13,400 for
+    k=2 at n=100,000 (the closed form is an approximation; we check its
+    location only where the paper does, k <= 2)."""
+    checks = []
+    n, w = 100_000, 32
+    for r in rows:
+        k = r["k"]
+        modal = (r["max_gain"] > r["gain_at_10"]
+                 and r["max_gain"] > r["gain_at_100k"])
+        checks.append(f"k={k}: gain is modal: {'PASS' if modal else 'FAIL'}")
+        if k <= 2:
+            pred = (n * (w - 1) / 2) ** (k / (k + 1))
+            ok = 0.3 * pred < r["argmax_card"] < 3 * pred
+            checks.append(
+                f"k={k}: argmax {r['argmax_card']} ~ predicted {pred:.0f}: "
+                f"{'PASS' if ok else 'FAIL'}")
+    k1 = [r for r in rows if r["k"] == 1][0]
+    checks.append(f"k=1 max near 1200 (paper): got {k1['argmax_card']}: "
+                  f"{'PASS' if 600 < k1['argmax_card'] < 2400 else 'FAIL'}")
+    return checks

@@ -1,0 +1,63 @@
+"""Fig. 4: Gray-Lex index sizes for all 4! dimension orderings —
+uniform cardinalities (200,400,600,800) and Zipfian skews (1.6,1.2,0.8,0.4)
+on 100,000 rows; plus the §4.3 heuristic's recommendation quality."""
+
+from __future__ import annotations
+
+import itertools
+
+import numpy as np
+
+from repro.core.bitmap_index import index_size_report
+from repro.core.column_order import order_columns
+from repro.data.tables import make_uniform_table, make_zipf_table
+
+
+def all_orderings_size(cols, k):
+    out = {}
+    for perm in itertools.permutations(range(len(cols))):
+        rep = index_size_report(
+            cols, k=k, row_order="lex", column_order=list(perm))
+        out["".join(str(p + 1) for p in perm)] = rep["total_words"]
+    return out
+
+
+def run(n=100_000, quick=False):
+    if quick:
+        n = 20_000
+    uni = make_uniform_table(n, [200, 400, 600, 800], seed=0)
+    zipf = make_zipf_table(n, [100] * 4, [1.6, 1.2, 0.8, 0.4], seed=1)
+    results = []
+    for name, cols, cards in (
+        ("uniform", uni, [200, 400, 600, 800]),
+        ("zipf", zipf, [100] * 4),
+    ):
+        for k in (1, 2) if quick else (1, 2, 3, 4):
+            sizes = all_orderings_size(cols, k)
+            best = min(sizes, key=sizes.get)
+            worst = max(sizes, key=sizes.get)
+            heur = order_columns(cards, k)
+            heur_name = "".join(str(int(p) + 1) for p in heur)
+            results.append({
+                "dataset": name, "k": k, "best": best, "worst": worst,
+                "best_words": sizes[best], "worst_words": sizes[worst],
+                "heuristic": heur_name, "heuristic_words": sizes[heur_name],
+                "spread": sizes[worst] / sizes[best],
+            })
+    return results
+
+
+def validate(rows):
+    """Paper: ordering matters (significant spread); the heuristic is
+    near-optimal for k=1 on uniform data."""
+    checks = []
+    for r in rows:
+        if r["dataset"] == "uniform" and r["k"] == 1:
+            near = r["heuristic_words"] <= 1.15 * r["best_words"]
+            checks.append(
+                f"uniform k=1 heuristic {r['heuristic']} within 15% of best "
+                f"{r['best']}: {'PASS' if near else 'FAIL'}")
+    spread = max(r["spread"] for r in rows)
+    checks.append(f"column order changes size (max spread {spread:.2f}x): "
+                  f"{'PASS' if spread > 1.2 else 'FAIL'}")
+    return checks

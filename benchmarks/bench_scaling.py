@@ -1,0 +1,38 @@
+"""Paper §6.4 scaling claim: with sorting, index size grows SUBLINEARLY in
+the number of rows ('as new data arrives, it is increasingly likely to fit
+into existing runs'); unsorted growth is linear."""
+
+from __future__ import annotations
+
+from repro.core.bitmap_index import index_size_report
+from repro.data.tables import make_kjv4grams_like
+
+
+def run(quick=False):
+    n_max = 400_000 if quick else 2_000_000
+    cols_full = make_kjv4grams_like(n_max)
+    fractions = [0.25, 0.5, 1.0]
+    rows = []
+    for f in fractions:
+        n = int(n_max * f)
+        cols = [c[:n] for c in cols_full]
+        srt = index_size_report(cols, k=1, row_order="lex")
+        uns = index_size_report(cols, k=1, row_order="unsorted")
+        rows.append({"rows": n, "sorted_words": srt["total_words"],
+                     "unsorted_words": uns["total_words"]})
+    return rows
+
+
+def validate(rows):
+    checks = []
+    r0, r1 = rows[0], rows[-1]
+    scale = r1["rows"] / r0["rows"]
+    sorted_growth = r1["sorted_words"] / r0["sorted_words"]
+    unsorted_growth = r1["unsorted_words"] / r0["unsorted_words"]
+    checks.append(
+        f"sorted grows sublinearly ({sorted_growth:.2f}x for {scale:.0f}x rows): "
+        f"{'PASS' if sorted_growth < 0.8 * scale else 'FAIL'}")
+    checks.append(
+        f"unsorted grows ~linearly ({unsorted_growth:.2f}x): "
+        f"{'PASS' if unsorted_growth > 0.7 * scale else 'FAIL'}")
+    return checks

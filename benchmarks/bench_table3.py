@@ -1,0 +1,59 @@
+"""Table 3: per-column EWAH words after lexicographic sort, ordering the
+10 columns by ascending (d1..d10) vs descending (d10..d1) cardinality."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.bitmap_index import index_size_report
+from repro.data.tables import uniform_column, zipf_column
+
+
+def make_10d(n=199_523, seed=0, kind="census"):
+    rng = np.random.default_rng(seed)
+    if kind == "census":
+        cards = [7, 8, 10, 47, 51, 91, 113, 132, 1240, min(99_800, n // 2)]
+        return [zipf_column(n, c, 0.9, rng) for c in cards], cards
+    cards = [2, 3, 7, 9, 11, 50, 2526, 20_000,
+             min(400_000, n // 3), min(984_297, n // 2)]
+    return [uniform_column(n, c, rng) for c in cards], cards
+
+
+def run(n=199_523, quick=False):
+    if quick:
+        n = 50_000
+    out = []
+    for kind in ("census", "dbgen"):
+        cols, cards = make_10d(n, kind=kind)
+        asc = index_size_report(cols, k=1, row_order="lex",
+                                column_order=list(range(10)))
+        desc = index_size_report(cols, k=1, row_order="lex",
+                                 column_order=list(range(9, -1, -1)))
+        uns = index_size_report(cols, k=1, row_order="unsorted",
+                                column_order=list(range(10)))
+        out.append({
+            "dataset": kind, "cards": cards,
+            "unsorted_words": uns["total_words"],
+            "asc_words": asc["total_words"],
+            "desc_words": desc["total_words"],
+            "asc_per_column": asc["per_column_words"],
+            "desc_per_column": desc["per_column_words"],
+        })
+    return out
+
+
+def validate(rows):
+    """Paper: sorting from the smallest column benefits 5+ columns; from the
+    largest, at most ~3; both beat unsorted in total."""
+    checks = []
+    for r in rows:
+        # how many columns shrank vs unsorted baseline per-column? compare
+        # first columns of ascending sort: early columns must be tiny
+        asc = r["asc_per_column"]
+        ok = asc[0] < asc[-1] / 10
+        checks.append(f"{r['dataset']}: asc first column {asc[0]} << last "
+                      f"{asc[-1]}: {'PASS' if ok else 'FAIL'}")
+        better = r["asc_words"] < r["unsorted_words"]
+        checks.append(f"{r['dataset']}: sorted < unsorted: "
+                      f"{'PASS' if better else 'FAIL'}")
+    return checks

@@ -1,0 +1,67 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows plus PASS/FAIL validation of
+the paper's claims.  ``--quick`` shrinks row counts (used by CI/tests).
+
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig2,table4]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--out", default="results/benchmarks.json")
+    args, _ = ap.parse_known_args()
+
+    from . import (bench_fig2, bench_fig3, bench_fig4, bench_fig6,
+                   bench_moe_dispatch, bench_scaling, bench_table3,
+                   bench_table4)
+
+    suites = {
+        "fig2_dirty_probability": bench_fig2,
+        "fig3_column_gain": bench_fig3,
+        "fig4_column_orderings": bench_fig4,
+        "table3_percolumn_sort": bench_table3,
+        "table4_index_sizes": bench_table4,
+        "fig6_query_cost": bench_fig6,
+        "scaling_prefix_growth": bench_scaling,
+        "moe_dispatch_bitmaps": bench_moe_dispatch,
+    }
+    if args.only:
+        keys = [k for k in suites if any(s in k for s in args.only.split(","))]
+        suites = {k: suites[k] for k in keys}
+
+    all_results = {}
+    all_checks = []
+    print("name,us_per_call,derived")
+    for name, mod in suites.items():
+        t0 = time.perf_counter()
+        rows = mod.run(quick=args.quick)
+        dt = (time.perf_counter() - t0) * 1e6
+        checks = mod.validate(rows)
+        all_results[name] = {"rows": rows, "checks": checks}
+        all_checks.extend(checks)
+        derived = f"{len(rows)}rows/{sum('PASS' in c for c in checks)}pass"
+        print(f"{name},{dt:.0f},{derived}")
+        for c in checks:
+            print(f"#   {c}")
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(all_results, f, indent=1, default=str)
+    n_fail = sum("FAIL" in c for c in all_checks)
+    print(f"# total: {len(all_checks)} checks, {n_fail} failures")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

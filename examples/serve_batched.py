@@ -1,0 +1,14 @@
+"""Batched serving with histogram-aware request packing (paper §4.2 applied
+to the serving plane): requests are admitted in Gray-Frequency order of
+their length bins, cutting padding waste vs arrival order.
+
+  PYTHONPATH=src python examples/serve_batched.py
+"""
+
+import sys
+
+from repro.launch import serve as serve_mod
+
+if __name__ == "__main__":
+    serve_mod.main(["--arch", "tinyllama-1.1b", "--requests", "32",
+                    "--batch", "8", "--gen-tokens", "8"])

@@ -1,0 +1,17 @@
+"""Core: the paper's contribution — EWAH compression, k-of-N encodings,
+histogram-aware row/column reordering, compressed-domain logical ops."""
+
+from . import column_order, encoding, ewah, histogram, index_size, sorting
+from .bitmap_index import BitmapIndex, assign_codes, index_size_report
+
+__all__ = [
+    "BitmapIndex",
+    "assign_codes",
+    "index_size_report",
+    "column_order",
+    "encoding",
+    "ewah",
+    "histogram",
+    "index_size",
+    "sorting",
+]

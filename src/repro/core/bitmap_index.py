@@ -1,0 +1,187 @@
+"""Compressed bitmap index over a table (paper §2-§4, Algorithm 1).
+
+Two paths:
+  * ``BitmapIndex`` materializes per-bitmap EWAH streams (supports equality
+    queries via compressed-domain logical AND) — used at query-benchmark
+    scale.
+  * ``index_size_report`` computes exact sizes only, in O(nck + L), for the
+    multi-million-row size tables.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from . import ewah
+from .column_order import order_columns
+from .encoding import choose_N, clamp_k, gray_kofn_codes, lex_kofn_codes
+from .histogram import column_histogram, value_order
+from .index_size import column_bitmap_sizes
+from .sorting import order_rows
+
+
+def assign_codes(
+    n_values: int, k: int, code_order: str = "gray", value_policy: str = "alpha",
+    hist: np.ndarray | None = None,
+) -> tuple[np.ndarray, int, int]:
+    """Build the (n_values, k) bitmap-position code table for one column.
+
+    code_order: 'gray' (Gray-Lex / Gray-Frequency) or 'lex' (Alpha-Lex).
+    value_policy: 'alpha' or 'freq' — which value gets the rank-i code.
+    Returns (codes, N, k_effective).
+    """
+    k_eff = clamp_k(n_values, k)
+    N = choose_N(n_values, k_eff)
+    enum = gray_kofn_codes if code_order == "gray" else lex_kofn_codes
+    ordered_codes = enum(N, k_eff, n_values)
+    if value_policy == "alpha" or hist is None:
+        order = np.arange(n_values)
+    else:
+        order = value_order(hist, value_policy)
+    codes = np.empty((n_values, k_eff), dtype=np.int32)
+    codes[order] = ordered_codes
+    return codes, N, k_eff
+
+
+@dataclass
+class ColumnIndex:
+    codes: np.ndarray          # (n_values, k) bitmap positions
+    N: int                     # bitmaps in this column
+    k: int
+    streams: list | None = None    # per-bitmap EWAH uint32 arrays (dense path)
+    sizes: np.ndarray | None = None
+
+
+@dataclass
+class BitmapIndex:
+    """An EWAH-compressed k-of-N bitmap index over an integer-coded table."""
+
+    n_rows: int
+    columns: list = field(default_factory=list)  # ColumnIndex per table column
+
+    # -- construction ------------------------------------------------------
+
+    @staticmethod
+    def build(
+        table_cols: list,
+        k: int = 1,
+        row_order: str = "lex",
+        code_order: str = "gray",
+        value_policy: str | None = None,
+        column_order: str | list | None = "heuristic",
+        materialize: bool = True,
+    ) -> "BitmapIndex":
+        """End-to-end Algorithm-1-style construction.
+
+        table_cols: list of (n,) integer value-id arrays (0-based, dense ids).
+        row_order: 'unsorted' | 'lex' | 'grayfreq' | 'freqcomp'.
+        code_order: 'gray' | 'lex' bitmap-code enumeration order.
+        value_policy: which values get low-rank codes; default 'freq' when
+          row_order='grayfreq' else 'alpha'.
+        column_order: 'heuristic' (paper §4.3 score), None (as given), or an
+          explicit permutation of column indices.
+        """
+        table_cols = [np.asarray(c) for c in table_cols]
+        n = len(table_cols[0])
+        cards = [int(c.max()) + 1 for c in table_cols]
+        if value_policy is None:
+            value_policy = "freq" if row_order == "grayfreq" else "alpha"
+
+        if column_order == "heuristic":
+            perm_cols = order_columns(cards, k)
+        elif column_order is None:
+            perm_cols = np.arange(len(table_cols))
+        else:
+            perm_cols = np.asarray(column_order)
+        cols = [table_cols[i] for i in perm_cols]
+        cards = [cards[i] for i in perm_cols]
+
+        row_perm = order_rows(cols, row_order)
+        cols = [c[row_perm] for c in cols]
+
+        idx = BitmapIndex(n_rows=n)
+        for col, card in zip(cols, cards):
+            hist = column_histogram(col, card)
+            codes, N, k_eff = assign_codes(card, k, code_order, value_policy, hist)
+            ci = ColumnIndex(codes=codes, N=N, k=k_eff)
+            ci.sizes, _, _ = column_bitmap_sizes(col, codes, N)
+            if materialize:
+                ci.streams = _materialize_streams(col, codes, N, n)
+            idx.columns.append(ci)
+        idx._row_perm = row_perm
+        idx._col_perm = perm_cols
+        return idx
+
+    # -- stats -------------------------------------------------------------
+
+    def size_words(self) -> int:
+        return int(sum(int(c.sizes.sum()) for c in self.columns))
+
+    def per_column_words(self) -> list:
+        return [int(c.sizes.sum()) for c in self.columns]
+
+    # -- queries -----------------------------------------------------------
+
+    def equality_query(self, col_idx: int, value: int):
+        """Rows where column == value: AND of the value's k bitmaps.
+
+        Returns (row_ids, words_scanned).  col_idx refers to the *reordered*
+        column position (use .original_column(col_idx) for the mapping).
+        """
+        ci = self.columns[col_idx]
+        assert ci.streams is not None, "index built with materialize=False"
+        streams = [ci.streams[b] for b in ci.codes[value]]
+        streams = sorted(streams, key=len)
+        if len(streams) == 1:
+            result, scanned = streams[0], len(streams[0])
+        else:
+            result, scanned = ewah.logical_many(streams, "and")
+        bits = ewah.unpack_bits(ewah.decompress(result), self.n_rows)
+        return np.flatnonzero(bits), scanned
+
+    def original_column(self, reordered_idx: int) -> int:
+        return int(self._col_perm[reordered_idx])
+
+
+def _materialize_streams(col, codes, N, n_rows):
+    """Per-bitmap compressed streams in O(n*k + sum of stream sizes)."""
+    order = np.argsort(col, kind="stable")
+    sorted_vals = col[order]
+    # row positions per value, grouped
+    boundaries = np.flatnonzero(np.diff(sorted_vals)) + 1
+    groups = np.split(order, boundaries)
+    vals = sorted_vals[np.concatenate(([0], boundaries))] if len(col) else []
+    pos_per_value = {int(v): g for v, g in zip(vals, groups)}
+    per_bitmap_positions = [[] for _ in range(N)]
+    for v, pos in pos_per_value.items():
+        for b in codes[v]:
+            per_bitmap_positions[int(b)].append(pos)
+    streams = []
+    for plist in per_bitmap_positions:
+        if plist:
+            pos = np.sort(np.concatenate(plist))
+            words = ewah.positions_to_words(pos, n_rows)
+        else:
+            words = np.zeros((n_rows + 31) // 32, dtype=np.uint32)
+        streams.append(ewah.compress(words))
+    return streams
+
+
+def index_size_report(
+    table_cols, k=1, row_order="lex", code_order="gray",
+    value_policy=None, column_order="heuristic",
+) -> dict:
+    """Size-only construction (no bitmap materialization)."""
+    idx = BitmapIndex.build(
+        table_cols, k=k, row_order=row_order, code_order=code_order,
+        value_policy=value_policy, column_order=column_order, materialize=False,
+    )
+    return {
+        "total_words": idx.size_words(),
+        "per_column_words": idx.per_column_words(),
+        "column_order": [int(i) for i in idx._col_perm],
+        "k_effective": [c.k for c in idx.columns],
+        "bitmaps": [c.N for c in idx.columns],
+    }

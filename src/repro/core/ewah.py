@@ -1,0 +1,290 @@
+"""EWAH (Enhanced Word-Aligned Hybrid) bitmap compression — numpy reference.
+
+Format (paper Fig. 1, 32-bit words):
+  * verbatim ("dirty") words: 32 literal bitmap bits;
+  * marker words: bit 31 = clean type (0 -> 0x00000000 runs, 1 -> 0xFFFFFFFF
+    runs), bits 30..15 = number of clean words (16 bits), bits 14..0 = number
+    of verbatim words that follow the marker (15 bits).
+  A compressed stream always begins with a marker word.
+
+This module is the *oracle*: simple, obviously-correct numpy/python code that
+the JAX implementation (``ewah_jax.py``) and the Pallas kernels are tested
+against.  It is also used directly by the paper-table benchmarks, where the
+numbers of interest are compressed sizes, not device throughput.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+WORD_BITS = 32
+FULL = np.uint32(0xFFFFFFFF)
+MAX_CLEAN = (1 << 16) - 1  # per-marker clean-run capacity
+MAX_DIRTY = (1 << 15) - 1  # per-marker verbatim-count capacity
+
+
+def make_marker(clean_type: int, n_clean: int, n_dirty: int) -> int:
+    assert 0 <= n_clean <= MAX_CLEAN and 0 <= n_dirty <= MAX_DIRTY
+    return (int(clean_type) << 31) | (int(n_clean) << 15) | int(n_dirty)
+
+
+def unpack_marker(word: int):
+    word = int(word)
+    return (word >> 31) & 1, (word >> 15) & 0xFFFF, word & 0x7FFF
+
+
+def _emit_group(out: list, ctype: int, n_clean: int, dirty: np.ndarray) -> None:
+    """Append markers + verbatim words for one (clean-run, dirty-run) group."""
+    n_dirty = len(dirty)
+    # clean overflow markers (no dirty words attached)
+    while n_clean > MAX_CLEAN:
+        out.append(make_marker(ctype, MAX_CLEAN, 0))
+        n_clean -= MAX_CLEAN
+    # first dirty chunk rides on the last clean marker
+    chunk = min(n_dirty, MAX_DIRTY)
+    out.append(make_marker(ctype, n_clean, chunk))
+    out.extend(int(w) for w in dirty[:chunk])
+    done = chunk
+    while done < n_dirty:
+        chunk = min(n_dirty - done, MAX_DIRTY)
+        out.append(make_marker(0, 0, chunk))
+        out.extend(int(w) for w in dirty[done : done + chunk])
+        done += chunk
+
+
+def compress(words: np.ndarray) -> np.ndarray:
+    """Compress an array of uint32 bitmap words into an EWAH stream."""
+    words = np.asarray(words, dtype=np.uint32)
+    n = len(words)
+    out: list[int] = []
+    i = 0
+    while i < n:
+        ctype, n_clean = 0, 0
+        if words[i] == 0 or words[i] == FULL:
+            ctype = 1 if words[i] == FULL else 0
+            pat = FULL if ctype else np.uint32(0)
+            j = i
+            while j < n and words[j] == pat:
+                j += 1
+            n_clean = j - i
+            i = j
+        j = i
+        while j < n and words[j] != 0 and words[j] != FULL:
+            j += 1
+        _emit_group(out, ctype, n_clean, words[i:j])
+        i = j
+    return np.asarray(out, dtype=np.uint32)
+
+
+def decompress(stream: np.ndarray, n_words: int | None = None) -> np.ndarray:
+    """Expand an EWAH stream back into uint32 bitmap words."""
+    stream = np.asarray(stream, dtype=np.uint32)
+    out: list[int] = []
+    i = 0
+    while i < len(stream):
+        ctype, n_clean, n_dirty = unpack_marker(stream[i])
+        i += 1
+        out.extend([0xFFFFFFFF if ctype else 0] * n_clean)
+        out.extend(int(w) for w in stream[i : i + n_dirty])
+        i += n_dirty
+    arr = np.asarray(out, dtype=np.uint32)
+    if n_words is not None:
+        assert len(arr) == n_words, (len(arr), n_words)
+    return arr
+
+
+def compressed_size(words: np.ndarray) -> int:
+    return len(compress(words))
+
+
+# ---------------------------------------------------------------------------
+# Streaming logical operations (compressed domain, O(|A| + |B|)).
+# ---------------------------------------------------------------------------
+
+
+class _Cursor:
+    """Iterates a compressed stream as (clean_rem, ctype, dirty_rem) runs."""
+
+    __slots__ = ("s", "i", "clean_rem", "ctype", "dirty_rem", "scanned")
+
+    def __init__(self, stream: np.ndarray):
+        self.s = np.asarray(stream, dtype=np.uint32)
+        self.i = 0
+        self.clean_rem = 0
+        self.ctype = 0
+        self.dirty_rem = 0
+        self.scanned = 0
+        self._load()
+
+    def _load(self) -> None:
+        while (
+            self.clean_rem == 0
+            and self.dirty_rem == 0
+            and self.i < len(self.s)
+        ):
+            self.ctype, self.clean_rem, self.dirty_rem = unpack_marker(self.s[self.i])
+            self.i += 1
+            self.scanned += 1
+
+    def exhausted(self) -> bool:
+        return self.clean_rem == 0 and self.dirty_rem == 0 and self.i >= len(self.s)
+
+    def take_clean(self, n: int) -> None:
+        self.clean_rem -= n
+        self._load()
+
+    def take_dirty(self) -> int:
+        w = int(self.s[self.i])
+        self.i += 1
+        self.scanned += 1
+        self.dirty_rem -= 1
+        self._load()
+        return w
+
+    def skip_dirty(self, n: int) -> None:
+        self.i += n
+        self.scanned += n
+        self.dirty_rem -= n
+        self._load()
+
+
+class _Appender:
+    """Re-compresses a stream of words/runs fed to it."""
+
+    def __init__(self):
+        self.out: list[int] = []
+        self.ctype = 0
+        self.n_clean = 0
+        self.dirty: list[int] = []
+
+    def _flush(self) -> None:
+        if self.n_clean or self.dirty:
+            _emit_group(self.out, self.ctype, self.n_clean, np.asarray(self.dirty, dtype=np.uint32))
+            self.ctype, self.n_clean, self.dirty = 0, 0, []
+
+    def add_clean(self, ctype: int, n: int) -> None:
+        if n == 0:
+            return
+        if self.dirty or (self.n_clean and self.ctype != ctype):
+            self._flush()
+        self.ctype = ctype
+        self.n_clean += n
+
+    def add_word(self, w: int) -> None:
+        if w == 0:
+            self.add_clean(0, 1)
+        elif w == 0xFFFFFFFF:
+            self.add_clean(1, 1)
+        else:
+            self.dirty.append(w)
+
+    def finish(self) -> np.ndarray:
+        self._flush()
+        if not self.out:
+            self.out.append(make_marker(0, 0, 0))
+        return np.asarray(self.out, dtype=np.uint32)
+
+
+_OPS = {
+    "and": lambda a, b: a & b,
+    "or": lambda a, b: a | b,
+    "xor": lambda a, b: a ^ b,
+}
+# (op, clean_type) -> clean run dominates (result is clean of known type)
+_DOMINATES = {("and", 0): 0, ("or", 1): 1}
+
+
+def logical_op(a: np.ndarray, b: np.ndarray, op: str = "and"):
+    """Streaming merge of two EWAH streams; returns (stream, words_scanned).
+
+    Never decompresses: runs are consumed run-at-a-time so the work is
+    O(|a| + |b|) in *compressed* words (the paper's Section 3 claim).
+    """
+    fn = _OPS[op]
+    ca, cb = _Cursor(a), _Cursor(b)
+    res = _Appender()
+    while not ca.exhausted() and not cb.exhausted():
+        if ca.clean_rem and cb.clean_rem:
+            n = min(ca.clean_rem, cb.clean_rem)
+            ta = fn(ca.ctype, cb.ctype) & 1
+            res.add_clean(ta, n)
+            ca.take_clean(n)
+            cb.take_clean(n)
+        elif ca.clean_rem or cb.clean_rem:
+            clean, other = (ca, cb) if ca.clean_rem else (cb, ca)
+            n = min(clean.clean_rem, other.dirty_rem)
+            dom = _DOMINATES.get((op, clean.ctype))
+            if dom is not None:
+                res.add_clean(dom, n)
+                other.skip_dirty(n)
+            else:
+                pat = 0xFFFFFFFF if clean.ctype else 0
+                for _ in range(n):
+                    res.add_word(fn(other.take_dirty(), pat) & 0xFFFFFFFF)
+            clean.take_clean(n)
+        else:  # both dirty
+            n = min(ca.dirty_rem, cb.dirty_rem)
+            for _ in range(n):
+                res.add_word(fn(ca.take_dirty(), cb.take_dirty()) & 0xFFFFFFFF)
+    # tail: the paper's bitmaps all have equal (uncompressed) length; if one
+    # stream ends early the remainder ops against implicit zeros.
+    for tail in (ca, cb):
+        while not tail.exhausted():
+            if tail.clean_rem:
+                n = tail.clean_rem
+                t = fn(tail.ctype, 0) & 1
+                res.add_clean(t, n)
+                tail.take_clean(n)
+            else:
+                w = tail.take_dirty()
+                res.add_word(fn(w, 0) & 0xFFFFFFFF)
+    return res.finish(), ca.scanned + cb.scanned
+
+
+def logical_many(streams, op: str = "and"):
+    """Fold ``op`` over many compressed bitmaps; returns (stream, scanned)."""
+    assert streams
+    acc = streams[0]
+    total = 0
+    for s in streams[1:]:
+        acc, scanned = logical_op(acc, s, op)
+        total += scanned
+    return acc, total
+
+
+# ---------------------------------------------------------------------------
+# Bit/word helpers shared by tests and benchmarks.
+# ---------------------------------------------------------------------------
+
+
+def pack_bits(bits: np.ndarray) -> np.ndarray:
+    """Pack a boolean vector (len multiple-of-32 padded) into uint32 words.
+
+    Bit j of word i corresponds to row 32*i + j (little-endian within word).
+    """
+    bits = np.asarray(bits, dtype=bool)
+    n = len(bits)
+    n_words = (n + WORD_BITS - 1) // WORD_BITS
+    padded = np.zeros(n_words * WORD_BITS, dtype=bool)
+    padded[:n] = bits
+    m = padded.reshape(n_words, WORD_BITS).astype(np.uint32)
+    shifts = np.arange(WORD_BITS, dtype=np.uint32)
+    return (m << shifts).sum(axis=1, dtype=np.uint32)
+
+
+def unpack_bits(words: np.ndarray, n: int | None = None) -> np.ndarray:
+    words = np.asarray(words, dtype=np.uint32)
+    shifts = np.arange(WORD_BITS, dtype=np.uint32)
+    bits = ((words[:, None] >> shifts) & 1).astype(bool).reshape(-1)
+    return bits if n is None else bits[:n]
+
+
+def positions_to_words(positions: np.ndarray, n_rows: int) -> np.ndarray:
+    """Sorted 1-bit row positions -> packed uint32 words (sparse friendly)."""
+    n_words = (n_rows + WORD_BITS - 1) // WORD_BITS
+    words = np.zeros(n_words, dtype=np.uint32)
+    positions = np.asarray(positions, dtype=np.int64)
+    np.bitwise_or.at(
+        words, positions // WORD_BITS, (np.uint32(1) << (positions % WORD_BITS).astype(np.uint32))
+    )
+    return words

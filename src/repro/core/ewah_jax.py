@@ -1,0 +1,160 @@
+"""In-graph (jit-able) EWAH: vectorized compress / decompress / size.
+
+TPU adaptation (DESIGN.md §3): the CPU codec is a sequential append loop;
+here compression is re-cast as classify -> run-labeling -> exclusive-scan ->
+scatter, which is O(n) work at O(log n) depth and maps onto VPU-friendly
+primitives.  The *size-only* path (what the sorting heuristics optimize) is a
+pure reduction.
+
+Restrictions of the vectorized path (asserted): one marker per (clean,dirty)
+group, i.e. clean runs < 2^16 and dirty runs < 2^15 words — always true for
+the in-graph uses (MoE dispatch bitmaps over <= 32767-word streams).  The
+numpy oracle in ``ewah.py`` has no such restriction.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .ewah import FULL, MAX_CLEAN, MAX_DIRTY  # noqa: F401  (shared constants)
+
+_FULL = jnp.uint32(0xFFFFFFFF)
+
+
+def classify(words: jax.Array) -> jax.Array:
+    """0 = clean-0, 1 = clean-1, 2 = dirty."""
+    return jnp.where(words == 0, 0, jnp.where(words == _FULL, 1, 2)).astype(jnp.int32)
+
+
+def _run_ids(kind: jax.Array):
+    start = jnp.concatenate([jnp.ones(1, bool), kind[1:] != kind[:-1]])
+    run_id = jnp.cumsum(start) - 1
+    return start, run_id
+
+
+@partial(jax.jit, static_argnames=("capacity",))
+def compress(words: jax.Array, capacity: int):
+    """EWAH-compress a uint32 word vector. Returns (stream[capacity], length).
+
+    Requires n_words <= MAX_DIRTY (asserted statically) so that every
+    (clean run, dirty run) group fits a single marker.
+    """
+    n = words.shape[0]
+    assert n <= MAX_DIRTY, f"vectorized path supports <= {MAX_DIRTY} words"
+    kind = classify(words)
+    start, run_id = _run_ids(kind)
+    n_runs = run_id[-1] + 1
+    idx = jnp.arange(n)
+
+    run_kind = jax.ops.segment_max(kind, run_id, num_segments=n)
+    run_len = jax.ops.segment_sum(jnp.ones(n, jnp.int32), run_id, num_segments=n)
+    run_valid = jnp.arange(n) < n_runs
+
+    # groups: every clean run opens a group; a leading dirty run opens one too
+    run_is_clean = run_kind < 2
+    grp_start = run_is_clean | (jnp.arange(n) == 0)
+    grp_of_run = jnp.cumsum(grp_start & run_valid) - 1
+    n_groups = jnp.maximum(grp_of_run[jnp.maximum(n_runs - 1, 0)] + 1, 1)
+
+    grp_nclean = jax.ops.segment_sum(
+        jnp.where(run_is_clean & run_valid, run_len, 0), grp_of_run, num_segments=n)
+    grp_ndirty = jax.ops.segment_sum(
+        jnp.where(~run_is_clean & run_valid, run_len, 0), grp_of_run, num_segments=n)
+    grp_ctype = jax.ops.segment_max(
+        jnp.where(run_is_clean & run_valid, run_kind, 0), grp_of_run, num_segments=n)
+
+    grp_size = jnp.where(jnp.arange(n) < n_groups, 1 + grp_ndirty, 0)
+    grp_off = jnp.cumsum(grp_size) - grp_size  # exclusive scan
+    total = grp_off[jnp.maximum(n_groups - 1, 0)] + grp_size[jnp.maximum(n_groups - 1, 0)]
+
+    # markers
+    marker = (
+        (grp_ctype.astype(jnp.uint32) << 31)
+        | (grp_nclean.astype(jnp.uint32) << 15)
+        | grp_ndirty.astype(jnp.uint32)
+    )
+    out = jnp.zeros(capacity + 1, jnp.uint32)
+    mpos = jnp.where(jnp.arange(n) < n_groups, grp_off, capacity)
+    out = out.at[mpos].set(marker, mode="drop")
+
+    # dirty words: word i (dirty) goes to grp_off[g] + 1 + rank-within-dirty-run
+    word_run = run_id
+    word_grp = grp_of_run[word_run]
+    run_start_idx = jax.ops.segment_min(idx, run_id, num_segments=n)
+    t = idx - run_start_idx[word_run]
+    is_dirty_w = kind == 2
+    dpos = jnp.where(is_dirty_w, grp_off[word_grp] + 1 + t, capacity)
+    out = out.at[dpos].set(words, mode="drop")
+    return out[:capacity], total
+
+
+@partial(jax.jit, static_argnames=("capacity",))
+def compressed_size(words: jax.Array, capacity: int = 0):
+    """Compressed size in words (markers + dirty), no materialization.
+
+    Exact for streams within the single-marker-per-group restriction.
+    """
+    n = words.shape[0]
+    kind = classify(words)
+    start, run_id = _run_ids(kind)
+    n_runs = run_id[-1] + 1
+    run_kind = jax.ops.segment_max(kind, run_id, num_segments=n)
+    run_valid = jnp.arange(n) < n_runs
+    run_is_clean = run_kind < 2
+    n_groups = jnp.maximum(
+        jnp.sum((run_is_clean & run_valid).astype(jnp.int32))
+        + jnp.where(run_kind[0] == 2, 1, 0), 1)
+    n_dirty = jnp.sum((kind == 2).astype(jnp.int32))
+    return n_groups + n_dirty
+
+
+@partial(jax.jit, static_argnames=("n_words",))
+def decompress(stream: jax.Array, length, n_words: int):
+    """Expand an EWAH stream into n_words uint32 words (scan-based)."""
+    C = stream.shape[0]
+
+    def step(carry, w):
+        i, dirty_rem, out_pos = carry
+        active = i < length
+        is_dirty = dirty_rem > 0
+        ctype = (w >> 31) & 1
+        nclean = ((w >> 15) & 0xFFFF).astype(jnp.int32)
+        ndirty = (w & 0x7FFF).astype(jnp.int32)
+        # dirty word event
+        dw_pos = jnp.where(active & is_dirty, out_pos, n_words)
+        # marker event: clean run [out_pos, out_pos + nclean)
+        mk = active & ~is_dirty
+        c_start = jnp.where(mk & (ctype == 1), out_pos, n_words)
+        c_len = jnp.where(mk, nclean, 0)
+        new_out = out_pos + jnp.where(is_dirty, 1, c_len)
+        new_dirty = jnp.where(is_dirty, dirty_rem - 1, jnp.where(mk, ndirty, 0))
+        return (i + 1, new_dirty, new_out), (dw_pos, w, c_start, c_len)
+
+    (_, _, final_pos), (dpos, dval, c1s, clen) = jax.lax.scan(
+        step, (jnp.int32(0), jnp.int32(0), jnp.int32(0)), stream)
+    out = jnp.zeros(n_words + 1, jnp.uint32)
+    out = out.at[dpos].set(dval, mode="drop")
+    # clean-1 region fill via +1/-1 events and cumsum
+    ev = jnp.zeros(n_words + 1, jnp.int32)
+    ev = ev.at[c1s].add(1, mode="drop")
+    c1e = jnp.where(c1s < n_words, c1s + clen, n_words + 1)
+    ev = ev.at[c1e].add(-1, mode="drop")
+    infull = jnp.cumsum(ev[:-1]) > 0
+    out = jnp.where(infull, _FULL, out[:-1])
+    return out
+
+
+def logical_op(stream_a, len_a, stream_b, len_b, n_words: int, op: str, capacity: int):
+    """Compressed op via decompress->op->recompress (vectorized path).
+
+    The O(|A|+|B|) streaming merge lives in the numpy codec and the Pallas
+    wordops kernel covers the word-level op; in-graph we trade compressed-
+    domain skipping for 128-lane parallelism (DESIGN.md §3).
+    """
+    a = decompress(stream_a, len_a, n_words)
+    b = decompress(stream_b, len_b, n_words)
+    fn = {"and": jnp.bitwise_and, "or": jnp.bitwise_or, "xor": jnp.bitwise_xor}[op]
+    return compress(fn(a, b), capacity)

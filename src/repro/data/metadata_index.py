@@ -1,0 +1,62 @@
+"""EWAH bitmap index over training-data metadata — the paper's original use
+case, hosted in the training data plane.
+
+Every training sequence carries categorical metadata (source, domain,
+quality bin, length bin).  A data-mixing / curation query like
+``domain = 3 AND quality_bin >= 8`` is exactly the paper's equality-query
+workload; the index is built with histogram-aware column ordering and
+Gray-Frequency row sorting (the paper's best heuristics).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ..core import BitmapIndex, ewah
+
+
+class MetadataIndex:
+    COLS = ("source", "domain", "quality_bin", "length_bin")
+
+    def __init__(self, k: int = 1, row_order: str = "grayfreq"):
+        self.k = k
+        self.row_order = row_order
+        self._rows = {c: [] for c in self.COLS}
+        self._index: BitmapIndex | None = None
+
+    def add_batch(self, meta: dict):
+        for c in self.COLS:
+            self._rows[c].append(np.asarray(meta[c]))
+        self._index = None
+
+    def build(self):
+        cols = [np.concatenate(self._rows[c]) for c in self.COLS]
+        self._index = BitmapIndex.build(
+            cols, k=self.k, row_order=self.row_order,
+            column_order="heuristic")
+        return self._index
+
+    @property
+    def index(self) -> BitmapIndex:
+        if self._index is None:
+            self.build()
+        return self._index
+
+    def query(self, **conditions):
+        """Equality query: rows matching all column=value conditions.
+        Returns (row_ids, compressed_words_scanned)."""
+        idx = self.index
+        col_pos = {self.COLS[idx.original_column(i)]: i
+                   for i in range(len(self.COLS))}
+        streams = []
+        scanned = 0
+        result = None
+        for col, value in conditions.items():
+            rows, sc = idx.equality_query(col_pos[col], int(value))
+            scanned += sc
+            rows = set(rows.tolist())
+            result = rows if result is None else (result & rows)
+        return np.asarray(sorted(result or [])), scanned
+
+    def size_words(self) -> int:
+        return self.index.size_words()

@@ -1,0 +1,42 @@
+"""Pallas TPU kernel: pack boolean bitmap columns into 32-bit words.
+
+The paper's Algorithm 1 "wordizes" 32 table rows at a time on a CPU; the
+TPU-native form packs a (rows x bitmaps) boolean tile resident in VMEM into
+uint32 words with VPU shift/or reductions — 128 bitmaps per lane-dim tile,
+256 rows (-> 8 output sublanes) per row-dim tile, so in/out tiles are the
+native (8,128)x4B register tiling.
+
+  in : bits  (R, C) int8/bool   R % 256 == 0, C % 128 == 0 (ops.py pads)
+  out: words (R/32, C) uint32   bit j of word w = bits[32*w + j]
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROW_TILE = 256  # 8 words of 32 rows
+LANE_TILE = 128
+
+
+def _kernel(bits_ref, words_ref):
+    bits = bits_ref[...].astype(jnp.uint32)  # (ROW_TILE, LANE_TILE)
+    b = bits.reshape(ROW_TILE // 32, 32, LANE_TILE)
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (1, 32, 1), 1)
+    words_ref[...] = (b << shifts).sum(axis=1, dtype=jnp.uint32)
+
+
+def bitpack_kernel(bits: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """bits: (R, C) -> (R//32, C) uint32.  Shapes must be tile-aligned."""
+    R, C = bits.shape
+    assert R % ROW_TILE == 0 and C % LANE_TILE == 0, (R, C)
+    grid = (R // ROW_TILE, C // LANE_TILE)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((ROW_TILE, LANE_TILE), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((ROW_TILE // 32, LANE_TILE), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((R // 32, C), jnp.uint32),
+        interpret=interpret,
+    )(bits)

@@ -1,0 +1,41 @@
+"""Pallas TPU kernel: binary <-> Gray-code conversion for sort keys.
+
+Gray-Lex / Gray-Frequency orderings need Gray ranks of attribute values as
+sort keys (DESIGN.md §3).  to-Gray is one xor-shift; from-Gray is the
+log-cascade prefix xor — both pure VPU element-wise chains on (8,128) tiles.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROW_TILE = 64
+LANE_TILE = 128
+
+
+def _kernel(x_ref, o_ref, *, inverse: bool):
+    x = x_ref[...]
+    if not inverse:
+        o_ref[...] = x ^ (x >> jnp.uint32(1))
+    else:
+        for s in (1, 2, 4, 8, 16):
+            x = x ^ (x >> jnp.uint32(s))
+        o_ref[...] = x
+
+
+def gray_kernel(x: jax.Array, inverse: bool = False, *, interpret: bool = True):
+    N, C = x.shape
+    assert N % ROW_TILE == 0 and C % LANE_TILE == 0
+    spec = pl.BlockSpec((ROW_TILE, LANE_TILE), lambda i, j: (i, j))
+    return pl.pallas_call(
+        partial(_kernel, inverse=inverse),
+        grid=(N // ROW_TILE, C // LANE_TILE),
+        in_specs=[spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((N, C), jnp.uint32),
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,52 @@
+"""Pallas TPU kernel: histogram via one-hot matmul (MXU-native).
+
+Scatter-add histograms serialize on TPU; the systolic-array-native form is
+``ones(1,T) @ onehot(T,V)`` — the paper's attribute-value histograms
+(the 'histogram' in histogram-aware) computed at MXU rate.
+
+  in : vals (T,) int32 in [0, V)
+  out: counts (V,) float32   (f32 accumulation; exact for counts < 2^24)
+
+Grid: (V/128, T/512); the token dim is the reduction dim, accumulated
+across grid steps into the same output block (revisiting-output pattern).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TOK_TILE = 512
+VAL_TILE = 128
+
+
+def _kernel(vals_ref, out_ref):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    v0 = pl.program_id(0) * VAL_TILE
+    vals = vals_ref[...]  # (1, TOK_TILE)
+    vcol = jax.lax.broadcasted_iota(jnp.int32, (TOK_TILE, VAL_TILE), 1) + v0
+    onehot = (vals.reshape(TOK_TILE, 1) == vcol).astype(jnp.float32)
+    ones = jnp.ones((1, TOK_TILE), jnp.float32)
+    out_ref[...] += jnp.dot(ones, onehot,
+                            preferred_element_type=jnp.float32)
+
+
+def histmm_kernel(vals: jax.Array, n_values: int, *, interpret: bool = True):
+    (T,) = vals.shape
+    assert T % TOK_TILE == 0 and n_values % VAL_TILE == 0
+    vals2 = vals.reshape(1, T)
+    out = pl.pallas_call(
+        _kernel,
+        grid=(n_values // VAL_TILE, T // TOK_TILE),
+        in_specs=[pl.BlockSpec((1, TOK_TILE), lambda v, t: (0, t))],
+        out_specs=pl.BlockSpec((1, VAL_TILE), lambda v, t: (0, v)),
+        out_shape=jax.ShapeDtypeStruct((1, n_values), jnp.float32),
+        interpret=interpret,
+    )(vals2)
+    return out[0]

@@ -1,0 +1,114 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Handle padding to tile boundaries, choose interpret mode automatically
+(True off-TPU so the kernels validate on CPU), and expose a ``use_kernel``
+switch falling back to the jnp reference implementation.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .bitpack import LANE_TILE, ROW_TILE, bitpack_kernel
+from .gray import gray_kernel
+from .histmm import TOK_TILE, VAL_TILE, histmm_kernel
+from .moe_route import moe_route_kernel
+from .wordops import wordops_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x, mult, axis, value=0):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@partial(jax.jit, static_argnames=("use_kernel", "interpret"))
+def bitpack(bits, use_kernel=True, interpret=None):
+    """(R, C) bool -> (ceil(R/32), C) uint32."""
+    R, C = bits.shape
+    if not use_kernel:
+        return ref.bitpack(_pad_to(bits, 32, 0))[: -(-R // 32)]
+    interpret = not _on_tpu() if interpret is None else interpret
+    x = _pad_to(_pad_to(bits, ROW_TILE, 0), LANE_TILE, 1)
+    out = bitpack_kernel(x, interpret=interpret)
+    return out[: -(-R // 32), :C]
+
+
+@partial(jax.jit, static_argnames=("op", "use_kernel", "interpret"))
+def wordops(a, b, op="and", use_kernel=True, interpret=None):
+    """1-D compressed-word vectors -> (result words, classification)."""
+    n = a.shape[0]
+    if not use_kernel:
+        return ref.wordops(a, b, op)
+    interpret = not _on_tpu() if interpret is None else interpret
+    lanes = 128
+    rows = -(-n // lanes)
+    from .wordops import ROW_TILE as RT
+    rows_p = -(-rows // RT) * RT
+    a2 = jnp.zeros((rows_p * lanes,), jnp.uint32).at[:n].set(a).reshape(rows_p, lanes)
+    b2 = jnp.zeros((rows_p * lanes,), jnp.uint32).at[:n].set(b).reshape(rows_p, lanes)
+    r, cls = wordops_kernel(a2, b2, op, interpret=interpret)
+    return r.reshape(-1)[:n], cls.reshape(-1)[:n]
+
+
+@partial(jax.jit, static_argnames=("inverse", "use_kernel", "interpret"))
+def gray(x, inverse=False, use_kernel=True, interpret=None):
+    """uint32 vector -> Gray code (or inverse)."""
+    n = x.shape[0]
+    if not use_kernel:
+        return ref.gray(x, inverse)
+    interpret = not _on_tpu() if interpret is None else interpret
+    lanes = 128
+    from .gray import ROW_TILE as RT
+    rows_p = -(-(-(-n // lanes)) // RT) * RT
+    x2 = jnp.zeros((rows_p * lanes,), jnp.uint32).at[:n].set(x).reshape(rows_p, lanes)
+    out = gray_kernel(x2, inverse, interpret=interpret)
+    return out.reshape(-1)[:n]
+
+
+@partial(jax.jit, static_argnames=("n_values", "use_kernel", "interpret"))
+def histogram(vals, n_values, use_kernel=True, interpret=None):
+    """int32 values -> (n_values,) float32 counts."""
+    if not use_kernel:
+        return ref.histmm(vals, n_values)
+    interpret = not _on_tpu() if interpret is None else interpret
+    n = vals.shape[0]
+    v_pad = -(-n_values // VAL_TILE) * VAL_TILE
+    # pad tokens with an out-of-range value -> lands in a padded count slot
+    pad_val = n_values if v_pad > n_values else None
+    t_pad = (-n) % TOK_TILE
+    if t_pad and pad_val is None:
+        v_pad += VAL_TILE
+        pad_val = n_values
+    x = jnp.concatenate([vals, jnp.full((t_pad,), pad_val or 0, vals.dtype)]) \
+        if t_pad else vals
+    out = histmm_kernel(x, v_pad, interpret=interpret)
+    return out[:n_values]
+
+
+@partial(jax.jit, static_argnames=("n_experts", "use_kernel", "interpret"))
+def moe_route_bitmap(eids, n_experts, use_kernel=True, interpret=None):
+    """(T, k) top-k expert ids -> (ceil(T/32), E) uint32 dispatch words."""
+    T, k = eids.shape
+    if not use_kernel:
+        return ref.moe_route(eids, n_experts)
+    interpret = not _on_tpu() if interpret is None else interpret
+    from .moe_route import LANE_TILE as LT, ROW_TILE as RT
+    e_pad = -(-n_experts // LT) * LT
+    t_pad = (-T) % RT
+    x = jnp.concatenate(
+        [eids, jnp.full((t_pad, k), -1, eids.dtype)]) if t_pad else eids
+    out = moe_route_kernel(x, e_pad, interpret=interpret)
+    return out[: -(-T // 32), :n_experts]

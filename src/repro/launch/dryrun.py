@@ -1,0 +1,320 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: sharding
+mismatches, compile-time OOM and unsupported collectives all fail here.
+Emits per-cell JSON (memory analysis, cost analysis, collective bytes
+parsed from the post-SPMD HLO) consumed by benchmarks/roofline.py.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import list_archs
+from repro.dist.sharding import (batch_shardings, cache_shardings,
+                                 opt_shardings, param_shardings, replicated)
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shapes import SHAPES, input_specs, runnable
+from repro.models import transformer
+from repro.models.common import ShardingCtx
+from repro.optim import OptConfig, init_opt_state
+from repro.train import prefill_step, serve_step, train_step
+
+SDS = jax.ShapeDtypeStruct
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|f8e4m3|f8e5m2|s64|u64|s32|u32|s16|u16|s8|u8|pred|c64|c128)\[([0-9,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _parse_computations(hlo_text: str):
+    """Split post-SPMD HLO text into {computation_name: [lines]}."""
+    comps = {}
+    current = None
+    for line in hlo_text.splitlines():
+        if line and not line[0].isspace() and ("{" in line or "->" in line):
+            cm = re.match(r"(?:ENTRY\s+)?%?([\w\.\-]+)", line)
+            if cm:
+                current = cm.group(1)
+                comps[current] = []
+        elif current is not None:
+            comps[current].append(line)
+    return comps
+
+
+def _effective_multipliers(comps: dict) -> dict:
+    """comp name -> product of trip counts of all enclosing while loops.
+
+    lax.scan lowers to while(condition=%c, body=%b); the condition compares
+    the induction variable to a constant trip count.  Multipliers compose
+    across nesting (e.g. microbatch scan x layer scan)."""
+    parent = {}
+    trip_of_body = {}
+    for cname, lines in comps.items():
+        for line in lines:
+            m = re.search(r"while\(.*?condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)", line)
+            if not m:
+                m2 = re.search(r"body=%?([\w\.\-]+),\s*condition=%?([\w\.\-]+)", line)
+                if m2:
+                    body, cond = m2.group(1), m2.group(2)
+                else:
+                    continue
+            else:
+                cond, body = m.group(1), m.group(2)
+            parent[body] = cname
+            n = None
+            for cl in comps.get(cond, []):
+                cc = re.search(r"compare\(.*\)", cl)
+                km = re.search(r"constant\((\d+)\)", cl)
+                if km:
+                    v = int(km.group(1))
+                    if 1 < v <= 65536:
+                        n = v
+            trip_of_body[body] = n or 1
+
+    mult = {}
+
+    def eff(c):
+        if c in mult:
+            return mult[c]
+        m = trip_of_body.get(c, 1)
+        p = parent.get(c)
+        mult[c] = m * (eff(p) if p else 1)
+        return mult[c]
+
+    for c in comps:
+        eff(c)
+    return mult
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Sum result-shape bytes of every collective op in post-SPMD HLO,
+    scaled by the product of enclosing while-loop trip counts (scan bodies
+    execute trip-count times but appear once in the HLO text)."""
+    counts = {c: 0 for c in _COLLECTIVES}
+    bytes_ = {c: 0 for c in _COLLECTIVES}
+    ops = {c: [] for c in _COLLECTIVES}
+    comps = _parse_computations(hlo_text)
+    mults = _effective_multipliers(comps)
+    for cname, lines in comps.items():
+        mult = mults.get(cname, 1)
+        for line in lines:
+            for c in _COLLECTIVES:
+                if re.search(rf"=\s+[^=]*\b{c}(?:-start)?\(", line):
+                    if f"{c}-done" in line:
+                        continue  # counted at -start
+                    lhs = line.split("=")[1] if "=" in line else line
+                    shape_part = lhs.split(c)[0]
+                    b = _shape_bytes(shape_part)
+                    counts[c] += mult
+                    bytes_[c] += b * mult
+                    ops[c].append({"bytes": b, "mult": mult,
+                                   "line": line.strip()[:160]})
+    return {"counts": counts, "bytes": bytes_,
+            "total_bytes": sum(bytes_.values()), "ops": ops}
+
+
+def build_step(cfg, kind, specs, mesh, microbatches: int = 1,
+               grad_zero: bool = False):
+    """Returns (jitted_fn, example_args, sharding-rule overrides)."""
+    if kind == "train":
+        opt_cfg = OptConfig()
+        p_sh = param_shardings(mesh, cfg)
+        o_sh = opt_shardings(mesh, cfg)
+        b_sh = batch_shardings(mesh, cfg, "train")
+        params_s = jax.eval_shape(
+            lambda k: transformer.init_params(k, cfg), SDS((2,), jnp.uint32))
+        opt_s = jax.eval_shape(init_opt_state, params_s)
+
+        fn = partial(train_step, cfg=cfg, opt_cfg=opt_cfg,
+                     microbatches=microbatches,
+                     grad_shardings=o_sh["m"] if grad_zero else None)
+        jitted = jax.jit(
+            fn, in_shardings=(p_sh, o_sh, b_sh),
+            out_shardings=(p_sh, o_sh, None),
+            donate_argnums=(0, 1))
+        return jitted, (params_s, opt_s, specs["batch"]), None
+
+    if kind == "prefill":
+        p_sh = param_shardings(mesh, cfg)
+        b_sh = batch_shardings(mesh, cfg, "prefill")
+        params_s = jax.eval_shape(
+            lambda k: transformer.init_params(k, cfg), SDS((2,), jnp.uint32))
+        fn = partial(prefill_step, cfg=cfg)
+        jitted = jax.jit(fn, in_shardings=(p_sh, b_sh), out_shardings=None)
+        return jitted, (params_s, specs["batch"]), None
+
+    # decode: small batches (long_500k has B=1) fall back to replication
+    B = specs["tokens"].shape[0]
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp = 1
+    for a in data_axes:
+        dp *= mesh.shape[a]
+    rules = {"batch": None} if B % dp else None
+    p_sh = param_shardings(mesh, cfg, rules=rules)
+    c_sh = cache_shardings(mesh, cfg, rules=rules)
+    tok_sh = jax.NamedSharding(
+        mesh, jax.sharding.PartitionSpec(data_axes if B % dp == 0 else None))
+    params_s = jax.eval_shape(
+        lambda k: transformer.init_params(k, cfg), SDS((2,), jnp.uint32))
+    fn = partial(serve_step, cfg=cfg)
+    jitted = jax.jit(
+        fn, in_shardings=(p_sh, tok_sh, c_sh, replicated(mesh)),
+        out_shardings=(tok_sh, c_sh), donate_argnums=(2,))
+    return jitted, (params_s, specs["tokens"], specs["cache"],
+                    specs["cache_len"]), rules
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, hlo_dir=None,
+             microbatches: int = 1, remat_policy: str | None = None,
+             moe_dispatch: str | None = None, grad_zero: bool = False) -> dict:
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cfg, kind, specs = input_specs(arch, shape_name)
+    from dataclasses import replace as _rp
+    if remat_policy:
+        cfg = _rp(cfg, remat_policy=remat_policy)
+    if moe_dispatch:
+        cfg = _rp(cfg, moe_dispatch=moe_dispatch)
+    ok, reason = runnable(cfg, SHAPES[shape_name])
+    rec = {
+        "arch": arch, "shape": shape_name, "kind": kind,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": mesh.size,
+        "microbatches": microbatches, "remat_policy": cfg.remat_policy,
+        "moe_dispatch": cfg.moe_dispatch, "grad_zero": grad_zero,
+    }
+    if not ok:
+        rec.update(status="skipped", reason=reason)
+        return rec
+    try:
+        jitted, args, rules = build_step(cfg, kind, specs, mesh, microbatches,
+                                         grad_zero)
+        with mesh, ShardingCtx(mesh, rules):
+            lowered = jitted.lower(*args)
+            t_lower = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time()
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            hlo = compiled.as_text()
+        coll = collective_stats(hlo)
+        coll_light = {k: v for k, v in coll.items() if k != "ops"}
+        rec.update(
+            status="ok",
+            lower_s=round(t_lower - t0, 2),
+            compile_s=round(t_compile - t_lower, 2),
+            memory={
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+            },
+            cost={k: cost.get(k) for k in
+                  ("flops", "bytes accessed", "transcendentals",
+                   "bytes accessed operand 0 {}", "utilization operand 0 {}")
+                  if k in cost} | {"flops": cost.get("flops"),
+                                   "bytes_accessed": cost.get("bytes accessed")},
+            collectives=coll_light,
+        )
+        if hlo_dir:
+            os.makedirs(hlo_dir, exist_ok=True)
+            fname = f"{arch}_{shape_name}_{rec['mesh']}.hlo.txt.gz"
+            import gzip
+            with gzip.open(os.path.join(hlo_dir, fname), "wt") as f:
+                f.write(hlo)
+            rec["hlo_file"] = fname
+    except Exception as e:  # noqa: BLE001 — report the failure in results
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--remat-policy", default=None, choices=[None, "dots", "full"])
+    ap.add_argument("--moe-dispatch", default=None, choices=[None, "gather", "scatter"])
+    ap.add_argument("--grad-zero", action="store_true")
+    args = ap.parse_args()
+
+    archs = list_archs() if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if (args.both_meshes or args.all) else [args.multi_pod]
+
+    os.makedirs(args.out, exist_ok=True)
+    results = []
+    for mp in meshes:
+        for arch in archs:
+            for shape in shapes:
+                rec = run_cell(arch, shape, mp,
+                               hlo_dir=os.path.join(args.out, "hlo")
+                               if args.save_hlo else None,
+                               microbatches=args.microbatches,
+                               remat_policy=args.remat_policy,
+                               moe_dispatch=args.moe_dispatch,
+                               grad_zero=args.grad_zero)
+                results.append(rec)
+                tag = f"{rec['mesh']} {arch} {shape}"
+                if rec["status"] == "ok":
+                    print(f"[ok]   {tag}  lower={rec['lower_s']}s "
+                          f"compile={rec['compile_s']}s "
+                          f"flops={rec['cost'].get('flops'):.3e} "
+                          f"coll={rec['collectives']['total_bytes']:.3e}B",
+                          flush=True)
+                elif rec["status"] == "skipped":
+                    print(f"[skip] {tag}  {rec['reason']}", flush=True)
+                else:
+                    print(f"[ERR]  {tag}  {rec['error']}", flush=True)
+                fname = f"{rec['mesh'].replace('x','_')}__{arch}__{shape}.json"
+                with open(os.path.join(args.out, fname), "w") as f:
+                    json.dump(rec, f, indent=1)
+    with open(os.path.join(args.out, "summary.json"), "w") as f:
+        json.dump(results, f, indent=1)
+    n_err = sum(r["status"] == "error" for r in results)
+    print(f"done: {len(results)} cells, {n_err} errors", flush=True)
+    sys.exit(1 if n_err else 0)
+
+
+if __name__ == "__main__":
+    main()

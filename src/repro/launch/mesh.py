@@ -1,0 +1,21 @@
+"""Mesh construction for the production topology (TPU v5e target).
+
+Importing this module never touches jax device state; meshes are built
+lazily inside functions.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh for CPU tests (requires the host-device count to allow it)."""
+    return jax.make_mesh((data, model), ("data", "model"))

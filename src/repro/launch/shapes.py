@@ -1,0 +1,80 @@
+"""Assigned input shapes (one set for all LM-family archs)."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import get_config
+from ..models import transformer
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+SDS = jax.ShapeDtypeStruct
+
+
+def runnable(cfg, shape: ShapeSpec) -> tuple[bool, str]:
+    """Whether this (arch, shape) cell runs (DESIGN.md §Arch-applicability)."""
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False, ("full-attention arch: 500k-token decode is quadratic-"
+                       "history; skipped per spec (see DESIGN.md)")
+    return True, ""
+
+
+def cell_config(cfg, shape: ShapeSpec):
+    """Shape-dependent config adjustments (documented adaptations)."""
+    if shape.name == "long_500k" and cfg.family == "hybrid":
+        # Zamba2 long-context: shared attention uses a sliding window
+        from dataclasses import replace
+        cfg = replace(cfg, sliding_window=4096)
+    return cfg
+
+
+def input_specs(arch: str, shape_name: str):
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    Returns (cfg, kind, specs_dict).  No device allocation happens here.
+    """
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    cfg = cell_config(cfg, shape)
+    B, S = shape.global_batch, shape.seq_len
+    n_patches = min(1024, S)  # frontend-stub block per sample
+
+    if shape.kind in ("train", "prefill"):
+        batch = {"inputs": SDS((B, S), jnp.int32),
+                 "labels": SDS((B, S), jnp.int32)}
+        if cfg.frontend != "none":
+            # precomputed patch/frame embeddings (stub modality frontend)
+            batch["patches"] = SDS((B, n_patches, cfg.d_model), jnp.bfloat16)
+        if cfg.family == "vlm":
+            batch["mrope_positions"] = SDS((3, B, S), jnp.int32)
+        if shape.kind == "prefill":
+            batch.pop("labels")
+        return cfg, shape.kind, {"batch": batch}
+
+    # decode: one new token against a seq_len KV cache
+    tokens = SDS((B, 1), jnp.int32)
+    cache = jax.eval_shape(
+        lambda: transformer.init_decode_cache(cfg, B, S))
+    return cfg, "decode", {
+        "tokens": tokens,
+        "cache": cache,
+        "cache_len": SDS((), jnp.int32),
+    }

@@ -1,0 +1,7 @@
+from . import attention, common, moe, ssm, transformer
+from .transformer import (cache_axes, decode_step, forward, init_decode_cache,
+                          init_params, n_params, params_axes)
+
+__all__ = ["attention", "common", "moe", "ssm", "transformer", "forward",
+           "decode_step", "init_params", "init_decode_cache", "params_axes",
+           "cache_axes", "n_params"]

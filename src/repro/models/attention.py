@@ -1,0 +1,197 @@
+"""GQA attention: blockwise (flash-style) training path + cached decode path.
+
+Sharding (DESIGN.md §6): q heads -> "model" axis, KV heads replicated across
+the model axis (GQA kv counts are small and rarely divisible by TP degree);
+decode KV caches are sequence-sharded across "model" and GSPMD turns the
+softmax/value reductions into the flash-decode collective pattern.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .common import apply_mrope, apply_rope, dense_init, lshard
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg, dtype):
+    d, hd = cfg.d_model, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, cfg.n_heads * hd), dtype=dtype),
+        "wk": dense_init(ks[1], (d, cfg.n_kv_heads * hd), dtype=dtype),
+        "wv": dense_init(ks[2], (d, cfg.n_kv_heads * hd), dtype=dtype),
+        "wo": dense_init(ks[3], (cfg.n_heads * hd, d), dtype=dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * hd,), dtype)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * hd,), dtype)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * hd,), dtype)
+    return p
+
+
+def attention_axes(cfg):
+    ax = {
+        "wq": ("embed", "heads"),
+        "wk": ("embed", "kv_heads"),
+        "wv": ("embed", "kv_heads"),
+        "wo": ("heads", "embed"),
+    }
+    if cfg.qkv_bias:
+        ax.update({"bq": ("heads",), "bk": ("kv_heads",), "bv": ("kv_heads",)})
+    return ax
+
+
+def _project_qkv(p, cfg, x, positions, mrope_positions=None):
+    b, s, _ = x.shape
+    hd = cfg.head_dim
+    q = x @ p["wq"] + (p.get("bq", 0.0))
+    k = x @ p["wk"] + (p.get("bk", 0.0))
+    v = x @ p["wv"] + (p.get("bv", 0.0))
+    q = q.reshape(b, s, cfg.n_heads, hd)
+    k = k.reshape(b, s, cfg.n_kv_heads, hd)
+    v = v.reshape(b, s, cfg.n_kv_heads, hd)
+    if mrope_positions is not None:
+        q = apply_mrope(q, mrope_positions, cfg.mrope_sections, cfg.rope_theta)
+        k = apply_mrope(k, mrope_positions, cfg.mrope_sections, cfg.rope_theta)
+    elif cfg.rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    q = lshard(q, "batch", "seq", "heads", "head_dim")
+    k = lshard(k, "batch", "seq", "kv_heads", "head_dim")
+    v = lshard(v, "batch", "seq", "kv_heads", "head_dim")
+    return q, k, v
+
+
+def _blockwise_attn(q, k, v, n_kv_heads, window, block_q=512, block_k=1024):
+    """Online-softmax attention over KV blocks (flash-style, pure jnp/lax).
+
+    q: (b, sq, h, hd)  k/v: (b, sk, kvh, hd).  Causal; optional sliding
+    window.  Memory O(sq * block_k) instead of O(sq * sk).
+    """
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    g = h // n_kv_heads
+    scale = hd ** -0.5
+    q = q.reshape(b, sq, n_kv_heads, g, hd) * scale
+
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    assert sq % block_q == 0 and sk % block_k == 0
+    nq, nk = sq // block_q, sk // block_k
+
+    def q_block(qi):
+        qb = jax.lax.dynamic_slice_in_dim(q, qi * block_q, block_q, axis=1)
+        q_pos = qi * block_q + jnp.arange(block_q)
+
+        def kv_step(carry, ki):
+            acc, m, l = carry
+            kb = jax.lax.dynamic_slice_in_dim(k, ki * block_k, block_k, axis=1)
+            vb = jax.lax.dynamic_slice_in_dim(v, ki * block_k, block_k, axis=1)
+            s_ = jnp.einsum("bqngd,bknd->bngqk", qb, kb,
+                            preferred_element_type=jnp.float32)
+            k_pos = ki * block_k + jnp.arange(block_k)
+            mask = k_pos[None, :] <= q_pos[:, None]
+            if window:
+                mask &= k_pos[None, :] > q_pos[:, None] - window
+            s_ = jnp.where(mask[None, None, None], s_, NEG_INF)
+            m_new = jnp.maximum(m, s_.max(-1))
+            p_ = jnp.exp(s_ - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p_.sum(-1)
+            pv = jnp.einsum("bngqk,bknd->bngqd", p_.astype(vb.dtype), vb)
+            acc = acc * corr[..., None].astype(acc.dtype) + pv
+            return (acc, m_new, l_new), None
+
+        acc0 = jnp.zeros((b, n_kv_heads, g, block_q, hd), v.dtype)
+        m0 = jnp.full((b, n_kv_heads, g, block_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, n_kv_heads, g, block_q), jnp.float32)
+        # only kv blocks with k_start <= q_end are relevant (causal skip)
+        hi = jnp.minimum((qi * block_q + block_q + block_k - 1) // block_k, nk)
+        (acc, m, l), _ = jax.lax.scan(
+            lambda c, i: jax.lax.cond(i < hi, lambda: kv_step(c, i), lambda: (c, None)),
+            (acc0, m0, l0), jnp.arange(nk))
+        return acc / jnp.maximum(l, 1e-30)[..., None].astype(acc.dtype)
+
+    if nq == 1:
+        out = q_block(jnp.int32(0))  # (b, kvh, g, sq, hd)
+    else:
+        out = jax.lax.map(q_block, jnp.arange(nq))  # (nq, b, kvh, g, bq, hd)
+        out = jnp.moveaxis(out, 0, 3).reshape(b, n_kv_heads, g, sq, hd)
+    # (b, kvh, g, sq, hd) -> (b, sq, h, hd)
+    return jnp.moveaxis(out, 3, 1).reshape(b, sq, h, hd)
+
+
+def _dense_attn(q, k, v, n_kv_heads, window, q_offset=0):
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    g = h // n_kv_heads
+    q = q.reshape(b, sq, n_kv_heads, g, hd) * hd**-0.5
+    s_ = jnp.einsum("bqngd,bknd->bngqk", q, k, preferred_element_type=jnp.float32)
+    q_pos = jnp.arange(sq)[:, None] + q_offset
+    k_pos = jnp.arange(sk)[None, :]
+    mask = k_pos <= q_pos
+    if window:
+        mask &= k_pos > q_pos - window
+    s_ = jnp.where(mask[None, None, None], s_, NEG_INF)
+    p_ = jax.nn.softmax(s_, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bngqk,bknd->bqngd", p_, v)
+    return out.reshape(b, sq, h, hd)
+
+
+def attention(p, cfg, x, positions, mrope_positions=None, impl="blockwise",
+              return_kv=False):
+    """Training / prefill attention. x: (b, s, d) -> (b, s, d).
+
+    return_kv=True additionally returns the (k, v) projections so prefill
+    can populate the decode cache in one pass (serve/prefill_with_cache)."""
+    b, s, d = x.shape
+    q, k, v = _project_qkv(p, cfg, x, positions, mrope_positions)
+    window = cfg.sliding_window or None
+    if impl == "dense" or s <= 1024:
+        o = _dense_attn(q, k, v, cfg.n_kv_heads, window)
+    else:
+        o = _blockwise_attn(q, k, v, cfg.n_kv_heads, window)
+    o = lshard(o, "batch", "seq", "heads", "head_dim")
+    out = o.reshape(b, s, cfg.n_heads * cfg.head_dim) @ p["wo"]
+    out = lshard(out, "batch", "seq", "embed")
+    if return_kv:
+        return out, k, v
+    return out
+
+
+def decode_attention(p, cfg, x, cache_k, cache_v, cache_len, mrope_positions=None):
+    """Single-token decode with KV cache.
+
+    x: (b, 1, d); cache_k/v: (b, S, kvh, hd) seq-sharded over "model";
+    cache_len: scalar int — current length (new token written at cache_len).
+    Returns (out, new_cache_k, new_cache_v).
+    """
+    b = x.shape[0]
+    positions = jnp.full((b, 1), cache_len, dtype=jnp.int32)
+    if mrope_positions is not None:
+        mrope_positions = jnp.broadcast_to(
+            jnp.full((3, b, 1), cache_len, jnp.int32), (3, b, 1))
+    q, k, v = _project_qkv(p, cfg, x, positions, mrope_positions)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype), cache_len, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype), cache_len, axis=1)
+    cache_k = lshard(cache_k, "batch", "kv_seq", "kv_heads", "head_dim")
+    cache_v = lshard(cache_v, "batch", "kv_seq", "kv_heads", "head_dim")
+    S = cache_k.shape[1]
+    g = cfg.n_heads // cfg.n_kv_heads
+    qh = q.reshape(b, 1, cfg.n_kv_heads, g, cfg.head_dim) * cfg.head_dim**-0.5
+    s_ = jnp.einsum("bqngd,bknd->bngqk", qh, cache_k,
+                    preferred_element_type=jnp.float32)
+    k_pos = jnp.arange(S)[None, :]
+    valid = k_pos <= cache_len
+    if cfg.sliding_window:
+        valid &= k_pos > cache_len - cfg.sliding_window
+    s_ = jnp.where(valid[None, None, None], s_, NEG_INF)
+    p_ = jax.nn.softmax(s_, axis=-1).astype(cache_v.dtype)
+    o = jnp.einsum("bngqk,bknd->bqngd", p_, cache_v)
+    out = o.reshape(b, 1, cfg.n_heads * cfg.head_dim) @ p["wo"]
+    return lshard(out, "batch", "seq", "embed"), cache_k, cache_v

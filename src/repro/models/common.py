@@ -1,0 +1,181 @@
+"""Shared model components: norms, RoPE/M-RoPE, initializers, logical sharding."""
+
+from __future__ import annotations
+
+import threading
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# Logical-axis sharding.  Models annotate activations/params with *logical*
+# axis names; the mesh context maps them to physical mesh axes.  Outside a
+# mesh context the annotations are no-ops, so the same model code runs in
+# single-device smoke tests and 512-device dry-runs.
+# ---------------------------------------------------------------------------
+
+_ctx = threading.local()
+
+DEFAULT_RULES = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": None,
+    "heads": "model",
+    "kv_heads": None,        # GQA kv replicated across model axis (DESIGN §6)
+    "head_dim": None,
+    "ff": "model",
+    "vocab": "model",
+    "experts": "model",      # expert parallelism
+    "expert_cap": None,
+    "kv_seq": "model",       # decode-time KV cache sequence sharding
+    "ssm_inner": "model",
+    "ssm_heads": "model",    # decode SSM state sharded by heads (§Perf #3)
+    "ssm_state": None,
+    "opt_zero": "data",      # ZeRO-1 axis for optimizer moments
+    "conv_k": None,
+}
+
+
+class ShardingCtx:
+    """Context manager activating logical->physical sharding inside a mesh."""
+
+    def __init__(self, mesh, rules=None):
+        self.mesh = mesh
+        self.rules = dict(DEFAULT_RULES)
+        if rules:
+            self.rules.update(rules)
+
+    def __enter__(self):
+        _ctx.current = self
+        return self
+
+    def __exit__(self, *a):
+        _ctx.current = None
+
+
+def current_ctx():
+    return getattr(_ctx, "current", None)
+
+
+def logical_to_spec(axes) -> P:
+    ctx = current_ctx()
+    if ctx is None:
+        return P()
+    phys = []
+    for ax in axes:
+        m = ctx.rules.get(ax) if ax is not None else None
+        # drop mesh axes the current mesh doesn't have (e.g. "pod" on 2D mesh)
+        if isinstance(m, tuple):
+            m = tuple(x for x in m if x in ctx.mesh.axis_names)
+            m = m if m else None
+        elif m is not None and m not in ctx.mesh.axis_names:
+            m = None
+        phys.append(m)
+    return P(*phys)
+
+
+def lshard(x: jax.Array, *axes):
+    """Constrain x to the logical sharding; no-op outside a mesh context."""
+    ctx = current_ctx()
+    if ctx is None or x.ndim != len(axes):
+        return x
+    return jax.lax.with_sharding_constraint(x, logical_to_spec(axes))
+
+
+def spec_for(axes) -> P:
+    """PartitionSpec for a parameter with the given logical axes."""
+    return logical_to_spec(axes)
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, in_axis=0, dtype=jnp.float32, scale=1.0):
+    fan_in = shape[in_axis]
+    std = scale / jnp.sqrt(fan_in)
+    return (jax.random.normal(key, shape) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return (jax.random.normal(key, shape) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms / activations
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, weight, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(dt) * weight
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    h = silu(x @ w_gate) * (x @ w_up)
+    h = lshard(h, "batch", "seq", "ff")
+    return h @ w_down
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (RoPE + M-RoPE)
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float = 1e4):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 1e4):
+    """x: (..., seq, heads, head_dim); positions: (..., seq) int."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions, sections=(16, 24, 24), theta: float = 1e4):
+    """Qwen2-VL multimodal RoPE.
+
+    positions: (3, ..., seq) — temporal/height/width position ids.  The
+    rotary half-dim is partitioned into ``sections`` (sum = head_dim/2);
+    each section rotates by its own position component.
+    """
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    sec = jnp.concatenate(
+        [jnp.full((s,), i, dtype=jnp.int32) for i, s in enumerate(sections)])
+    # per rotary frequency, pick which position component (t/h/w) drives it
+    comp = positions.astype(jnp.float32)  # (3, ..., seq)
+    angles = comp[..., None] * freqs  # (3, ..., seq, hd/2)
+    angles = jnp.take_along_axis(
+        jnp.moveaxis(angles, 0, -1),  # (..., seq, hd/2, 3)
+        sec[(None,) * (angles.ndim - 2) + (slice(None), None)].astype(jnp.int32),
+        axis=-1,
+    )[..., 0]  # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def causal_mask(q_len, kv_len, q_offset=0, window: int | None = None):
+    q = jnp.arange(q_len)[:, None] + q_offset
+    k = jnp.arange(kv_len)[None, :]
+    m = k <= q
+    if window is not None and window > 0:
+        m &= k > q - window
+    return m

@@ -1,0 +1,260 @@
+"""Mixture-of-Experts with bitmap-encoded dispatch (the paper, transplanted).
+
+A top-k router over E experts assigns each token a k-of-E code — exactly the
+paper's k-of-N bitmap encoding (qwen2-moe: 4-of-60, olmoe: 8-of-64).  The
+(tokens x experts) dispatch matrix is a bitmap index whose rows we reorder:
+
+  * ``route_sort="expert"``   — plain sort by first expert id (Alpha-Lex).
+  * ``route_sort="grayfreq"`` — Gray-Frequency: tokens sorted by the
+    frequency-rank of their expert set, clustering tokens with identical
+    (and popular) expert sets so the EWAH-compressed dispatch metadata
+    shrinks and expert gathers become runs (benchmarks/bench_moe_dispatch).
+
+Experts are sharded over the "model" axis (EP); capacity-based gather /
+scatter dispatch keeps memory bounded and lets GSPMD lower the token
+movement to all-to-all.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, lshard, silu
+
+
+def padded_experts(n_experts: int) -> int:
+    """Pad the expert dim to a multiple of 16 so EP shards evenly on the
+    production model axis (padded experts receive no tokens)."""
+    if n_experts <= 16:
+        return n_experts
+    return -(-n_experts // 16) * 16
+
+
+def init_moe(key, cfg, dtype):
+    d, ff, e = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    ep = padded_experts(e)
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (d, e), dtype=jnp.float32),
+        "w_gate": dense_init(ks[1], (ep, d, ff), dtype=dtype),
+        "w_up": dense_init(ks[2], (ep, d, ff), dtype=dtype),
+        "w_down": dense_init(ks[3], (ep, ff, d), dtype=dtype),
+    }
+    if cfg.n_shared_experts:
+        sff = cfg.shared_d_ff
+        k2 = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w_gate": dense_init(k2[0], (d, sff), dtype=dtype),
+            "w_up": dense_init(k2[1], (d, sff), dtype=dtype),
+            "w_down": dense_init(k2[2], (sff, d), dtype=dtype),
+        }
+    return p
+
+
+def moe_axes(cfg):
+    ax = {
+        "router": ("embed", None),
+        "w_gate": ("experts", "embed", None),
+        "w_up": ("experts", "embed", None),
+        "w_down": ("experts", None, "embed"),
+    }
+    if cfg.n_shared_experts:
+        ax["shared"] = {
+            "w_gate": ("embed", "ff"),
+            "w_up": ("embed", "ff"),
+            "w_down": ("ff", "embed"),
+        }
+    return ax
+
+
+def _route(p, cfg, xf):
+    """Router: top-k expert ids + normalized gates. xf: (T, d) float32."""
+    logits = xf.astype(jnp.float32) @ p["router"]  # (T, E)
+    gates, eids = jax.lax.top_k(logits, cfg.top_k)  # (T, k)
+    gates = jax.nn.softmax(gates, axis=-1)
+    return eids, gates, logits
+
+
+def routing_bitmap_words(eids, n_experts: int):
+    """k-of-E routing bitmaps packed to uint32 words: (E, ceil(T/32)).
+
+    Column-per-expert layout, rows = tokens — the dispatch matrix as a
+    bitmap index (paper §2); compressed sizes measured by the benchmark.
+    """
+    T, k = eids.shape
+    n_words = (T + 31) // 32
+    onehot = jax.nn.one_hot(eids, n_experts, dtype=jnp.uint32).sum(1)  # (T, E)
+    onehot = jnp.minimum(onehot, 1)  # duplicate expert ids still set one bit
+    pad = n_words * 32 - T
+    onehot = jnp.pad(onehot, ((0, pad), (0, 0)))
+    m = onehot.reshape(n_words, 32, n_experts)
+    shifts = jnp.arange(32, dtype=jnp.uint32)[None, :, None]
+    return (m << shifts).sum(1).astype(jnp.uint32).T  # (E, n_words)
+
+
+def grayfreq_token_order(eids, n_experts: int):
+    """Gray-Frequency row ordering for the dispatch bitmap index.
+
+    Token key = (frequency-rank of its expert-set class, expert ids);
+    tokens with identical popular expert sets become adjacent runs
+    (paper §4.2 applied to the routing table).
+    """
+    T, k = eids.shape
+    se = jnp.sort(eids, axis=1)  # canonical (sorted) expert set per token
+    # group identical expert sets via lexsort over the k id columns
+    order = jnp.lexsort(tuple(se[:, i] for i in range(k - 1, -1, -1)))
+    sse = se[order]
+    new = jnp.concatenate(
+        [jnp.ones(1, bool), jnp.any(sse[1:] != sse[:-1], axis=1)])
+    grp = jnp.cumsum(new) - 1
+    counts = jax.ops.segment_sum(jnp.ones(T, jnp.int32), grp, num_segments=T)
+    freq = counts[grp]  # set-class frequency, aligned with sorted order
+    # final key: descending frequency, group id tiebreak (last key primary)
+    reorder = jnp.lexsort((grp, -freq))
+    return order[reorder]  # token permutation
+
+
+def moe_ffn(p, cfg, x, capacity_factor=None, route_sort="none",
+            dispatch="gather"):
+    """x: (b, s, d) -> (b, s, d).
+
+    dispatch="gather" (default, §Perf hillclimb #1): build a replicated
+    (E, cap) slot->token index, then GATHER tokens into the EP-sharded
+    (E, cap, d) buffer — with x replicated across the model axis each
+    expert shard reads its slice locally, and the only collective is the
+    (T, d) all-reduce of the combine (same volume as a dense Megatron
+    MLP).  dispatch="scatter" is the paper-faithful-naive baseline whose
+    scatter into an EP-sharded operand makes GSPMD all-gather the full
+    token buffer per layer (measured 24x more collective bytes).
+    """
+    b, s, d = x.shape
+    e, k = p["w_gate"].shape[0], cfg.top_k  # e includes EP padding
+    if capacity_factor is None:
+        capacity_factor = getattr(cfg, "moe_capacity_factor", 1.25)
+    T = b * s
+    xf = x.reshape(T, d)
+    eids, gates, logits = _route(p, cfg, xf)
+
+    if dispatch == "gather":
+        # --- per-sequence (grouped) dispatch: §Perf iterations 2+5 --------
+        # Every plan op is batched over the (data-sharded) batch dim, so
+        # routing/sort/gather are shard-local; the only collective left is
+        # the combine's (b_local, s, d) psum — same volume as a dense
+        # Megatron MLP.  A global-batch plan forces GSPMD to all-gather
+        # tokens across the data axis (measured 23x more collective bytes).
+        cap = int(capacity_factor * s * k / cfg.n_experts + 0.5)
+        cap = max(8, min(cap, s))
+        be = eids.reshape(b, s, k)
+        bg = gates.reshape(b, s, k).astype(x.dtype)
+        a_eid = be.reshape(b, s * k)
+        a_gate = bg.reshape(b, s * k)
+        tok = jnp.broadcast_to(
+            jnp.repeat(jnp.arange(s, dtype=jnp.int32), k), (b, s * k))
+        if route_sort == "grayfreq":
+            # cluster similar expert sets adjacently within the sequence
+            # (per-shard approximation of Gray-Frequency keyed on the two
+            # smallest expert ids; the exact global ordering is used for
+            # the dispatch-metadata bitmaps, see grayfreq_token_order)
+            se = jnp.sort(be, axis=2)
+            raw = se[:, :, 0] * e + (se[:, :, 1] if k > 1 else 0)
+            # dense-rank to keep the composite key within int32
+            sub = jnp.argsort(jnp.argsort(raw, axis=1), axis=1)
+            sub = jnp.repeat(sub, k, axis=1).astype(jnp.int32)
+        else:
+            sub = tok
+        order = jnp.argsort(a_eid * (s * k) + sub, axis=1)
+        a_eid = jnp.take_along_axis(a_eid, order, axis=1)
+        a_gate = jnp.take_along_axis(a_gate, order, axis=1)
+        tok = jnp.take_along_axis(tok, order, axis=1)
+
+        # position within expert, per sequence
+        idx = jnp.arange(s * k)
+        new = jnp.concatenate(
+            [jnp.ones((b, 1), bool), a_eid[:, 1:] != a_eid[:, :-1]], axis=1)
+        seg_start = jax.lax.cummax(jnp.where(new, idx[None], 0), axis=1)
+        pos = idx[None] - seg_start
+        keep = pos < cap
+        slot = jnp.where(keep, a_eid * cap + pos, e * cap)
+
+        # slot -> token plan, built per sequence via vmap so the scatter /
+        # gather carry an explicit batch dimension GSPMD keeps shard-local
+        # (arange-indexed scatters defeat its batching detection and
+        # reintroduce data-axis all-gathers — measured, see §Perf)
+        def plan_row(slot_r, tok_r, gate_r):
+            tfs = jnp.full((e * cap + 1,), s, jnp.int32
+                           ).at[slot_r].set(tok_r, mode="drop")
+            gfs = jnp.zeros((e * cap + 1,), x.dtype
+                            ).at[slot_r].set(gate_r, mode="drop")
+            return tfs[:-1], gfs[:-1]
+
+        tok_for_slot, gate_for_slot = jax.vmap(plan_row)(slot, tok, a_gate)
+
+        xpad = jnp.concatenate([x, jnp.zeros((b, 1, d), x.dtype)], axis=1)
+        buf = jax.vmap(lambda xp, t: xp[t])(xpad, tok_for_slot)
+        buf = buf.reshape(b, e, cap, d)
+        buf = lshard(buf, "batch", "experts", "expert_cap", "embed")
+
+        h = jnp.einsum("becd,edf->becf", buf, p["w_gate"])
+        u = jnp.einsum("becd,edf->becf", buf, p["w_up"])
+        h = silu(h) * u
+        out = jnp.einsum("becf,efd->becd", h, p["w_down"])
+        out = lshard(out, "batch", "experts", "expert_cap", "embed")
+
+        gated = (out * gate_for_slot.reshape(b, e, cap, 1)).reshape(b, e * cap, d)
+        y = jax.vmap(
+            lambda o, t: jnp.zeros((s + 1, d), x.dtype).at[t].add(o, mode="drop")
+        )(gated, tok_for_slot)
+        y = y[:, :s].reshape(T, d)
+    else:
+        # --- "scatter" baseline: global-batch plan + scatter into the
+        # EP-sharded buffer (paper-faithful-naive; kept for §Perf A/B) ----
+        xf = x.reshape(T, d)
+        cap = int(capacity_factor * T * k / cfg.n_experts + 0.5)
+        cap = max(8, min(cap, T))
+        tok = jnp.repeat(jnp.arange(T), k)
+        a_eid = eids.reshape(-1)
+        a_gate = gates.reshape(-1)
+        if route_sort == "grayfreq":
+            perm = grayfreq_token_order(eids, e)
+            inv_rank = jnp.zeros(T, jnp.int32).at[perm].set(
+                jnp.arange(T, dtype=jnp.int32))
+            sub = inv_rank[tok]
+        else:
+            sub = tok
+        order = jnp.lexsort((sub, a_eid))
+        a_eid, a_gate, tok = a_eid[order], a_gate[order], tok[order]
+        new = jnp.concatenate([jnp.ones(1, bool), a_eid[1:] != a_eid[:-1]])
+        seg_start = jax.lax.cummax(jnp.where(new, jnp.arange(T * k), 0))
+        pos = jnp.arange(T * k) - seg_start
+        keep = pos < cap
+        slot = jnp.where(keep, a_eid * cap + pos, e * cap)
+        buf = jnp.zeros((e * cap + 1, d), x.dtype)
+        buf = buf.at[slot].set(xf[tok], mode="drop")
+        buf = buf[:-1].reshape(e, cap, d)
+        buf = lshard(buf, "experts", "expert_cap", "embed")
+        h = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"])
+        u = jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+        h = silu(h) * u
+        out = jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+        out = lshard(out, "experts", "expert_cap", "embed")
+        outf = out.reshape(e * cap, d)
+        contrib = outf[jnp.where(keep, a_eid * cap + pos, 0)] * \
+            a_gate[:, None].astype(x.dtype)
+        contrib = jnp.where(keep[:, None], contrib, 0)
+        y = jnp.zeros((T, d), x.dtype).at[tok].add(contrib)
+
+    # --- shared experts (qwen2-moe) ----------------------------------------
+    if cfg.n_shared_experts:
+        sp = p["shared"]
+        # shared experts are fused into one wide FFN (width = n_shared * ff)
+        sh = silu(xf @ sp["w_gate"]) * (xf @ sp["w_up"])
+        y = y + sh @ sp["w_down"]
+    y = y.reshape(b, s, d)
+
+    # aux: load-balancing loss (Switch-style) so training is realistic
+    probs = jax.nn.softmax(logits, axis=-1)
+    load = jnp.zeros(cfg.n_experts).at[eids.reshape(-1)].add(1.0) / (T * k)
+    importance = probs.mean(0)
+    aux = cfg.n_experts * jnp.sum(load * importance)
+    return lshard(y, "batch", "seq", "embed"), aux

@@ -1,0 +1,190 @@
+"""Mamba2 SSD (state-space duality) block — chunked, matmul-friendly form.
+
+Implements the 'minimal SSD' algorithm (Dao & Gu 2024, arXiv:2405.21060):
+within-chunk quadratic (attention-like) term + inter-chunk recurrent state
+pass.  The chunked form maps onto the MXU (two batched matmuls per chunk)
+with an O(s/Q) sequential scan across chunks, giving O(s) total work.
+
+Decode path keeps per-head state (b, h, p, N) and a depthwise-conv tail.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, lshard, rms_norm, silu
+
+CONV_K = 4  # depthwise causal conv width (mamba2 default)
+
+
+def init_mamba2(key, cfg, dtype):
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    nh = cfg.ssm_heads
+    N = cfg.ssm_state
+    ng = cfg.ssm_groups
+    ks = jax.random.split(key, 6)
+    conv_dim = d_in + 2 * ng * N
+    return {
+        # order: [z (gate) | x | B | C | dt] fused input projection
+        "w_in": dense_init(ks[0], (d, 2 * d_in + 2 * ng * N + nh), dtype=dtype),
+        "conv_w": dense_init(ks[1], (CONV_K, conv_dim), dtype=dtype, scale=1.0),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.arange(1, nh + 1, dtype=jnp.float32)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm_w": jnp.ones((d_in,), dtype),
+        "w_out": dense_init(ks[2], (d_in, d), dtype=dtype),
+    }
+
+
+def mamba2_axes(cfg):
+    return {
+        "w_in": ("embed", "ssm_inner"),
+        "conv_w": ("conv_k", "ssm_inner"),
+        "conv_b": ("ssm_inner",),
+        "A_log": (None,),
+        "D": (None,),
+        "dt_bias": (None,),
+        "norm_w": ("ssm_inner",),
+        "w_out": ("ssm_inner", "embed"),
+    }
+
+
+def _causal_conv(xBC, conv_w, conv_b):
+    """Depthwise causal conv over seq: xBC (b, s, C), conv_w (K, C)."""
+    K = conv_w.shape[0]
+    out = xBC * conv_w[K - 1]
+    for i in range(1, K):
+        shifted = jnp.pad(xBC, ((0, 0), (i, 0), (0, 0)))[:, : xBC.shape[1]]
+        out = out + shifted * conv_w[K - 1 - i]
+    return silu(out + conv_b)
+
+
+def ssd_chunked(x, dt, A, B, C, D, chunk: int):
+    """SSD scan. x: (b,s,h,p), dt: (b,s,h), A: (h,) negative,
+    B,C: (b,s,g,N). Returns (b,s,h,p) and final state (b,h,p,N)."""
+    b, s, h, p = x.shape
+    g, N = B.shape[2], B.shape[3]
+    assert s % chunk == 0
+    nc = s // chunk
+    rep = h // g
+
+    # discretize
+    dA = dt * A  # (b,s,h), negative
+    xdt = x * dt[..., None]
+
+    # reshape into chunks
+    cA = dA.reshape(b, nc, chunk, h)
+    cx = xdt.reshape(b, nc, chunk, h, p)
+    cB = B.reshape(b, nc, chunk, g, N)
+    cC = C.reshape(b, nc, chunk, g, N)
+
+    # cumulative decay within chunk
+    csum = jnp.cumsum(cA, axis=2)  # (b,nc,Q,h)
+    total = csum[:, :, -1]  # (b,nc,h)
+
+    # ---- intra-chunk (quadratic, attention-like) term ----
+    # L[i,j] = exp(csum_i - csum_j) for i >= j
+    li = csum[:, :, :, None, :]  # (b,nc,Q,1,h)
+    lj = csum[:, :, None, :, :]  # (b,nc,1,Q,h)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    L = jnp.where(mask[None, None, :, :, None], jnp.exp(li - lj), 0.0)
+    # scores: C_i . B_j  (grouped)
+    cBg = cB.reshape(b, nc, chunk, g, 1, N)
+    cCg = cC.reshape(b, nc, chunk, g, 1, N)
+    scores = jnp.einsum("bnigrN,bnjgrN->bnijg", cCg, cBg)  # (b,nc,Q,Q,g)
+    scores = jnp.repeat(scores, rep, axis=-1)  # (b,nc,Q,Q,h)
+    y_diag = jnp.einsum("bnijh,bnijh,bnjhp->bnihp", scores, L, cx)
+
+    # ---- inter-chunk states ----
+    # state contribution of chunk: sum_j exp(total - csum_j) * B_j x_j^T
+    decay_b = jnp.exp(total[:, :, None] - csum)  # (b,nc,Q,h)
+    Bh = jnp.repeat(cB, rep, axis=3)  # (b,nc,Q,h,N)
+    chunk_state = jnp.einsum("bnqh,bnqhN,bnqhp->bnhpN", decay_b, Bh, cx)
+
+    # recurrence across chunks: S_{c+1} = exp(total_c) * S_c + state_c
+    def step(S, inp):
+        tot, st = inp  # (b,h), (b,h,p,N)
+        S_new = S * jnp.exp(tot)[:, :, None, None] + st
+        return S_new, S  # emit state *before* chunk
+
+    S0 = jnp.zeros((b, h, p, N), x.dtype)
+    _, S_prev = jax.lax.scan(
+        step, S0, (jnp.moveaxis(total, 1, 0), jnp.moveaxis(chunk_state, 1, 0)))
+    S_prev = jnp.moveaxis(S_prev, 0, 1)  # (b,nc,h,p,N)
+
+    # ---- inter-chunk output: C_i . S_prev, decayed ----
+    Ch = jnp.repeat(cC, rep, axis=3)  # (b,nc,Q,h,N)
+    decay_c = jnp.exp(csum)  # exp(csum_i)
+    y_off = jnp.einsum("bnqhN,bnhpN,bnqh->bnqhp", Ch, S_prev, decay_c)
+
+    y = (y_diag + y_off).reshape(b, s, h, p) + x * D[None, None, :, None]
+    # final state for decode handoff
+    S_final, _ = jax.lax.scan(
+        step, S0, (jnp.moveaxis(total, 1, 0), jnp.moveaxis(chunk_state, 1, 0)))
+    return y, S_final
+
+
+def mamba2_block(p, cfg, x):
+    """Full mamba2 mixer. x: (b, s, d) -> (b, s, d)."""
+    b, s, d = x.shape
+    d_in = cfg.ssm_expand * d
+    ng, N, nh = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    hp = d_in // nh
+
+    zxbcdt = x @ p["w_in"]
+    z = zxbcdt[..., :d_in]
+    xBC = zxbcdt[..., d_in : d_in + d_in + 2 * ng * N]
+    dt = zxbcdt[..., -nh:]
+    xBC = _causal_conv(xBC, p["conv_w"], p["conv_b"])
+    xs = xBC[..., :d_in].reshape(b, s, nh, hp)
+    B = xBC[..., d_in : d_in + ng * N].reshape(b, s, ng, N)
+    C = xBC[..., d_in + ng * N :].reshape(b, s, ng, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    y, _ = ssd_chunked(xs.astype(jnp.float32), dt, A,
+                       B.astype(jnp.float32), C.astype(jnp.float32),
+                       p["D"], cfg.ssm_chunk)
+    y = y.reshape(b, s, d_in).astype(x.dtype)
+    y = rms_norm(y * silu(z), p["norm_w"])
+    y = lshard(y, "batch", "seq", "ssm_inner")
+    return y @ p["w_out"]
+
+
+def mamba2_decode(p, cfg, x, conv_state, ssm_state):
+    """One-token decode. x: (b, 1, d); conv_state: (b, K-1, conv_dim);
+    ssm_state: (b, h, p, N).  Returns (y, new_conv_state, new_ssm_state)."""
+    b, _, d = x.shape
+    d_in = cfg.ssm_expand * d
+    ng, N, nh = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    hp = d_in // nh
+
+    zxbcdt = x @ p["w_in"]
+    z = zxbcdt[..., :d_in]
+    xBC = zxbcdt[..., d_in : d_in + d_in + 2 * ng * N]  # (b,1,conv_dim)
+    dt = zxbcdt[..., -nh:]
+
+    window = jnp.concatenate([conv_state, xBC], axis=1)  # (b,K,conv_dim)
+    conv = (window * p["conv_w"][None]).sum(1, keepdims=True) + p["conv_b"]
+    xBC1 = silu(conv)
+    new_conv_state = window[:, 1:]
+
+    xs = xBC1[..., :d_in].reshape(b, nh, hp)
+    B = xBC1[..., d_in : d_in + ng * N].reshape(b, ng, N)
+    C = xBC1[..., d_in + ng * N :].reshape(b, ng, N)
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (b,h)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt * A)  # (b,h)
+    rep = nh // ng
+    Bh = jnp.repeat(B, rep, axis=1)  # (b,h,N)
+    Ch = jnp.repeat(C, rep, axis=1)
+    xdt = xs * dt[..., None]  # (b,h,p)
+    new_state = ssm_state * dA[..., None, None] + jnp.einsum("bhp,bhN->bhpN", xdt, Bh)
+    new_state = lshard(new_state, "batch", "ssm_heads", None, None)
+    y = jnp.einsum("bhpN,bhN->bhp", new_state, Ch) + xs * p["D"][None, :, None]
+    y = y.reshape(b, 1, d_in).astype(x.dtype)
+    y = rms_norm(y * silu(z), p["norm_w"])
+    return y @ p["w_out"], new_conv_state, new_state

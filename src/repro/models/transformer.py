@@ -1,0 +1,353 @@
+"""Model assembly: embedding -> scanned layer stack -> head.
+
+One code path serves all 10 assigned architectures; the config selects the
+mixer (attention / MoE-FFN / Mamba2 / hybrid) per layer.  Layer parameters
+are stacked on a leading axis and iterated with ``jax.lax.scan`` so the HLO
+is O(1) in depth (critical for 512-device dry-run compiles).
+
+Hybrid (Zamba2): a stack of Mamba2 layers with ONE weight-shared
+(attention + MLP) block applied after every ``attn_every`` mamba layers —
+implemented as segmented scans so forward and decode interleave identically.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .common import dense_init, embed_init, lshard, rms_norm, swiglu
+
+
+def _dtype(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init_layer(key, cfg, dtype):
+    """One repeated block's params (stacked across layers by init_params)."""
+    ks = jax.random.split(key, 4)
+    p = {"ln1": jnp.ones((cfg.d_model,), dtype)}
+    if cfg.family in ("ssm", "hybrid"):
+        p["mixer"] = ssm_mod.init_mamba2(ks[0], cfg, dtype)
+        return p  # no per-layer FFN: mamba2 mixer includes the expansion
+    p["mixer"] = attn.init_attention(ks[0], cfg, dtype)
+    p["ln2"] = jnp.ones((cfg.d_model,), dtype)
+    if cfg.family == "moe":
+        p["ffn"] = moe_mod.init_moe(ks[1], cfg, dtype)
+    else:
+        d, f = cfg.d_model, cfg.d_ff
+        p["ffn"] = {
+            "w_gate": dense_init(ks[1], (d, f), dtype=dtype),
+            "w_up": dense_init(ks[2], (d, f), dtype=dtype),
+            "w_down": dense_init(ks[3], (f, d), dtype=dtype),
+        }
+    return p
+
+
+def layer_axes(cfg):
+    ax = {"ln1": ("embed",)}
+    if cfg.family in ("ssm", "hybrid"):
+        ax["mixer"] = ssm_mod.mamba2_axes(cfg)
+        return ax
+    ax["mixer"] = attn.attention_axes(cfg)
+    ax["ln2"] = ("embed",)
+    if cfg.family == "moe":
+        ax["ffn"] = moe_mod.moe_axes(cfg)
+    else:
+        ax["ffn"] = {"w_gate": ("embed", "ff"), "w_up": ("embed", "ff"),
+                     "w_down": ("ff", "embed")}
+    return ax
+
+
+def _init_shared_block(key, cfg, dtype):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "ln1": jnp.ones((d,), dtype),
+        "attn": attn.init_attention(k1, cfg, dtype),
+        "ln2": jnp.ones((d,), dtype),
+        "ffn": {
+            "w_gate": dense_init(k2, (d, f), dtype=dtype),
+            "w_up": dense_init(k3, (d, f), dtype=dtype),
+            "w_down": dense_init(k4, (f, d), dtype=dtype),
+        },
+    }
+
+
+def init_params(key, cfg):
+    dtype = _dtype(cfg)
+    k_emb, k_layers, k_head, k_shared = jax.random.split(key, 4)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    layers = jax.vmap(lambda k: init_layer(k, cfg, dtype))(layer_keys)
+    params = {
+        "embed": embed_init(k_emb, (cfg.padded_vocab, cfg.d_model), dtype),
+        "layers": layers,
+        "ln_f": jnp.ones((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(k_head, (cfg.d_model, cfg.padded_vocab), dtype=dtype)
+    if cfg.family == "hybrid" and cfg.attn_every:
+        params["shared_attn"] = _init_shared_block(k_shared, cfg, dtype)
+    return params
+
+
+def params_axes(cfg):
+    """Logical-axis pytree mirroring init_params (layer leaves get a leading
+    None for the stacked layer dim)."""
+    lax_ = layer_axes(cfg)
+    stacked = jax.tree.map(
+        lambda a: (None,) + tuple(a), lax_,
+        is_leaf=lambda x: isinstance(x, tuple))
+    axes = {
+        "embed": ("vocab", "embed"),
+        "layers": stacked,
+        "ln_f": ("embed",),
+    }
+    if not cfg.tie_embeddings:
+        axes["lm_head"] = ("embed", "vocab")
+    if cfg.family == "hybrid" and cfg.attn_every:
+        axes["shared_attn"] = {
+            "ln1": ("embed",), "attn": attn.attention_axes(cfg),
+            "ln2": ("embed",),
+            "ffn": {"w_gate": ("embed", "ff"), "w_up": ("embed", "ff"),
+                    "w_down": ("ff", "embed")},
+        }
+    return axes
+
+
+def n_params(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+def _sinusoid(positions, d):
+    half = d // 2
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _block(lp, x, positions, mrope_positions, cfg):
+    h = rms_norm(x, lp["ln1"])
+    if cfg.family in ("ssm", "hybrid"):
+        return x + ssm_mod.mamba2_block(lp["mixer"], cfg, h), 0.0
+    mix = attn.attention(lp["mixer"], cfg, h, positions, mrope_positions,
+                         impl=cfg.attn_impl)
+    x = x + mix
+    h = rms_norm(x, lp["ln2"])
+    if cfg.family == "moe":
+        y, aux = moe_mod.moe_ffn(lp["ffn"], cfg, h, route_sort=cfg.route_sort,
+                                 dispatch=cfg.moe_dispatch)
+    else:
+        y, aux = swiglu(h, lp["ffn"]["w_gate"], lp["ffn"]["w_up"],
+                        lp["ffn"]["w_down"]), 0.0
+    return x + y, aux
+
+
+def _shared_apply(sp, cfg, x, positions):
+    h = rms_norm(x, sp["ln1"])
+    x = x + attn.attention(sp["attn"], cfg, h, positions, None, impl=cfg.attn_impl)
+    h = rms_norm(x, sp["ln2"])
+    return x + swiglu(h, sp["ffn"]["w_gate"], sp["ffn"]["w_up"], sp["ffn"]["w_down"])
+
+
+def _scan_layers(layers_slice, cfg, x, positions, mrope_positions, n):
+    def block(lp, x, positions, mrope_positions):
+        return _block(lp, x, positions, mrope_positions, cfg)
+
+    if cfg.remat:
+        policy = (None if cfg.remat_policy == "full" else
+                  jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        block = jax.checkpoint(block, policy=policy)
+
+    def body(carry, lp):
+        x, aux = carry
+        x, a = block(lp, x, positions, mrope_positions)
+        return (x, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)), layers_slice)
+    return x, aux
+
+
+def _segments(cfg):
+    """Hybrid layer segmentation: [(start, len, shared_after), ...]."""
+    if cfg.family != "hybrid" or not cfg.attn_every:
+        return [(0, cfg.n_layers, False)]
+    segs = []
+    i = 0
+    while i < cfg.n_layers:
+        ln = min(cfg.attn_every, cfg.n_layers - i)
+        segs.append((i, ln, i + ln <= cfg.n_layers and ln == cfg.attn_every))
+        i += ln
+    return segs
+
+
+def n_shared_slots(cfg):
+    return sum(1 for _, _, s in _segments(cfg) if s)
+
+
+def forward(params, cfg, inputs, positions=None, mrope_positions=None,
+            patches=None):
+    """inputs: token ids (b, s) int32, or precomputed embeddings (b, s, d).
+
+    ``patches``: (b, P, d) precomputed frontend embeddings (vlm patch /
+    audio frame stub per spec) written over the first P positions of the
+    embedded sequence — the modality frontend itself is out of scope.
+    Returns (logits (b, s, vocab), aux)."""
+    if inputs.ndim == 2:
+        x = params["embed"][inputs]
+    else:
+        x = inputs.astype(_dtype(cfg))
+    if patches is not None:
+        x = jax.lax.dynamic_update_slice(
+            x, patches.astype(x.dtype), (0, 0, 0))
+    b, s = x.shape[:2]
+    x = lshard(x, "batch", "seq", "embed")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    if not cfg.rope and cfg.family not in ("ssm", "hybrid"):
+        # musicgen-style sinusoidal position embedding (no rotary)
+        x = x + _sinusoid(positions, cfg.d_model).astype(x.dtype)
+
+    aux = jnp.float32(0.0)
+    for start, ln, shared_after in _segments(cfg):
+        sl = jax.tree.map(lambda a: a[start : start + ln], params["layers"])
+        x, a = _scan_layers(sl, cfg, x, positions, mrope_positions, ln)
+        aux = aux + a
+        if shared_after:
+            x = _shared_apply(params["shared_attn"], cfg, x, positions)
+
+    x = rms_norm(x, params["ln_f"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head
+    return lshard(logits, "batch", "seq", "vocab"), aux
+
+
+# ---------------------------------------------------------------------------
+# decode (single token, cached)
+# ---------------------------------------------------------------------------
+
+
+def init_decode_cache(cfg, batch: int, max_len: int, dtype=None):
+    """Attention: K/V (layers, b, S, kvh, hd); SSM: conv tail + state."""
+    dtype = dtype or _dtype(cfg)
+    cache = {}
+    if cfg.family in ("ssm", "hybrid"):
+        d_in = cfg.ssm_expand * cfg.d_model
+        conv_dim = d_in + 2 * cfg.ssm_groups * cfg.ssm_state
+        hp = d_in // cfg.ssm_heads
+        cache["conv"] = jnp.zeros(
+            (cfg.n_layers, batch, ssm_mod.CONV_K - 1, conv_dim), dtype)
+        cache["state"] = jnp.zeros(
+            (cfg.n_layers, batch, cfg.ssm_heads, hp, cfg.ssm_state), jnp.float32)
+        if cfg.family == "hybrid":
+            slots = n_shared_slots(cfg)
+            cache["k"] = jnp.zeros(
+                (slots, batch, max_len, cfg.n_kv_heads, cfg.head_dim), dtype)
+            cache["v"] = jnp.zeros_like(cache["k"])
+    else:
+        cache["k"] = jnp.zeros(
+            (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.head_dim), dtype)
+        cache["v"] = jnp.zeros_like(cache["k"])
+    return cache
+
+
+def cache_axes(cfg):
+    ax = {}
+    if cfg.family in ("ssm", "hybrid"):
+        ax["conv"] = (None, "batch", None, "ssm_inner")
+        # state (layers, b, heads, p, N): heads across the model axis, so
+        # the recurrent update is shard-local (was replicated -> per-layer
+        # all-gather of the 268MB state; see EXPERIMENTS.md §Perf #3)
+        ax["state"] = (None, "batch", "ssm_heads", None, None)
+        if cfg.family == "hybrid":
+            ax["k"] = (None, "batch", "kv_seq", "kv_heads", "head_dim")
+            ax["v"] = (None, "batch", "kv_seq", "kv_heads", "head_dim")
+    else:
+        ax["k"] = (None, "batch", "kv_seq", "kv_heads", "head_dim")
+        ax["v"] = (None, "batch", "kv_seq", "kv_heads", "head_dim")
+    return ax
+
+
+def _decode_attn_block(lp, cfg, x, ck, cv, cache_len):
+    h = rms_norm(x, lp["ln1"])
+    o, ck, cv = attn.decode_attention(lp["mixer"], cfg, h, ck, cv, cache_len)
+    x = x + o
+    h = rms_norm(x, lp["ln2"])
+    if cfg.family == "moe":
+        y, _ = moe_mod.moe_ffn(lp["ffn"], cfg, h, route_sort="none",
+                               dispatch=cfg.moe_dispatch)
+    else:
+        y = swiglu(h, lp["ffn"]["w_gate"], lp["ffn"]["w_up"], lp["ffn"]["w_down"])
+    return x + y, ck, cv
+
+
+def decode_step(params, cfg, tokens, cache, cache_len):
+    """One decode step. tokens: (b, 1) ids or (b, 1, d) embeddings.
+    Returns (logits (b, vocab), new_cache)."""
+    if tokens.ndim == 2:
+        x = params["embed"][tokens]
+    else:
+        x = tokens.astype(_dtype(cfg))
+    x = lshard(x, "batch", "seq", "embed")
+
+    if cfg.family in ("ssm", "hybrid"):
+        def body(x, inp):
+            lp, conv, state = inp
+            h = rms_norm(x, lp["ln1"])
+            mix, conv, state = ssm_mod.mamba2_decode(lp["mixer"], cfg, h, conv, state)
+            return x + mix, (conv, state)
+
+        new_cache = {}
+        slot = 0
+        ks, vs, convs, states = [], [], [], []
+        for start, ln, shared_after in _segments(cfg):
+            sl = jax.tree.map(lambda a: a[start : start + ln], params["layers"])
+            csl = (sl, cache["conv"][start : start + ln],
+                   cache["state"][start : start + ln])
+            x, (conv, state) = jax.lax.scan(body, x, csl)
+            convs.append(conv)
+            states.append(state)
+            if shared_after:
+                sp = params["shared_attn"]
+                h = rms_norm(x, sp["ln1"])
+                o, ck, cv = attn.decode_attention(
+                    sp["attn"], cfg, h, cache["k"][slot], cache["v"][slot], cache_len)
+                x = x + o
+                h = rms_norm(x, sp["ln2"])
+                x = x + swiglu(h, sp["ffn"]["w_gate"], sp["ffn"]["w_up"],
+                               sp["ffn"]["w_down"])
+                ks.append(ck)
+                vs.append(cv)
+                slot += 1
+        new_cache["conv"] = jnp.concatenate(convs)
+        new_cache["state"] = jnp.concatenate(states)
+        if cfg.family == "hybrid":
+            new_cache["k"] = jnp.stack(ks)
+            new_cache["v"] = jnp.stack(vs)
+    else:
+        def body(x, inp):
+            lp, ck, cv = inp
+            x, ck, cv = _decode_attn_block(lp, cfg, x, ck, cv, cache_len)
+            return x, (ck, cv)
+
+        x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+        new_cache = {"k": ks, "v": vs}
+
+    x = rms_norm(x, params["ln_f"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x @ head)[:, 0]
+    return lshard(logits, "batch", "vocab"), new_cache

@@ -1,0 +1,2 @@
+from .adamw import OptConfig, apply_updates, init_opt_state, lr_schedule
+from .compress import compress_grads, init_error_feedback, wire_bytes

@@ -1,0 +1,129 @@
+"""Fused prefill: one forward pass that also populates the decode cache.
+
+Serving a request = prefill_with_cache(prompt) -> serve_step loop.  The
+per-layer K/V projections are captured as scan outputs and written into
+the (layers, b, max_len, kvh, hd) cache; SSM/hybrid archs capture the
+final recurrent state and conv tail instead.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..models import ssm as ssm_mod
+from ..models import transformer
+from ..models.attention import attention
+from ..models.common import lshard, rms_norm, swiglu
+from ..models.moe import moe_ffn
+from ..models.ssm import CONV_K, mamba2_block
+
+
+def prefill_with_cache(params, cfg, tokens, max_len: int,
+                       mrope_positions=None, patches=None):
+    """tokens: (b, s) ids. Returns (next_token_logits (b, V), cache)."""
+    b, s = tokens.shape[:2]
+    assert s <= max_len
+    if tokens.ndim == 2:
+        x = params["embed"][tokens]
+    else:
+        x = tokens
+    if patches is not None:
+        x = jax.lax.dynamic_update_slice(x, patches.astype(x.dtype), (0, 0, 0))
+    x = lshard(x, "batch", "seq", "embed")
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    if not cfg.rope and cfg.family not in ("ssm", "hybrid"):
+        x = x + transformer._sinusoid(positions, cfg.d_model).astype(x.dtype)
+
+    cache = transformer.init_decode_cache(cfg, b, max_len)
+
+    if cfg.family in ("ssm", "hybrid"):
+        convs, states, ks, vs = [], [], [], []
+        slot = 0
+        for start, ln, shared_after in transformer._segments(cfg):
+            sl = jax.tree.map(lambda a: a[start : start + ln], params["layers"])
+
+            def body(x, lp):
+                h = rms_norm(x, lp["ln1"])
+                # recompute final state via the chunked scan
+                mix = mamba2_block(lp["mixer"], cfg, h)
+                return x + mix, _ssm_tail_state(lp["mixer"], cfg, h)
+
+            x, (conv_t, state_t) = jax.lax.scan(body, x, sl)
+            convs.append(conv_t)
+            states.append(state_t)
+            if shared_after:
+                sp = params["shared_attn"]
+                h = rms_norm(x, sp["ln1"])
+                o, k, v = attention(sp["attn"], cfg, h, positions,
+                                    impl=cfg.attn_impl, return_kv=True)
+                x = x + o
+                h = rms_norm(x, sp["ln2"])
+                x = x + swiglu(h, sp["ffn"]["w_gate"], sp["ffn"]["w_up"],
+                               sp["ffn"]["w_down"])
+                ks.append(k)
+                vs.append(v)
+                slot += 1
+        cache["conv"] = jnp.concatenate(convs)
+        cache["state"] = jnp.concatenate(states)
+        if cfg.family == "hybrid" and ks:
+            pad = max_len - s
+            cache["k"] = jnp.pad(jnp.stack(ks), ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))).astype(cache["k"].dtype)
+            cache["v"] = jnp.pad(jnp.stack(vs), ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))).astype(cache["v"].dtype)
+    else:
+        def body(x, lp):
+            h = rms_norm(x, lp["ln1"])
+            o, k, v = attention(lp["mixer"], cfg, h, positions,
+                                mrope_positions, impl=cfg.attn_impl,
+                                return_kv=True)
+            x = x + o
+            h = rms_norm(x, lp["ln2"])
+            if cfg.family == "moe":
+                y, _ = moe_ffn(lp["ffn"], cfg, h, route_sort="none",
+                               dispatch=cfg.moe_dispatch)
+            else:
+                y = swiglu(h, lp["ffn"]["w_gate"], lp["ffn"]["w_up"],
+                           lp["ffn"]["w_down"])
+            return x + y, (k, v)
+
+        x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
+        pad = max_len - s
+        cache["k"] = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))).astype(cache["k"].dtype)
+        cache["v"] = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))).astype(cache["v"].dtype)
+        cache["k"] = lshard(cache["k"], None, "batch", "kv_seq", "kv_heads", "head_dim")
+        cache["v"] = lshard(cache["v"], None, "batch", "kv_seq", "kv_heads", "head_dim")
+
+    x = rms_norm(x, params["ln_f"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x[:, -1] @ head)
+    return logits, cache
+
+
+def _ssm_tail_state(p, cfg, h):
+    """Final (conv tail, ssm state) of a mamba2 layer over prompt h."""
+    b, s, d = h.shape
+    d_in = cfg.ssm_expand * d
+    ng, N, nh = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    hp = d_in // nh
+    zxbcdt = h @ p["w_in"]
+    xBC = zxbcdt[..., d_in : d_in + d_in + 2 * ng * N]
+    # conv tail: last K-1 pre-activation inputs
+    tail = xBC[:, -(CONV_K - 1):]
+    if s < CONV_K - 1:
+        tail = jnp.pad(xBC, ((0, 0), (CONV_K - 1 - s, 0), (0, 0)))
+    from ..models.ssm import _causal_conv, ssd_chunked
+    xBC1 = _causal_conv(xBC, p["conv_w"], p["conv_b"])
+    xs = xBC1[..., :d_in].reshape(b, s, nh, hp)
+    B = xBC1[..., d_in : d_in + ng * N].reshape(b, s, ng, N)
+    C = xBC1[..., d_in + ng * N :].reshape(b, s, ng, N)
+    dt = jax.nn.softplus(zxbcdt[..., -nh:].astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    pad = (-s) % cfg.ssm_chunk
+    if pad:
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    _, S = ssd_chunked(xs.astype(jnp.float32), dt, A, B.astype(jnp.float32),
+                       C.astype(jnp.float32), p["D"], cfg.ssm_chunk)
+    return tail, S

@@ -1,0 +1,2 @@
+from .step import (cross_entropy, eval_step, loss_fn, prefill_step,
+                   serve_step, train_step)

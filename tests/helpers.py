@@ -1,0 +1,16 @@
+"""Shared test utilities."""
+
+import numpy as np
+
+from repro.core import ewah
+
+
+def random_words(n, p_clean=0.6, seed=0):
+    """uint32 word streams with a mix of clean/dirty runs."""
+    r = np.random.default_rng(seed)
+    kind = r.random(n)
+    words = r.integers(1, 0xFFFFFFFF, size=n, dtype=np.uint32)
+    words = np.where(kind < p_clean / 2, np.uint32(0), words)
+    words = np.where((kind >= p_clean / 2) & (kind < p_clean), ewah.FULL, words)
+    reps = r.integers(1, 6, size=n)
+    return np.repeat(words, reps)[:n].astype(np.uint32)

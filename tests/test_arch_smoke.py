@@ -1,0 +1,121 @@
+"""Per-architecture smoke tests: reduced config, one forward + train step on
+CPU, output shapes + no NaNs.  Full configs are exercised via the dry-run."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_archs
+from repro.models import transformer
+from repro.optim import OptConfig, init_opt_state
+from repro.train import serve_step, train_step
+
+ARCHS = list_archs()
+
+
+def make_batch(cfg, key, b=2, s=32):
+    kt, kl, kp = jax.random.split(key, 3)
+    batch = {
+        "inputs": jax.random.randint(kt, (b, s), 0, cfg.vocab_size),
+        "labels": jax.random.randint(kl, (b, s), 0, cfg.vocab_size),
+    }
+    if cfg.frontend != "none":
+        # stub modality frontend: precomputed patch/frame embeddings
+        batch["patches"] = jax.random.normal(kp, (b, 8, cfg.d_model), jnp.float32)
+    if cfg.family == "vlm":
+        pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        batch["mrope_positions"] = jnp.stack([pos, pos, pos])
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_smoke(arch):
+    cfg = get_config(arch).smoke()
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    batch = make_batch(cfg, jax.random.PRNGKey(1))
+    logits, aux = transformer.forward(
+        params, cfg, batch["inputs"],
+        mrope_positions=batch.get("mrope_positions"),
+        patches=batch.get("patches"))
+    assert logits.shape == (2, 32, cfg.vocab_size)
+    assert not bool(jnp.isnan(logits.astype(jnp.float32)).any())
+    assert not bool(jnp.isnan(aux))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_smoke(arch):
+    cfg = get_config(arch).smoke()
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    opt_cfg = OptConfig(total_steps=10, warmup_steps=2)
+    opt_state = init_opt_state(params)
+    batch = make_batch(cfg, jax.random.PRNGKey(1))
+    step = jax.jit(
+        lambda p, o, b: train_step(p, o, b, cfg=cfg, opt_cfg=opt_cfg))
+    p2, o2, metrics = step(params, opt_state, batch)
+    assert float(metrics["loss"]) > 0
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    # params actually changed (some leaf must move; embed gets no gradient
+    # for embedding-input frontends, so check across all leaves)
+    changed = any(
+        not np.allclose(np.asarray(b, np.float32), np.asarray(a, np.float32))
+        for b, a in zip(jax.tree.leaves(params), jax.tree.leaves(p2)))
+    assert changed
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_step_smoke(arch):
+    cfg = get_config(arch).smoke()
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    b, max_len = 2, 64
+    cache = transformer.init_decode_cache(cfg, b, max_len)
+    tokens = jnp.zeros((b, 1), jnp.int32)
+    step = jax.jit(lambda t, c, l: serve_step(params, t, c, l, cfg=cfg))
+    tok, cache = step(tokens, cache, jnp.int32(0))
+    assert tok.shape == (b, 1)
+    tok2, cache = step(tok, cache, jnp.int32(1))
+    assert tok2.shape == (b, 1)
+    assert int(tok.max()) < cfg.vocab_size
+
+
+@pytest.mark.parametrize("arch", ["tinyllama-1.1b", "mamba2-1.3b", "zamba2-1.2b"])
+def test_decode_matches_forward(arch):
+    """Greedy decode logits must match teacher-forced forward logits."""
+    cfg = get_config(arch).smoke()
+    if cfg.family in ("ssm", "hybrid"):
+        cfg = cfg  # ssm decode vs chunked forward: compared below with tol
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    s = 16
+    toks = jax.random.randint(jax.random.PRNGKey(3), (1, s), 0, cfg.vocab_size)
+    logits_fwd, _ = transformer.forward(params, cfg, toks)
+    cache = transformer.init_decode_cache(cfg, 1, 32)
+    outs = []
+    cache_len = jnp.int32(0)
+    for t in range(s):
+        logits, cache = transformer.decode_step(
+            params, cfg, toks[:, t : t + 1], cache, cache_len)
+        outs.append(logits)
+        cache_len = cache_len + 1
+    logits_dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(logits_dec, np.float32),
+        np.asarray(logits_fwd, np.float32), rtol=0.15, atol=0.15)
+
+
+def test_param_counts_full_configs():
+    """Full-config parameter counts are in the advertised ballpark."""
+    import repro.models.transformer as T
+
+    expected = {
+        "qwen2-7b": 7.6e9, "tinyllama-1.1b": 1.1e9, "qwen2.5-14b": 14.7e9,
+        "phi3-medium-14b": 14e9, "mamba2-1.3b": 1.3e9, "zamba2-1.2b": 1.2e9,
+        "olmoe-1b-7b": 6.9e9, "qwen2-moe-a2.7b": 14.3e9,
+        "musicgen-medium": 1.5e9, "qwen2-vl-7b": 7.6e9,
+    }
+    for arch, target in expected.items():
+        cfg = get_config(arch)
+        shapes = jax.eval_shape(
+            lambda k: T.init_params(k, cfg), jax.random.PRNGKey(0))
+        n = sum(np.prod(l.shape) for l in jax.tree.leaves(shapes))
+        assert 0.5 * target < n < 1.7 * target, (arch, n, target)

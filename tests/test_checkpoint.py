@@ -1,0 +1,83 @@
+"""Checkpoint fault-tolerance behaviour."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.dist import checkpoint as ckpt
+
+
+def make_tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "a": jax.random.normal(k, (16, 8)),
+        "nested": {"b": jnp.arange(10, dtype=jnp.int32),
+                   "c": jax.random.normal(k, (4,)).astype(jnp.bfloat16)},
+    }
+
+
+def trees_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_roundtrip(tmp_path):
+    tree = make_tree()
+    ckpt.save(str(tmp_path), 5, tree, extra={"note": "hi"})
+    restored, step, extra = ckpt.restore(str(tmp_path), tree)
+    assert step == 5 and extra["note"] == "hi"
+    trees_equal(tree, restored)
+
+
+def test_bfloat16_leaf_roundtrip(tmp_path):
+    tree = make_tree()
+    ckpt.save(str(tmp_path), 1, tree)
+    restored, _, _ = ckpt.restore(str(tmp_path), tree)
+    assert restored["nested"]["c"].dtype == jnp.bfloat16
+
+
+def test_retention(tmp_path):
+    tree = make_tree()
+    for s in range(6):
+        ckpt.save(str(tmp_path), s, tree, keep=3)
+    assert ckpt.available_steps(str(tmp_path)) == [3, 4, 5]
+
+
+def test_corruption_falls_back(tmp_path):
+    tree = make_tree()
+    ckpt.save(str(tmp_path), 1, tree, keep=5)
+    ckpt.save(str(tmp_path), 2, tree, keep=5)
+    # corrupt the newest step's first leaf
+    victim = os.path.join(str(tmp_path), "step_00000002", "leaf_00000.npy")
+    arr = np.load(victim, allow_pickle=False)
+    raw = arr.view(np.uint8) if arr.dtype != np.dtype("V2") else arr
+    np.save(victim, np.zeros_like(np.load(victim).view(np.uint8)))
+    restored, step, _ = ckpt.restore(str(tmp_path), tree)
+    assert step == 1  # fell back to the older intact checkpoint
+    trees_equal(tree, restored)
+
+
+def test_async_save(tmp_path):
+    tree = make_tree()
+    t = ckpt.save_async(str(tmp_path), 7, tree)
+    t.join(timeout=60)
+    restored, step, _ = ckpt.restore(str(tmp_path), tree)
+    assert step == 7
+    trees_equal(tree, restored)
+
+
+def test_restore_missing_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        ckpt.restore(str(tmp_path / "nope"), make_tree())
+
+
+def test_atomicity_no_partial_dirs(tmp_path):
+    """tmp dirs are never left behind after successful saves."""
+    tree = make_tree()
+    for s in range(3):
+        ckpt.save(str(tmp_path), s, tree)
+    leftovers = [d for d in os.listdir(tmp_path) if d.startswith("tmp.")]
+    assert leftovers == []

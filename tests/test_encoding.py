@@ -1,0 +1,98 @@
+"""k-of-N encodings, Proposition 1, Gray comparators."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import encoding
+
+
+@pytest.mark.parametrize("k", [1, 2, 3, 4])
+@pytest.mark.parametrize("n_values", [1, 2, 5, 100, 2000, 100_000])
+def test_choose_N_minimal(n_values, k):
+    N = encoding.choose_N(n_values, k)
+    assert math.comb(N, k) >= n_values
+    if N > k:
+        assert math.comb(N - 1, k) < n_values
+
+
+def test_choose_N_paper_example():
+    # "with only 2,000 bitmaps, we can represent an attribute with 2 million
+    # distinct values" via pairs: C(2000, 2) = 1 999 000 ~= 2M
+    assert math.comb(2000, 2) == 1_999_000
+    assert encoding.choose_N(1_999_000, 2) == 2000
+
+
+@pytest.mark.parametrize("N,k", [(4, 2), (5, 2), (5, 3), (6, 3), (7, 2), (8, 4), (10, 3)])
+def test_prop1_gray_enumeration(N, k):
+    """All C(N,k) codes enumerated, successive Hamming distance exactly 2."""
+    codes = encoding.gray_kofn_codes(N, k)
+    assert codes.shape == (math.comb(N, k), k)
+    # all distinct, all valid k-subsets
+    as_sets = {tuple(sorted(c)) for c in codes.tolist()}
+    assert len(as_sets) == math.comb(N, k)
+    h = encoding.hamming_between_successive(codes, N)
+    assert (h == 2).all(), h
+
+
+def test_gray_2of4_matches_paper():
+    """Paper §4.2: GC order for 2-of-4 is 1001, 1010, 1100, 0101, 0110, 0011."""
+    codes = encoding.gray_kofn_codes(4, 2)
+    bits = encoding.codes_to_bits(codes, 4)
+    strings = ["".join("1" if b else "0" for b in row) for row in bits]
+    assert strings == ["1001", "1010", "1100", "0101", "0110", "0011"]
+
+
+def test_lex_2of4_matches_paper():
+    """Paper §4.2: lex order is 1100, 1010, 1001, 0110, ..."""
+    codes = encoding.lex_kofn_codes(4, 2)
+    bits = encoding.codes_to_bits(codes, 4)
+    strings = ["".join("1" if b else "0" for b in row) for row in bits]
+    assert strings == ["1100", "1010", "1001", "0110", "0101", "0011"]
+
+
+def test_lex_not_hamming_optimal():
+    """Paper: 0110 follows 1001 among lex 2-of-4 codes — distance 4."""
+    codes = encoding.lex_kofn_codes(4, 2)
+    h = encoding.hamming_between_successive(codes, 4)
+    assert h.max() == 4
+
+
+def test_clamp_k():
+    assert encoding.clamp_k(4, 4) == 1
+    assert encoding.clamp_k(20, 4) == 2
+    assert encoding.clamp_k(84, 4) == 3
+    assert encoding.clamp_k(85, 4) == 4
+    assert encoding.clamp_k(1000, 2) == 2
+
+
+def test_binary_gray_roundtrip():
+    x = np.arange(4096, dtype=np.uint64)
+    g = encoding.to_gray(x)
+    np.testing.assert_array_equal(encoding.from_gray(g), x)
+    # successive Gray codes differ in exactly one bit
+    diff = g[1:] ^ g[:-1]
+    assert (np.bitwise_count(diff) == 1).all()
+
+
+def brute_gray_rank(bits):
+    """Rank of a bit vector in GC order = from_gray(int of bits)."""
+    v = 0
+    for b in bits:
+        v = (v << 1) | int(b)
+    return int(encoding.from_gray(np.uint64(v)))
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.integers(0, 255), st.integers(0, 255))
+def test_gray_less_matches_rank(a, b):
+    """Algorithm 2 comparator agrees with Gray-code rank comparison."""
+    abits = [(a >> (7 - i)) & 1 for i in range(8)]
+    bbits = [(b >> (7 - i)) & 1 for i in range(8)]
+    apos = [i for i, bit in enumerate(abits) if bit]
+    bpos = [i for i, bit in enumerate(bbits) if bit]
+    expected = brute_gray_rank(abits) < brute_gray_rank(bbits)
+    assert encoding.gray_less(apos, bpos) == expected

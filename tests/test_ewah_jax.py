@@ -1,0 +1,54 @@
+"""JAX EWAH vs numpy oracle."""
+
+import numpy as np
+import pytest
+
+from repro.core import ewah, ewah_jax
+
+from helpers import random_words
+
+
+@pytest.mark.parametrize("n", [1, 2, 32, 100, 1000])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_compress_matches_oracle(n, seed):
+    words = random_words(n, seed=seed)
+    expect = ewah.compress(words)
+    cap = len(expect) + 8
+    stream, length = ewah_jax.compress(words, cap)
+    assert int(length) == len(expect)
+    np.testing.assert_array_equal(np.asarray(stream)[: int(length)], expect)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_size_matches_oracle(seed):
+    words = random_words(700, seed=seed)
+    assert int(ewah_jax.compressed_size(words)) == len(ewah.compress(words))
+
+
+@pytest.mark.parametrize("n", [1, 33, 256, 999])
+@pytest.mark.parametrize("seed", [0, 3])
+def test_decompress_roundtrip(n, seed):
+    words = random_words(n, seed=seed)
+    stream, length = ewah_jax.compress(words, n + 8)
+    out = ewah_jax.decompress(stream, length, n)
+    np.testing.assert_array_equal(np.asarray(out), words)
+
+
+@pytest.mark.parametrize("op", ["and", "or", "xor"])
+def test_logical_op(op):
+    a = random_words(500, seed=1)
+    b = random_words(500, seed=2)
+    ca, la = ewah_jax.compress(a, 520)
+    cb, lb = ewah_jax.compress(b, 520)
+    res, length = ewah_jax.logical_op(ca, la, cb, lb, 500, op, 520)
+    fn = {"and": np.bitwise_and, "or": np.bitwise_or, "xor": np.bitwise_xor}[op]
+    expect = ewah.compress(fn(a, b))
+    np.testing.assert_array_equal(np.asarray(res)[: int(length)], expect)
+
+
+def test_all_clean():
+    words = np.zeros(1000, dtype=np.uint32)
+    stream, length = ewah_jax.compress(words, 8)
+    assert int(length) == 1
+    out = ewah_jax.decompress(stream, length, 1000)
+    np.testing.assert_array_equal(np.asarray(out), words)

@@ -1,0 +1,59 @@
+"""Property tests: EWAH compressed-domain ops obey boolean algebra."""
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from helpers import random_words
+from repro.core import ewah
+
+
+def comp(words):
+    return ewah.compress(words)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 400), st.integers(0, 50), st.integers(0, 50))
+def test_commutativity(n, s1, s2):
+    a, b = random_words(n, seed=s1), random_words(n, seed=s2 + 1000)
+    for op in ("and", "or", "xor"):
+        r1, _ = ewah.logical_op(comp(a), comp(b), op)
+        r2, _ = ewah.logical_op(comp(b), comp(a), op)
+        np.testing.assert_array_equal(ewah.decompress(r1), ewah.decompress(r2))
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 300), st.integers(0, 50))
+def test_idempotence_and_annihilation(n, seed):
+    a = random_words(n, seed=seed)
+    ca = comp(a)
+    r_and, _ = ewah.logical_op(ca, ca, "and")
+    np.testing.assert_array_equal(ewah.decompress(r_and), a)
+    r_xor, _ = ewah.logical_op(ca, ca, "xor")
+    assert ewah.decompress(r_xor).sum() == 0
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 300), st.integers(0, 30), st.integers(0, 30),
+       st.integers(0, 30))
+def test_de_morgan(n, s1, s2, s3):
+    """(A AND B) OR C == NOT(NOT(A AND B) AND NOT C) — via XOR with ones."""
+    a, b, c = (random_words(n, seed=s) for s in (s1, s2 + 100, s3 + 200))
+    ones = np.full(n, 0xFFFFFFFF, dtype=np.uint32)
+    ab, _ = ewah.logical_op(comp(a), comp(b), "and")
+    lhs, _ = ewah.logical_op(ab, comp(c), "or")
+    nab, _ = ewah.logical_op(ab, comp(ones), "xor")
+    nc, _ = ewah.logical_op(comp(c), comp(ones), "xor")
+    inner, _ = ewah.logical_op(nab, nc, "and")
+    rhs, _ = ewah.logical_op(inner, comp(ones), "xor")
+    np.testing.assert_array_equal(ewah.decompress(lhs), ewah.decompress(rhs))
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 300), st.integers(0, 30), st.integers(0, 30))
+def test_associativity_many(n, s1, s2):
+    a, b, c = (random_words(n, seed=s) for s in (s1, s1 + 7, s2 + 99))
+    r1, _ = ewah.logical_many([comp(a), comp(b), comp(c)], "or")
+    bc, _ = ewah.logical_op(comp(b), comp(c), "or")
+    r2, _ = ewah.logical_op(comp(a), bc, "or")
+    np.testing.assert_array_equal(ewah.decompress(r1), ewah.decompress(r2))
