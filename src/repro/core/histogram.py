@@ -8,7 +8,10 @@ import numpy as np
 def column_histogram(col: np.ndarray, n_values: int | None = None) -> np.ndarray:
     """Frequency f(v) of each attribute value id in a column."""
     col = np.asarray(col)
-    n_values = int(col.max()) + 1 if n_values is None else n_values
+    if n_values is None:
+        # col.max() raises on zero-length input; an empty column simply has
+        # no observed values, i.e. a zero-length histogram
+        n_values = int(col.max()) + 1 if col.size else 0
     return np.bincount(col, minlength=n_values)
 
 

@@ -1,0 +1,11 @@
+"""Distributed layer: placement (sharding) and fault tolerance (checkpoint)."""
+
+from . import checkpoint, sharding
+from .sharding import (batch_shardings, cache_shardings, opt_shardings,
+                       param_shardings, replicated)
+
+__all__ = [
+    "checkpoint", "sharding",
+    "batch_shardings", "cache_shardings", "opt_shardings",
+    "param_shardings", "replicated",
+]

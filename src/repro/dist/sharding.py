@@ -1,0 +1,131 @@
+"""Distributed placement over the ("data", "model") mesh.
+
+Translates the models' *logical* axis annotations (models/common.py
+DEFAULT_RULES) into concrete ``jax.sharding.NamedSharding`` trees that the
+launchers hand to ``jax.jit`` as in/out shardings:
+
+  * ``param_shardings`` — tensor parallelism: FFN ("ff"), attention heads
+    ("heads"), vocab/embedding ("vocab") and expert ("experts") dims land on
+    the "model" axis; everything else is replicated.
+  * ``opt_shardings``   — ZeRO-1: AdamW moments inherit the parameter
+    sharding and are additionally sharded over the "data" axis along the
+    first replicated dimension it divides, so optimizer memory scales down
+    with data parallelism.
+  * ``batch_shardings`` — train / prefill / decode batches split on the
+    data axes (("pod", "data") when a pod axis exists).
+  * ``cache_shardings`` — decode KV cache / SSM state placement per
+    ``transformer.cache_axes``.
+
+All functions are pure metadata: no device allocation happens here, so they
+are safe to call under ``jax.eval_shape`` and inside an already-active
+``ShardingCtx`` (the context is re-entrant).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..models import transformer
+from ..models.common import DEFAULT_RULES, ShardingCtx, logical_to_spec
+
+
+def replicated(mesh) -> NamedSharding:
+    """Fully-replicated placement (scalars, small broadcast state)."""
+    return NamedSharding(mesh, P())
+
+
+def _shardings_from_axes(mesh, axes_tree, rules=None):
+    """Map a pytree of logical-axis tuples to NamedShardings."""
+    with ShardingCtx(mesh, rules):
+        return jax.tree.map(
+            lambda ax: NamedSharding(mesh, logical_to_spec(ax)),
+            axes_tree, is_leaf=lambda x: isinstance(x, tuple))
+
+
+def param_shardings(mesh, cfg, rules=None):
+    """NamedSharding tree mirroring ``transformer.init_params(key, cfg)``."""
+    return _shardings_from_axes(mesh, transformer.params_axes(cfg), rules)
+
+
+def _mesh_axes_size(mesh, axis) -> int:
+    axes = axis if isinstance(axis, tuple) else (axis,)
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return size
+
+
+def _zero_axis(mesh, rules):
+    merged = dict(DEFAULT_RULES)
+    if rules:
+        merged.update(rules)
+    zero = merged.get("opt_zero")
+    if isinstance(zero, tuple):
+        zero = tuple(a for a in zero if a in mesh.axis_names) or None
+    elif zero is not None and zero not in mesh.axis_names:
+        zero = None
+    return zero
+
+
+def _zero1_sharding(sharding, shape, mesh, zero):
+    """Extend a param sharding with the ZeRO axis on the first replicated
+    dimension it divides (moments stay addressable without padding)."""
+    spec = list(sharding.spec) + [None] * (len(shape) - len(sharding.spec))
+    dsize = _mesh_axes_size(mesh, zero)
+    if dsize > 1:
+        for i, dim in enumerate(shape):
+            if spec[i] is None and dim % dsize == 0:
+                spec[i] = zero
+                break
+    return NamedSharding(mesh, P(*spec))
+
+
+def opt_shardings(mesh, cfg, rules=None):
+    """NamedSharding tree mirroring ``init_opt_state(params)``: ZeRO-1
+    moments ("m"/"v"), replicated step counter."""
+    p_sh = param_shardings(mesh, cfg, rules)
+    zero = _zero_axis(mesh, rules)
+    if zero is None:
+        m_sh = p_sh
+    else:
+        shapes = jax.eval_shape(
+            lambda k: transformer.init_params(k, cfg),
+            jax.ShapeDtypeStruct((2,), jnp.uint32))
+        m_sh = jax.tree.map(
+            lambda sh, s: _zero1_sharding(sh, s.shape, mesh, zero),
+            p_sh, shapes)
+    return {"m": m_sh, "v": m_sh, "step": replicated(mesh)}
+
+
+def batch_shardings(mesh, cfg, kind: str, rules=None):
+    """Input-batch placements for one step kind.
+
+    kind: "train" (inputs+labels), "prefill" (inputs only), or
+    "decode"/"serve" (single-token ids).  Optional modality keys
+    (patches / mrope_positions) appear exactly when the config uses them;
+    callers with plainer batches pop what they don't feed.
+    """
+    with ShardingCtx(mesh, rules):
+        def ns(*axes):
+            return NamedSharding(mesh, logical_to_spec(axes))
+
+        if kind in ("train", "prefill"):
+            sh = {"inputs": ns("batch", "seq")}
+            if kind == "train":
+                sh["labels"] = ns("batch", "seq")
+            if cfg.frontend != "none":
+                sh["patches"] = ns("batch", None, "embed")
+            if cfg.family == "vlm":
+                sh["mrope_positions"] = ns(None, "batch", "seq")
+            return sh
+        if kind in ("decode", "serve"):
+            return {"tokens": ns("batch", None)}
+        raise ValueError(f"unknown batch kind: {kind!r}")
+
+
+def cache_shardings(mesh, cfg, rules=None):
+    """NamedSharding tree mirroring ``transformer.init_decode_cache``."""
+    return _shardings_from_axes(mesh, transformer.cache_axes(cfg), rules)

@@ -230,6 +230,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, hlo_dir=None,
             t_compile = time.time()
             mem = compiled.memory_analysis()
             cost = compiled.cost_analysis()
+            if isinstance(cost, (list, tuple)):  # jax<0.5 returns [dict]
+                cost = cost[0] if cost else {}
             hlo = compiled.as_text()
         coll = collective_stats(hlo)
         coll_light = {k: v for k, v in coll.items() if k != "ops"}

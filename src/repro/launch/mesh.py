@@ -19,3 +19,19 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_debug_mesh(data: int = 1, model: int = 1):
     """Tiny mesh for CPU tests (requires the host-device count to allow it)."""
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_cli_mesh(spec: str | None = None):
+    """Mesh from a "data,model" CLI spec; default is all devices data-parallel.
+
+    Shared by the train/serve launchers so both planes agree on axis names.
+    """
+    if spec:
+        try:
+            d, m = (int(x) for x in spec.split(","))
+        except ValueError:
+            raise SystemExit(
+                f"--mesh expects 'data,model' (e.g. '4,2'), got {spec!r}")
+    else:
+        d, m = len(jax.devices()), 1
+    return jax.make_mesh((d, m), ("data", "model"))

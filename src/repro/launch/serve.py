@@ -19,7 +19,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
+from repro.dist.sharding import (batch_shardings, cache_shardings,
+                                 param_shardings, replicated)
+from repro.launch.mesh import make_cli_mesh
 from repro.models import transformer
+from repro.models.common import ShardingCtx
 from repro.serve.prefill import prefill_with_cache
 from repro.train import serve_step
 
@@ -63,42 +67,63 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--gen-tokens", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--mesh", default=None,
+                    help="data,model (default: all devices data-parallel)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = cfg.smoke()
     rng = np.random.default_rng(0)
-    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
 
-    lengths = make_requests(args.requests, rng)
-    for mode in (False, True):
-        batches = pack_batches(lengths, args.batch, histogram_aware=mode)
-        waste = padding_waste(lengths, batches)
-        print(f"packing histogram_aware={mode}: padding waste {waste:.1%}")
+    mesh = make_cli_mesh(args.mesh)
+    dp = mesh.shape["data"]
+    # batches smaller than the data axis fall back to replication
+    rules = {"batch": None} if args.batch % dp else None
 
-    batches = pack_batches(lengths, args.batch, histogram_aware=True)
-    step = jax.jit(partial(serve_step, cfg=cfg))
-    prefill = jax.jit(partial(prefill_with_cache, cfg=cfg,
-                              max_len=args.max_len))
-    t0 = time.time()
-    generated = 0
-    for bi, idx in enumerate(batches):
-        b = len(idx)
-        # pad to a 16-token bucket so jit reuses compiled prefill variants
-        prompt_len = min(-(-int(lengths[idx].max()) // 16) * 16,
-                         args.max_len - args.gen_tokens)
-        prompts = rng.integers(0, cfg.vocab_size, size=(b, prompt_len),
-                               dtype=np.int32)
-        # fused prefill: one forward pass fills the whole KV cache
-        logits, cache = prefill(params, tokens=jnp.asarray(prompts))
-        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-        cache_len = jnp.int32(prompt_len)
-        generated += b
-        for t in range(args.gen_tokens - 1):
-            tok, cache = step(params, tok, cache, cache_len)
-            cache_len += 1
+    with ShardingCtx(mesh, rules):
+        p_sh = param_shardings(mesh, cfg, rules=rules)
+        c_sh = cache_shardings(mesh, cfg, rules=rules)
+        tok_sh = batch_shardings(mesh, cfg, "decode", rules=rules)["tokens"]
+        params = jax.jit(lambda k: transformer.init_params(k, cfg),
+                         out_shardings=p_sh)(jax.random.PRNGKey(0))
+
+        lengths = make_requests(args.requests, rng)
+        for mode in (False, True):
+            batches = pack_batches(lengths, args.batch, histogram_aware=mode)
+            waste = padding_waste(lengths, batches)
+            print(f"packing histogram_aware={mode}: padding waste {waste:.1%}")
+
+        batches = pack_batches(lengths, args.batch, histogram_aware=True)
+        step = jax.jit(partial(serve_step, cfg=cfg),
+                       in_shardings=(p_sh, tok_sh, c_sh, replicated(mesh)),
+                       out_shardings=(tok_sh, c_sh), donate_argnums=(2,))
+        prefill = jax.jit(
+            lambda p, toks: prefill_with_cache(p, cfg, toks, args.max_len),
+            in_shardings=(p_sh, tok_sh), out_shardings=(None, c_sh))
+        t0 = time.time()
+        generated = 0
+        for bi, idx in enumerate(batches):
+            b = len(idx)
+            # ragged tail: pad to the full batch (one compiled shape, and the
+            # data axis always divides); surplus rows are dropped on count
+            if b < args.batch:
+                idx = np.concatenate([idx, np.repeat(idx[-1], args.batch - b)])
+            # pad to a 16-token bucket so jit reuses compiled prefill variants
+            prompt_len = min(-(-int(lengths[idx].max()) // 16) * 16,
+                             args.max_len - args.gen_tokens)
+            prompts = rng.integers(0, cfg.vocab_size,
+                                   size=(args.batch, prompt_len),
+                                   dtype=np.int32)
+            # fused prefill: one forward pass fills the whole KV cache
+            logits, cache = prefill(params, jnp.asarray(prompts))
+            tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+            cache_len = jnp.int32(prompt_len)
             generated += b
+            for t in range(args.gen_tokens - 1):
+                tok, cache = step(params, tok, cache, cache_len)
+                cache_len += 1
+                generated += b
     dt = time.time() - t0
     print(f"served {len(lengths)} requests, {generated} tokens "
           f"in {dt:.1f}s ({generated/dt:.1f} tok/s)")

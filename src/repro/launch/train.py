@@ -28,6 +28,7 @@ from repro.data.tokens import TokenPipeline
 from repro.dist import checkpoint as ckpt
 from repro.dist.sharding import (batch_shardings, opt_shardings,
                                  param_shardings)
+from repro.launch.mesh import make_cli_mesh
 from repro.models import transformer
 from repro.models.common import ShardingCtx
 from repro.optim import OptConfig, init_opt_state
@@ -77,15 +78,6 @@ class StragglerMonitor:
         return False
 
 
-def build_mesh(spec: str | None):
-    n = len(jax.devices())
-    if spec:
-        d, m = (int(x) for x in spec.split(","))
-    else:
-        d, m = n, 1
-    return jax.make_mesh((d, m), ("data", "model"))
-
-
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="tinyllama-1.1b")
@@ -112,7 +104,7 @@ def main(argv=None):
         cfg = cfg.smoke()
     cfg = replace(cfg, remat=True)
 
-    mesh = build_mesh(args.mesh)
+    mesh = make_cli_mesh(args.mesh)
     opt_cfg = OptConfig(lr=args.lr, total_steps=max(args.steps, 10),
                         warmup_steps=max(2, args.steps // 20))
 
@@ -148,6 +140,12 @@ def main(argv=None):
             if "pipeline" in extra:
                 pipeline.restore(extra["pipeline"])
             print(f"[train] resumed from step {start_step}", flush=True)
+            if start_step >= args.steps:
+                # restart of an already-finished run (cluster monitors do
+                # this); exit cleanly instead of entering an empty loop
+                print(f"[train] already at step {start_step} >= --steps "
+                      f"{args.steps}; nothing to do", flush=True)
+                return []
 
         hb = Heartbeat(args.heartbeat) if args.heartbeat else None
         straggler = StragglerMonitor()

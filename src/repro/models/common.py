@@ -47,11 +47,12 @@ class ShardingCtx:
             self.rules.update(rules)
 
     def __enter__(self):
+        self._prev = current_ctx()
         _ctx.current = self
         return self
 
     def __exit__(self, *a):
-        _ctx.current = None
+        _ctx.current = self._prev
 
 
 def current_ctx():
@@ -80,7 +81,9 @@ def lshard(x: jax.Array, *axes):
     ctx = current_ctx()
     if ctx is None or x.ndim != len(axes):
         return x
-    return jax.lax.with_sharding_constraint(x, logical_to_spec(axes))
+    # NamedSharding (not a bare spec) so no enclosing `with mesh:` is needed
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(ctx.mesh, logical_to_spec(axes)))
 
 
 def spec_for(axes) -> P:

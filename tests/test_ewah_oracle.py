@@ -1,0 +1,112 @@
+"""Randomized EWAH oracle agreement: the vectorized JAX codec vs ewah.py.
+
+~200 seeded cases sweep bit densities 0.001-0.999 and stream lengths around
+word and run-capacity boundaries.  For every case the JAX compressor, its
+in-graph size-only path, and the numpy oracle must agree *exactly*; the
+oracle itself must round-trip.  Lengths beyond the vectorized path's
+single-marker restriction (clean runs >= MAX_CLEAN, dirty runs >= MAX_DIRTY)
+exercise the oracle's multi-marker emission.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import ewah, ewah_jax
+
+DENSITIES = [0.001, 0.01, 0.05, 0.2, 0.5, 0.8, 0.95, 0.99, 0.999]
+# crossing the 32-bit word boundary (31/32/33) and generic lengths
+LENGTHS = [1, 2, 31, 32, 33, 100, 1000, 4095]
+SEEDS = [0, 1, 2]
+
+
+def density_words(n_words, density, seed):
+    """Pack Bernoulli(density) bits: sparse -> clean-0 runs, dense -> clean-1."""
+    rng = np.random.default_rng(seed)
+    bits = rng.random(n_words * ewah.WORD_BITS) < density
+    return ewah.pack_bits(bits)
+
+
+# 8 lengths x 9 densities x 3 seeds = 216 randomized cases
+@pytest.mark.parametrize("n", LENGTHS)
+@pytest.mark.parametrize("density", DENSITIES)
+@pytest.mark.parametrize("seed", SEEDS)
+def test_jax_matches_oracle(n, density, seed):
+    words = density_words(n, density, seed * 7919 + n)
+    expect = ewah.compress(words)
+    # oracle self-consistency: exact round-trip
+    np.testing.assert_array_equal(ewah.decompress(expect, n), words)
+    # vectorized compressor: same stream, same length (capacity n+2 always
+    # suffices: worst case is a leading dirty marker + alternating groups)
+    stream, length = ewah_jax.compress(words, n + 2)
+    assert int(length) == len(expect)
+    np.testing.assert_array_equal(np.asarray(stream)[: int(length)], expect)
+    # in-graph size-only path (what the sorting heuristics minimize)
+    assert int(ewah_jax.compressed_size(words)) == len(expect)
+
+
+def test_jax_at_max_supported_length():
+    """The vectorized path's documented ceiling: exactly MAX_DIRTY words."""
+    n = ewah.MAX_DIRTY
+    words = density_words(n, 0.5, seed=11)
+    expect = ewah.compress(words)
+    stream, length = ewah_jax.compress(words, n + 2)
+    assert int(length) == len(expect)
+    np.testing.assert_array_equal(np.asarray(stream)[: int(length)], expect)
+    assert int(ewah_jax.compressed_size(words)) == len(expect)
+
+
+@pytest.mark.parametrize("ctype", [0, 1])
+@pytest.mark.parametrize("extra", [-1, 0, 1, 17])
+def test_oracle_clean_run_crosses_max_clean(ctype, extra):
+    """Clean runs longer than one marker's 16-bit capacity split correctly."""
+    n = ewah.MAX_CLEAN + extra
+    pat = np.uint32(0xFFFFFFFF) if ctype else np.uint32(0)
+    words = np.full(n, pat, dtype=np.uint32)
+    words = np.concatenate([words, np.asarray([5], dtype=np.uint32)])
+    stream = ewah.compress(words)
+    expect_markers = -(-n // ewah.MAX_CLEAN)  # ceil
+    assert len(stream) == expect_markers + 1  # + the dirty tail word
+    np.testing.assert_array_equal(ewah.decompress(stream, len(words)), words)
+
+
+@pytest.mark.parametrize("extra", [-1, 0, 1, 23])
+def test_oracle_dirty_run_crosses_max_dirty(extra):
+    """Dirty runs longer than one marker's 15-bit capacity chain markers."""
+    n = ewah.MAX_DIRTY + extra
+    rng = np.random.default_rng(extra + 100)
+    words = rng.integers(2, 0xFFFFFFFF - 1, size=n, dtype=np.uint32)
+    stream = ewah.compress(words)
+    expect_markers = max(1, -(-n // ewah.MAX_DIRTY))
+    assert len(stream) == n + expect_markers
+    np.testing.assert_array_equal(ewah.decompress(stream, n), words)
+
+
+def test_oracle_mixed_overlong_runs_roundtrip():
+    """Clean-1 > MAX_CLEAN, then dirty > MAX_DIRTY, then clean-0 tail."""
+    rng = np.random.default_rng(7)
+    words = np.concatenate([
+        np.full(ewah.MAX_CLEAN + 3, 0xFFFFFFFF, dtype=np.uint32),
+        rng.integers(2, 0xFFFFFFFF - 1, size=ewah.MAX_DIRTY + 5, dtype=np.uint32),
+        np.zeros(40, dtype=np.uint32),
+    ])
+    stream = ewah.compress(words)
+    np.testing.assert_array_equal(ewah.decompress(stream, len(words)), words)
+    assert len(stream) < len(words)  # markers amortize over the clean run
+
+
+@pytest.mark.parametrize("n", [1, 33, 4095])
+@pytest.mark.parametrize("pattern", ["zeros", "ones", "alternating"])
+def test_degenerate_patterns(n, pattern):
+    if pattern == "zeros":
+        words = np.zeros(n, dtype=np.uint32)
+    elif pattern == "ones":
+        words = np.full(n, 0xFFFFFFFF, dtype=np.uint32)
+    else:  # word-level alternation: every word its own run
+        words = np.where(np.arange(n) % 2 == 0, np.uint32(0xAAAAAAAA),
+                         np.uint32(0)).astype(np.uint32)
+    expect = ewah.compress(words)
+    stream, length = ewah_jax.compress(words, n + 2)
+    assert int(length) == len(expect)
+    np.testing.assert_array_equal(np.asarray(stream)[: int(length)], expect)
+    assert int(ewah_jax.compressed_size(words)) == len(expect)
+    np.testing.assert_array_equal(ewah.decompress(expect, n), words)

@@ -1,0 +1,38 @@
+"""Histogram edge cases (regression: empty columns crashed column_histogram)."""
+
+import numpy as np
+
+from repro.core.histogram import column_histogram, freq_rank_keys, value_order
+
+EMPTY = np.array([], dtype=np.int64)
+
+
+def test_empty_column_infers_zero_length_histogram():
+    # regression: col.max() on a zero-length array raised ValueError
+    hist = column_histogram(EMPTY)
+    assert hist.shape == (0,)
+
+
+def test_empty_column_explicit_n_values():
+    hist = column_histogram(EMPTY, n_values=5)
+    np.testing.assert_array_equal(hist, np.zeros(5, dtype=np.int64))
+
+
+def test_empty_column_freq_rank_keys():
+    hist = column_histogram(EMPTY)
+    assert freq_rank_keys(EMPTY, hist).shape == (0,)
+
+
+def test_counts_match_bincount():
+    col = np.array([3, 0, 3, 1, 3, 1])
+    np.testing.assert_array_equal(column_histogram(col), [1, 2, 0, 3])
+    # explicit n_values pads the tail with zeros
+    np.testing.assert_array_equal(column_histogram(col, n_values=6),
+                                  [1, 2, 0, 3, 0, 0])
+
+
+def test_value_order_freq_descending_with_id_tiebreak():
+    hist = np.array([2, 5, 2, 7])
+    order = value_order(hist, "freq")
+    np.testing.assert_array_equal(order, [3, 1, 0, 2])
+    assert np.all(np.diff(hist[order]) <= 0)
