@@ -8,6 +8,7 @@ import itertools
 
 import numpy as np
 
+from repro.core import IndexSpec
 from repro.core.bitmap_index import index_size_report
 from repro.core.column_order import order_columns
 from repro.data.tables import make_uniform_table, make_zipf_table
@@ -16,8 +17,8 @@ from repro.data.tables import make_uniform_table, make_zipf_table
 def all_orderings_size(cols, k):
     out = {}
     for perm in itertools.permutations(range(len(cols))):
-        rep = index_size_report(
-            cols, k=k, row_order="lex", column_order=list(perm))
+        rep = index_size_report(cols, IndexSpec(
+            k=k, row_order="lex", column_order=perm))
         out["".join(str(p + 1) for p in perm)] = rep["total_words"]
     return out
 

@@ -4,6 +4,7 @@ into existing runs'); unsorted growth is linear."""
 
 from __future__ import annotations
 
+from repro.core import IndexSpec
 from repro.core.bitmap_index import index_size_report
 from repro.data.tables import make_kjv4grams_like
 
@@ -16,8 +17,8 @@ def run(quick=False):
     for f in fractions:
         n = int(n_max * f)
         cols = [c[:n] for c in cols_full]
-        srt = index_size_report(cols, k=1, row_order="lex")
-        uns = index_size_report(cols, k=1, row_order="unsorted")
+        srt = index_size_report(cols, IndexSpec(k=1, row_order="lex"))
+        uns = index_size_report(cols, IndexSpec(k=1, row_order="unsorted"))
         rows.append({"rows": n, "sorted_words": srt["total_words"],
                      "unsorted_words": uns["total_words"]})
     return rows

@@ -5,6 +5,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.core import IndexSpec
 from repro.core.bitmap_index import index_size_report
 from repro.data.tables import uniform_column, zipf_column
 
@@ -25,12 +26,12 @@ def run(n=199_523, quick=False):
     out = []
     for kind in ("census", "dbgen"):
         cols, cards = make_10d(n, kind=kind)
-        asc = index_size_report(cols, k=1, row_order="lex",
-                                column_order=list(range(10)))
-        desc = index_size_report(cols, k=1, row_order="lex",
-                                 column_order=list(range(9, -1, -1)))
-        uns = index_size_report(cols, k=1, row_order="unsorted",
-                                column_order=list(range(10)))
+        asc = index_size_report(cols, IndexSpec(
+            k=1, row_order="lex", column_order=tuple(range(10))))
+        desc = index_size_report(cols, IndexSpec(
+            k=1, row_order="lex", column_order=tuple(range(9, -1, -1))))
+        uns = index_size_report(cols, IndexSpec(
+            k=1, row_order="unsorted", column_order=tuple(range(10))))
         out.append({
             "dataset": kind, "cards": cards,
             "unsorted_words": uns["total_words"],

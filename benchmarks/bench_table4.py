@@ -3,6 +3,7 @@
 
 from __future__ import annotations
 
+from repro.core import IndexSpec
 from repro.core.bitmap_index import index_size_report
 from repro.data.tables import (make_census_like, make_dbgen_like,
                                make_kjv4grams_like, make_netflix_like)
@@ -32,7 +33,8 @@ def run(quick=False):
         for k in ks:
             row = {"dataset": name, "k": k}
             for mname, kw in methods.items():
-                rep = index_size_report(cols, k=k, column_order=order, **kw)
+                rep = index_size_report(cols, IndexSpec(
+                    k=k, column_order=tuple(order), **kw))
                 row[mname] = rep["total_words"]
             out.append(row)
     return out

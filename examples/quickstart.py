@@ -1,23 +1,27 @@
 """Quickstart: the paper in 60 lines.
 
 Builds EWAH-compressed bitmap indexes over a synthetic warehouse table,
-compares row-ordering heuristics (unsorted / lexicographic Gray-Lex /
-Gray-Frequency), picks the column order with the §4.3 histogram-aware
-heuristic, and runs compressed-domain equality queries.
+compares row-ordering strategies (unsorted / lexicographic Gray-Lex /
+Gray-Frequency) through the IndexSpec strategy registry, picks the column
+order with the §4.3 histogram-aware heuristic, and runs compressed-domain
+predicate queries (Eq / In / And) on both execution backends.
 
   PYTHONPATH=src python examples/quickstart.py
 """
 
 import numpy as np
 
-from repro.core import BitmapIndex, index_size_report
+from repro.core import (And, BitmapIndex, Eq, In, IndexSpec,
+                        index_size_report)
 from repro.core.column_order import heuristic_score
+from repro.core.strategies import strategy_names
 from repro.data.tables import make_census_like
 
 n = 100_000
 cols = make_census_like(n)
 cards = [int(c.max()) + 1 for c in cols]
 print(f"table: {n} rows, cardinalities {cards}")
+print(f"registered row orders: {', '.join(strategy_names('row_order'))}")
 
 print("\ncolumn-order heuristic scores (higher = sort earlier):")
 for i, c in enumerate(cards):
@@ -25,19 +29,26 @@ for i, c in enumerate(cards):
 
 print("\nindex sizes (32-bit words), k=1:")
 for method in ("unsorted", "lex", "grayfreq", "freqcomp"):
-    rep = index_size_report(cols, k=1, row_order=method)
+    rep = index_size_report(cols, IndexSpec(k=1, row_order=method))
     print(f"  {method:<10} {rep['total_words']:>10,} words "
           f"(column order {rep['column_order']})")
 
 print("\nk-of-N tradeoff (Gray-Frequency rows):")
 for k in (1, 2, 3, 4):
-    rep = index_size_report(cols, k=k, row_order="grayfreq")
+    rep = index_size_report(cols, IndexSpec(k=k, row_order="grayfreq"))
     print(f"  k={k}: {rep['total_words']:>10,} words, "
           f"{sum(rep['bitmaps'])} bitmaps")
 
-print("\nequality queries over the compressed index (k=2):")
-idx = BitmapIndex.build(cols, k=2, row_order="grayfreq")
-for col, val in ((0, 5), (1, 17), (2, 3)):
-    rows, scanned = idx.equality_query(col, val)
-    print(f"  col{idx.original_column(col)} == {val}: {len(rows):>6} rows, "
+print("\npredicate queries over the compressed index (k=2):")
+idx = BitmapIndex.build(cols, IndexSpec(k=2, row_order="grayfreq"))
+for pred in (Eq(0, 5), In(1, [3, 17, 40]), And(Eq(0, 5), Eq(2, 3))):
+    rows, scanned = idx.query(pred, backend="numpy")
+    print(f"  {pred}: {len(rows):>6} rows, "
           f"{scanned} compressed words scanned")
+
+print("\nnumpy vs jax backend (batched) on And(Eq, Eq):")
+preds = [And(Eq(0, v), Eq(2, 3)) for v in range(5)]
+np_rows = [r for r, _ in idx.query_many(preds, backend="numpy")]
+jax_rows = [r for r, _ in idx.query_many(preds, backend="jax")]
+agree = all(np.array_equal(a, b) for a, b in zip(np_rows, jax_rows))
+print(f"  {len(preds)} queries, row ids agree: {agree}")

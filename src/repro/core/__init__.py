@@ -1,17 +1,31 @@
 """Core: the paper's contribution — EWAH compression, k-of-N encodings,
-histogram-aware row/column reordering, compressed-domain logical ops."""
+histogram-aware row/column reordering, compressed-domain logical ops — behind
+one composable API: IndexSpec (strategy registry) -> BitmapIndex.build ->
+predicate algebra (query.Eq/In/Range/And/Or/Not) -> pluggable backends."""
 
-from . import column_order, encoding, ewah, histogram, index_size, sorting
+from . import (column_order, encoding, ewah, histogram, index_size, query,
+               sorting, strategies)
 from .bitmap_index import BitmapIndex, assign_codes, index_size_report
+from .query import And, Eq, In, Not, Or, Range
+from .strategies import IndexSpec
 
 __all__ = [
     "BitmapIndex",
+    "IndexSpec",
     "assign_codes",
     "index_size_report",
+    "And",
+    "Eq",
+    "In",
+    "Not",
+    "Or",
+    "Range",
     "column_order",
     "encoding",
     "ewah",
     "histogram",
     "index_size",
+    "query",
     "sorting",
+    "strategies",
 ]

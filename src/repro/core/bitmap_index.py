@@ -1,25 +1,36 @@
 """Compressed bitmap index over a table (paper §2-§4, Algorithm 1).
 
+Construction is driven by an :class:`~repro.core.strategies.IndexSpec`
+resolved through the strategy registry (row order, code enumeration, value
+policy, column order); queries go through the predicate algebra + planner in
+:mod:`repro.core.query`.
+
 Two paths:
-  * ``BitmapIndex`` materializes per-bitmap EWAH streams (supports equality
-    queries via compressed-domain logical AND) — used at query-benchmark
+  * ``BitmapIndex`` materializes per-bitmap EWAH streams (supports predicate
+    queries via compressed-domain logical ops) — used at query-benchmark
     scale.
   * ``index_size_report`` computes exact sizes only, in O(nck + L), for the
     multi-million-row size tables.
+
+The pre-IndexSpec string kwargs (``row_order=...`` etc.) still work as thin
+deprecation shims; see docs/query_api.md for the migration table.
 """
 
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field
 
 import numpy as np
 
 from . import ewah
-from .column_order import order_columns
-from .encoding import choose_N, clamp_k, gray_kofn_codes, lex_kofn_codes
-from .histogram import column_histogram, value_order
+from .encoding import choose_N, clamp_k
+from .histogram import column_histogram
 from .index_size import column_bitmap_sizes
-from .sorting import order_rows
+from .query import compile_plan, get_backend
+from .strategies import IndexSpec, get_strategy
+
+_UNSET = object()
 
 
 def assign_codes(
@@ -28,18 +39,17 @@ def assign_codes(
 ) -> tuple[np.ndarray, int, int]:
     """Build the (n_values, k) bitmap-position code table for one column.
 
-    code_order: 'gray' (Gray-Lex / Gray-Frequency) or 'lex' (Alpha-Lex).
-    value_policy: 'alpha' or 'freq' — which value gets the rank-i code.
+    code_order / value_policy are registry strategy names (built-ins:
+    'gray'/'lex' enumeration, 'alpha'/'freq' value policy); unknown names
+    raise ValueError listing what is registered.
     Returns (codes, N, k_effective).
     """
     k_eff = clamp_k(n_values, k)
     N = choose_N(n_values, k_eff)
-    enum = gray_kofn_codes if code_order == "gray" else lex_kofn_codes
+    enum = get_strategy("code_order", code_order)
+    policy = get_strategy("value_policy", value_policy)
     ordered_codes = enum(N, k_eff, n_values)
-    if value_policy == "alpha" or hist is None:
-        order = np.arange(n_values)
-    else:
-        order = value_order(hist, value_policy)
+    order = np.arange(n_values) if hist is None else np.asarray(policy(hist))
     codes = np.empty((n_values, k_eff), dtype=np.int32)
     codes[order] = ordered_codes
     return codes, N, k_eff
@@ -56,62 +66,105 @@ class ColumnIndex:
 
 @dataclass
 class BitmapIndex:
-    """An EWAH-compressed k-of-N bitmap index over an integer-coded table."""
+    """An EWAH-compressed k-of-N bitmap index over an integer-coded table.
+
+    ``row_perm`` / ``col_perm`` are public: the row and column permutations
+    the build applied (query row ids live in ``row_perm`` space; map back to
+    original rows with ``index.row_perm[row_ids]``).
+    """
 
     n_rows: int
     columns: list = field(default_factory=list)  # ColumnIndex per table column
+    spec: IndexSpec | None = None
+    row_perm: np.ndarray | None = None
+    col_perm: np.ndarray | None = None
+
+    # deprecated private aliases (pre-PR-2 spelling)
+    @property
+    def _row_perm(self):
+        return self.row_perm
+
+    @property
+    def _col_perm(self):
+        return self.col_perm
 
     # -- construction ------------------------------------------------------
 
     @staticmethod
     def build(
         table_cols: list,
-        k: int = 1,
-        row_order: str = "lex",
-        code_order: str = "gray",
-        value_policy: str | None = None,
-        column_order: str | list | None = "heuristic",
+        spec: IndexSpec | None = None,
+        *,
         materialize: bool = True,
+        k=_UNSET,
+        row_order=_UNSET,
+        code_order=_UNSET,
+        value_policy=_UNSET,
+        column_order=_UNSET,
     ) -> "BitmapIndex":
         """End-to-end Algorithm-1-style construction.
 
         table_cols: list of (n,) integer value-id arrays (0-based, dense ids).
-        row_order: 'unsorted' | 'lex' | 'grayfreq' | 'freqcomp'.
-        code_order: 'gray' | 'lex' bitmap-code enumeration order.
-        value_policy: which values get low-rank codes; default 'freq' when
-          row_order='grayfreq' else 'alpha'.
-        column_order: 'heuristic' (paper §4.3 score), None (as given), or an
-          explicit permutation of column indices.
+        spec: IndexSpec naming the row-order / code-order / value-policy /
+          column-order strategies (see repro.core.strategies).
+
+        The keyword arguments after ``materialize`` are the deprecated
+        pre-IndexSpec API; they are translated via
+        ``IndexSpec.from_legacy_kwargs`` and will be removed.
         """
+        legacy = {
+            name: v
+            for name, v in (
+                ("k", k), ("row_order", row_order), ("code_order", code_order),
+                ("value_policy", value_policy), ("column_order", column_order),
+            )
+            if v is not _UNSET
+        }
+        if spec is not None and not isinstance(spec, IndexSpec):
+            raise TypeError(
+                f"second argument must be an IndexSpec, got {spec!r}; the old "
+                "positional form build(cols, k) is gone — pass "
+                "IndexSpec(k=...) or the (deprecated) k=... keyword")
+        if legacy:
+            if spec is not None:
+                raise TypeError(
+                    "pass either an IndexSpec or legacy string kwargs, not both")
+            warnings.warn(
+                "BitmapIndex.build(k=..., row_order=..., ...) string kwargs are "
+                "deprecated; pass an IndexSpec (repro.core.IndexSpec)",
+                DeprecationWarning, stacklevel=2)
+            spec = IndexSpec.from_legacy_kwargs(**legacy)
+        spec = (spec or IndexSpec()).validate()
+        strategies = spec.strategies()
+
         table_cols = [np.asarray(c) for c in table_cols]
         n = len(table_cols[0])
         cards = [int(c.max()) + 1 for c in table_cols]
-        if value_policy is None:
-            value_policy = "freq" if row_order == "grayfreq" else "alpha"
 
-        if column_order == "heuristic":
-            perm_cols = order_columns(cards, k)
-        elif column_order is None:
-            perm_cols = np.arange(len(table_cols))
-        else:
-            perm_cols = np.asarray(column_order)
+        if strategies["column_order"] is not None:
+            perm_cols = np.asarray(strategies["column_order"](cards, spec.k))
+        else:  # explicit permutation carried by the spec
+            perm_cols = np.asarray(spec.column_order)
         cols = [table_cols[i] for i in perm_cols]
         cards = [cards[i] for i in perm_cols]
 
-        row_perm = order_rows(cols, row_order)
+        # histograms are row-permutation invariant: compute once, share with
+        # the row-order strategy and the value policy
+        hists = [column_histogram(c, card) for c, card in zip(cols, cards)]
+        row_perm = strategies["row_order"](cols, hists)
         cols = [c[row_perm] for c in cols]
 
-        idx = BitmapIndex(n_rows=n)
-        for col, card in zip(cols, cards):
-            hist = column_histogram(col, card)
-            codes, N, k_eff = assign_codes(card, k, code_order, value_policy, hist)
+        idx = BitmapIndex(n_rows=n, spec=spec, row_perm=np.asarray(row_perm),
+                          col_perm=perm_cols)
+        value_policy_name = spec.resolved_value_policy()
+        for col, card, hist in zip(cols, cards, hists):
+            codes, N, k_eff = assign_codes(
+                card, spec.k, spec.code_order, value_policy_name, hist)
             ci = ColumnIndex(codes=codes, N=N, k=k_eff)
             ci.sizes, _, _ = column_bitmap_sizes(col, codes, N)
             if materialize:
                 ci.streams = _materialize_streams(col, codes, N, n)
             idx.columns.append(ci)
-        idx._row_perm = row_perm
-        idx._col_perm = perm_cols
         return idx
 
     # -- stats -------------------------------------------------------------
@@ -124,25 +177,38 @@ class BitmapIndex:
 
     # -- queries -----------------------------------------------------------
 
-    def equality_query(self, col_idx: int, value: int):
-        """Rows where column == value: AND of the value's k bitmaps.
+    def query(self, pred, backend: str = "numpy", names=None, **backend_opts):
+        """Run a predicate (Eq/In/Range/And/Or/Not over *original* column
+        positions, or names via ``names``) through the planner.
+
+        Returns (row_ids, words_scanned); row ids are positions in the
+        reordered row space (``self.row_perm[row_ids]`` maps back).
+        """
+        plan = compile_plan(self, pred, names=names)
+        return get_backend(backend, **backend_opts).execute(plan)
+
+    def query_many(self, preds, backend: str = "numpy", names=None,
+                   **backend_opts):
+        """Batch-execute many predicates; on the jax backend, same-shape
+        plans share one padded device dispatch.  Returns a list of
+        (row_ids, words_scanned)."""
+        plans = [compile_plan(self, p, names=names) for p in preds]
+        return get_backend(backend, **backend_opts).execute_many(plans)
+
+    def equality_query(self, col_idx: int, value: int, backend: str = "numpy"):
+        """Rows where column == value (planner-compiled AND of the value's
+        k bitmaps).
 
         Returns (row_ids, words_scanned).  col_idx refers to the *reordered*
         column position (use .original_column(col_idx) for the mapping).
         """
-        ci = self.columns[col_idx]
-        assert ci.streams is not None, "index built with materialize=False"
-        streams = [ci.streams[b] for b in ci.codes[value]]
-        streams = sorted(streams, key=len)
-        if len(streams) == 1:
-            result, scanned = streams[0], len(streams[0])
-        else:
-            result, scanned = ewah.logical_many(streams, "and")
-        bits = ewah.unpack_bits(ewah.decompress(result), self.n_rows)
-        return np.flatnonzero(bits), scanned
+        from .query import Eq
+
+        return self.query(Eq(self.original_column(col_idx), value),
+                          backend=backend)
 
     def original_column(self, reordered_idx: int) -> int:
-        return int(self._col_perm[reordered_idx])
+        return int(self.col_perm[reordered_idx])
 
 
 def _materialize_streams(col, codes, N, n_rows):
@@ -170,18 +236,29 @@ def _materialize_streams(col, codes, N, n_rows):
 
 
 def index_size_report(
-    table_cols, k=1, row_order="lex", code_order="gray",
-    value_policy=None, column_order="heuristic",
+    table_cols,
+    spec: IndexSpec | None = None,
+    *,
+    k=_UNSET,
+    row_order=_UNSET,
+    code_order=_UNSET,
+    value_policy=_UNSET,
+    column_order=_UNSET,
 ) -> dict:
     """Size-only construction (no bitmap materialization)."""
-    idx = BitmapIndex.build(
-        table_cols, k=k, row_order=row_order, code_order=code_order,
-        value_policy=value_policy, column_order=column_order, materialize=False,
-    )
+    legacy = {
+        name: v
+        for name, v in (
+            ("k", k), ("row_order", row_order), ("code_order", code_order),
+            ("value_policy", value_policy), ("column_order", column_order),
+        )
+        if v is not _UNSET
+    }
+    idx = BitmapIndex.build(table_cols, spec, materialize=False, **legacy)
     return {
         "total_words": idx.size_words(),
         "per_column_words": idx.per_column_words(),
-        "column_order": [int(i) for i in idx._col_perm],
+        "column_order": [int(i) for i in idx.col_perm],
         "k_effective": [c.k for c in idx.columns],
         "bitmaps": [c.N for c in idx.columns],
     }

@@ -1,0 +1,461 @@
+"""Predicate algebra, query planner, and pluggable execution backends.
+
+The one query path from predicate to row ids::
+
+    Eq / In / Range / And / Or / Not          (algebra, column = original id)
+        -> compile_plan(index, pred)          (cost-ordered EWAH op tree)
+        -> get_backend("numpy" | "jax")       (execution strategy)
+        -> (row_ids, words_scanned)
+
+Planner.  A predicate compiles against a materialized ``BitmapIndex`` into a
+tree over *leaf* EWAH streams: ``Eq`` on a k-of-N column is an AND fan-in of
+its k bitmaps, ``In``/``Range`` are OR fan-ins of those, and nested same-op
+nodes are flattened, so ``And(Eq, Eq)`` at k=2 becomes a single 4-stream AND
+fan-in.  Fan-in children are ordered smallest-estimated-size-first (leaf cost
+= compressed stream length), the paper's smallest-streams-first fold.
+
+Backends (pluggable via :func:`register_backend`):
+
+* ``numpy`` — compressed-domain streaming merges (``ewah.logical_op``),
+  never decompressing intermediates; ``words_scanned`` counts compressed
+  words the cursors actually visited (the paper's machine-independent cost).
+* ``jax``  — batched in-graph execution: leaf streams are padded to a
+  capacity bucket, decompressed with ``ewah_jax.decompress`` (vmapped over
+  queries x leaves), and fan-ins fold in word space through the Pallas
+  word-op kernel (``kernels.ops.wordops_fold``), many queries per dispatch.
+  ``words_scanned`` is the total compressed leaf words read.
+
+Backends agree on row ids; tests assert it (tests/test_query_plane.py).
+"""
+
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass
+from functools import lru_cache
+
+import numpy as np
+
+from . import ewah
+
+# ---------------------------------------------------------------------------
+# Predicate algebra
+# ---------------------------------------------------------------------------
+
+
+class Predicate:
+    """Base class; supports ``&``, ``|``, ``~`` sugar."""
+
+    __slots__ = ()
+
+    def __and__(self, other):
+        return And(self, other)
+
+    def __or__(self, other):
+        return Or(self, other)
+
+    def __invert__(self):
+        return Not(self)
+
+
+class Eq(Predicate):
+    """column == value.  ``col`` is the *original* table column (int
+    position or, when the index carries names, a column name)."""
+
+    __slots__ = ("col", "value")
+
+    def __init__(self, col, value):
+        self.col = col
+        self.value = int(value)
+
+    def __repr__(self):
+        return f"Eq({self.col!r}, {self.value})"
+
+
+class In(Predicate):
+    """column in values (OR of equalities)."""
+
+    __slots__ = ("col", "values")
+
+    def __init__(self, col, values):
+        self.col = col
+        self.values = tuple(int(v) for v in values)
+
+    def __repr__(self):
+        return f"In({self.col!r}, {self.values})"
+
+
+class Range(Predicate):
+    """lo <= column <= hi over dense value ids (both ends inclusive)."""
+
+    __slots__ = ("col", "lo", "hi")
+
+    def __init__(self, col, lo, hi):
+        self.col = col
+        self.lo = int(lo)
+        self.hi = int(hi)
+
+    def __repr__(self):
+        return f"Range({self.col!r}, {self.lo}, {self.hi})"
+
+
+class And(Predicate):
+    __slots__ = ("children",)
+
+    def __init__(self, *children):
+        if not children:
+            raise ValueError("And() needs at least one child predicate")
+        self.children = tuple(children)
+
+    def __repr__(self):
+        return f"And{self.children!r}"
+
+
+class Or(Predicate):
+    __slots__ = ("children",)
+
+    def __init__(self, *children):
+        if not children:
+            raise ValueError("Or() needs at least one child predicate")
+        self.children = tuple(children)
+
+    def __repr__(self):
+        return f"Or{self.children!r}"
+
+
+class Not(Predicate):
+    __slots__ = ("child",)
+
+    def __init__(self, child):
+        self.child = child
+
+    def __repr__(self):
+        return f"Not({self.child!r})"
+
+
+# ---------------------------------------------------------------------------
+# Plan
+# ---------------------------------------------------------------------------
+#
+# Node encodings (nested tuples, hashable for jit caching):
+#   ("leaf", i)                 -> plan.streams[i]
+#   ("not", child)              -> complement (XOR with all-ones)
+#   ("and"|"or", (children...)) -> fan-in, children cost-ordered
+
+
+@dataclass
+class Plan:
+    """A compiled, cost-ordered op tree over leaf EWAH streams."""
+
+    streams: list
+    root: tuple
+    n_rows: int
+
+    @property
+    def n_words(self) -> int:
+        return (self.n_rows + ewah.WORD_BITS - 1) // ewah.WORD_BITS
+
+    def leaf_words(self) -> int:
+        """Total compressed words across leaves (the jax-backend scan cost)."""
+        return int(sum(len(s) for s in self.streams))
+
+    def signature(self) -> tuple:
+        """Structural shape (ops + leaf placeholders) — equal signatures can
+        batch into one padded device dispatch."""
+        return _sig(self.root)
+
+
+def _sig(node):
+    kind = node[0]
+    if kind == "leaf":
+        return ("L",)
+    if kind == "not":
+        return ("not", _sig(node[1]))
+    return (kind, tuple(_sig(c) for c in node[1]))
+
+
+@lru_cache(maxsize=32)
+def _ones_stream(n_rows: int) -> np.ndarray:
+    n_words = (n_rows + ewah.WORD_BITS - 1) // ewah.WORD_BITS
+    return ewah.compress(np.full(n_words, ewah.FULL, dtype=np.uint32))
+
+
+@lru_cache(maxsize=32)
+def _zero_stream(n_rows: int) -> np.ndarray:
+    n_words = (n_rows + ewah.WORD_BITS - 1) // ewah.WORD_BITS
+    return ewah.compress(np.zeros(n_words, dtype=np.uint32))
+
+
+def compile_plan(index, pred: Predicate, names=None) -> Plan:
+    """Compile ``pred`` against a materialized ``BitmapIndex``.
+
+    Predicate columns are *original* table positions (pre column-reorder);
+    ``names`` optionally maps string column names to those positions.
+    Returned row ids live in the index's reordered row space — map back with
+    ``index.row_perm[row_ids]``.
+    """
+    col_perm = np.asarray(index.col_perm)
+    inv = np.empty(len(col_perm), dtype=np.int64)
+    inv[col_perm] = np.arange(len(col_perm))
+    streams: list = []
+
+    def leaf(stream) -> tuple:
+        streams.append(stream)
+        return ("leaf", len(streams) - 1)
+
+    def resolve(col) -> int:
+        if isinstance(col, str):
+            if names is None:
+                raise ValueError(
+                    f"predicate references column {col!r} by name but the "
+                    "index has no column names (pass names=...)")
+            try:
+                col = list(names).index(col)
+            except ValueError:
+                raise ValueError(
+                    f"unknown column {col!r}; known: {', '.join(names)}"
+                ) from None
+        col = int(col)
+        if not 0 <= col < len(col_perm):
+            raise ValueError(f"column {col} out of range (0..{len(col_perm) - 1})")
+        return int(inv[col])
+
+    def eq_node(pos: int, value: int) -> tuple:
+        ci = index.columns[pos]
+        if ci.streams is None:
+            raise ValueError("index built with materialize=False cannot be queried")
+        if not 0 <= value < ci.codes.shape[0]:
+            return leaf(_zero_stream(index.n_rows))  # out-of-domain: no rows
+        nodes = tuple(leaf(ci.streams[int(b)]) for b in ci.codes[value])
+        return nodes[0] if len(nodes) == 1 else ("and", nodes)
+
+    def values_node(pos: int, values) -> tuple:
+        card = index.columns[pos].codes.shape[0]
+        values = sorted({v for v in values if 0 <= v < card})
+        if not values:
+            return leaf(_zero_stream(index.n_rows))
+        nodes = tuple(eq_node(pos, v) for v in values)
+        return nodes[0] if len(nodes) == 1 else ("or", nodes)
+
+    def build(p) -> tuple:
+        if isinstance(p, Eq):
+            return eq_node(resolve(p.col), p.value)
+        if isinstance(p, In):
+            return values_node(resolve(p.col), p.values)
+        if isinstance(p, Range):
+            return values_node(resolve(p.col), range(p.lo, p.hi + 1))
+        if isinstance(p, And):
+            return _fanin("and", [build(c) for c in p.children])
+        if isinstance(p, Or):
+            return _fanin("or", [build(c) for c in p.children])
+        if isinstance(p, Not):
+            return ("not", build(p.child))
+        raise TypeError(f"not a Predicate: {p!r}")
+
+    plan = Plan(streams=streams, root=build(pred), n_rows=index.n_rows)
+    plan.root = _cost_order(plan.root, streams, plan.n_words)
+    return plan
+
+
+def _fanin(op: str, children: list) -> tuple:
+    """n-ary node; same-op children flatten into the parent fan-in."""
+    flat: list = []
+    for c in children:
+        if c[0] == op:
+            flat.extend(c[1])
+        else:
+            flat.append(c)
+    return flat[0] if len(flat) == 1 else (op, tuple(flat))
+
+
+def _cost_order(node, streams, n_words: int):
+    """Order every fan-in smallest-estimated-stream-first (stable)."""
+
+    def est(nd) -> int:
+        if nd[0] == "leaf":
+            return len(streams[nd[1]])
+        if nd[0] == "not":
+            return n_words + 2  # complement of a compressible run can be dense
+        return sum(est(c) for c in nd[1])
+
+    def rec(nd):
+        if nd[0] == "leaf":
+            return nd
+        if nd[0] == "not":
+            return ("not", rec(nd[1]))
+        children = sorted((rec(c) for c in nd[1]), key=est)
+        return (nd[0], tuple(children))
+
+    return rec(node)
+
+
+# ---------------------------------------------------------------------------
+# Execution backends
+# ---------------------------------------------------------------------------
+
+BACKENDS: dict[str, type] = {}
+
+
+def register_backend(name: str):
+    """Decorator: make a backend class available as ``backend=name``."""
+
+    def deco(cls):
+        BACKENDS[name] = cls
+        cls.name = name
+        return cls
+
+    return deco
+
+
+def backend_names() -> tuple:
+    return tuple(sorted(BACKENDS))
+
+
+_BACKEND_INSTANCES: dict = {}
+
+
+def get_backend(name: str, **opts):
+    """Backend instance for ``name`` (ValueError lists registered names).
+
+    Instances are cached per (name, opts) so state like the jax backend's
+    jit cache survives across query calls — without this every
+    ``query``/``query_many`` would re-trace identical plans.
+    """
+    try:
+        cls = BACKENDS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown query backend {name!r}; registered: "
+            f"{', '.join(backend_names())}"
+        ) from None
+    key = (name, tuple(sorted(opts.items())))
+    if key not in _BACKEND_INSTANCES:
+        _BACKEND_INSTANCES[key] = cls(**opts)
+    return _BACKEND_INSTANCES[key]
+
+
+@register_backend("numpy")
+class NumpyBackend:
+    """Compressed-domain streaming execution (paper §3, O(|A|+|B|) merges).
+
+    Fan-ins fold through a min-heap on actual compressed sizes, so the
+    cheapest intermediate results merge first.  A bare-leaf root (k=1
+    equality) costs its own stream length — the words a scan touches to
+    materialize the answer.
+    """
+
+    def execute(self, plan: Plan):
+        stream, scanned = self._eval(plan, plan.root)
+        if plan.root[0] == "leaf":
+            scanned = len(stream)
+        bits = ewah.unpack_bits(ewah.decompress(stream), plan.n_rows)
+        return np.flatnonzero(bits), int(scanned)
+
+    def execute_many(self, plans):
+        return [self.execute(p) for p in plans]
+
+    def _eval(self, plan: Plan, node):
+        kind = node[0]
+        if kind == "leaf":
+            return plan.streams[node[1]], 0
+        if kind == "not":
+            s, scanned = self._eval(plan, node[1])
+            r, sc = ewah.logical_op(s, _ones_stream(plan.n_rows), "xor")
+            return r, scanned + sc
+        op, children = node
+        parts = [self._eval(plan, c) for c in children]
+        scanned = sum(sc for _, sc in parts)
+        heap = [(len(s), i, s) for i, (s, _) in enumerate(parts)]
+        heapq.heapify(heap)
+        tiebreak = len(heap)
+        while len(heap) > 1:
+            _, _, a = heapq.heappop(heap)
+            _, _, b = heapq.heappop(heap)
+            r, sc = ewah.logical_op(a, b, op)
+            scanned += sc
+            heapq.heappush(heap, (len(r), tiebreak, r))
+            tiebreak += 1
+        return heap[0][2], scanned
+
+
+@register_backend("jax")
+class JaxBackend:
+    """Batched in-graph execution over many queries at once.
+
+    Plans are grouped by (structure signature, leaf count, capacity bucket):
+    each group's leaf streams pad into one (B, m, C) uint32 batch, decompress
+    via a doubly-vmapped ``ewah_jax.decompress``, and fan-ins fold in word
+    space through ``kernels.ops.wordops_fold`` (the Pallas word-op kernel,
+    whole batch per launch).  Capacities bucket to powers of two so jit
+    variants stay bounded across query mixes.
+    """
+
+    def __init__(self, use_kernel: bool = True, interpret=None):
+        self.use_kernel = use_kernel
+        self.interpret = interpret
+        self._jit_cache: dict = {}
+
+    def execute(self, plan: Plan):
+        return self.execute_many([plan])[0]
+
+    def execute_many(self, plans):
+        import jax.numpy as jnp
+
+        out: list = [None] * len(plans)
+        groups: dict = {}
+        for i, p in enumerate(plans):
+            cap = _capacity_bucket(max(len(s) for s in p.streams))
+            key = (p.signature(), len(p.streams), cap, p.n_rows)
+            groups.setdefault(key, []).append(i)
+        for (_, m, cap, n_rows), idxs in groups.items():
+            batch = np.zeros((len(idxs), m, cap), dtype=np.uint32)
+            lengths = np.zeros((len(idxs), m), dtype=np.int32)
+            for b, i in enumerate(idxs):
+                for j, s in enumerate(plans[idxs[b]].streams):
+                    batch[b, j, : len(s)] = s
+                    lengths[b, j] = len(s)
+            n_words = (n_rows + ewah.WORD_BITS - 1) // ewah.WORD_BITS
+            fn = self._compiled(plans[idxs[0]].root, cap, n_words)
+            words = np.asarray(fn(jnp.asarray(batch), jnp.asarray(lengths)))
+            for b, i in enumerate(idxs):
+                bits = ewah.unpack_bits(words[b], n_rows)
+                out[i] = (np.flatnonzero(bits), plans[i].leaf_words())
+        return out
+
+    def _compiled(self, root, capacity: int, n_words: int):
+        key = (_sig(root), capacity, n_words, self.use_kernel, self.interpret)
+        if key in self._jit_cache:
+            return self._jit_cache[key]
+        import jax
+        import jax.numpy as jnp
+
+        from . import ewah_jax
+        from ..kernels import ops as kops
+
+        use_kernel, interpret = self.use_kernel, self.interpret
+
+        def run(batch, lengths):  # (B, m, C), (B, m) -> (B, W)
+            dec = jax.vmap(jax.vmap(
+                lambda s, l: ewah_jax.decompress(s, l, n_words)))(batch, lengths)
+
+            def ev(node):
+                if node[0] == "leaf":
+                    return dec[:, node[1]]
+                if node[0] == "not":
+                    return ev(node[1]) ^ jnp.uint32(0xFFFFFFFF)
+                op, children = node
+                parts = jnp.stack([ev(c) for c in children])  # (p, B, W)
+                folded = kops.wordops_fold(
+                    parts.reshape(parts.shape[0], -1), op,
+                    use_kernel=use_kernel, interpret=interpret)
+                return folded.reshape(parts.shape[1:])
+
+            return ev(root)
+
+        fn = jax.jit(run)
+        self._jit_cache[key] = fn
+        return fn
+
+
+def _capacity_bucket(n: int) -> int:
+    return max(8, 1 << (int(n) - 1).bit_length())

@@ -94,5 +94,9 @@ ORDERINGS = {
 }
 
 
-def order_rows(columns, method: str = "lex") -> np.ndarray:
-    return ORDERINGS[method](columns)
+def order_rows(columns, method: str = "lex", hists=None) -> np.ndarray:
+    """Row permutation by strategy name; unknown names raise ValueError
+    listing the registered row-order strategies."""
+    from .strategies import get_strategy  # function-level: no import cycle
+
+    return get_strategy("row_order", method)(columns, hists)

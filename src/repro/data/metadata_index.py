@@ -3,24 +3,29 @@ case, hosted in the training data plane.
 
 Every training sequence carries categorical metadata (source, domain,
 quality bin, length bin).  A data-mixing / curation query like
-``domain = 3 AND quality_bin >= 8`` is exactly the paper's equality-query
+``domain = 3 AND quality_bin >= 8`` is exactly the paper's predicate
 workload; the index is built with histogram-aware column ordering and
-Gray-Frequency row sorting (the paper's best heuristics).
+Gray-Frequency row sorting (the paper's best heuristics) and queried through
+the predicate planner (repro.core.query), on either the numpy streaming
+backend or the batched jax backend.
 """
 
 from __future__ import annotations
 
 import numpy as np
 
-from ..core import BitmapIndex, ewah
+from ..core import And, BitmapIndex, Eq, IndexSpec
 
 
 class MetadataIndex:
     COLS = ("source", "domain", "quality_bin", "length_bin")
 
-    def __init__(self, k: int = 1, row_order: str = "grayfreq"):
-        self.k = k
-        self.row_order = row_order
+    def __init__(self, k: int = 1, row_order: str = "grayfreq",
+                 spec: IndexSpec | None = None):
+        self.spec = spec or IndexSpec(k=k, row_order=row_order,
+                                      column_order="heuristic")
+        self.k = self.spec.k
+        self.row_order = self.spec.row_order
         self._rows = {c: [] for c in self.COLS}
         self._index: BitmapIndex | None = None
 
@@ -31,9 +36,7 @@ class MetadataIndex:
 
     def build(self):
         cols = [np.concatenate(self._rows[c]) for c in self.COLS]
-        self._index = BitmapIndex.build(
-            cols, k=self.k, row_order=self.row_order,
-            column_order="heuristic")
+        self._index = BitmapIndex.build(cols, self.spec)
         return self._index
 
     @property
@@ -42,21 +45,20 @@ class MetadataIndex:
             self.build()
         return self._index
 
-    def query(self, **conditions):
-        """Equality query: rows matching all column=value conditions.
+    def query_pred(self, pred, backend: str = "numpy"):
+        """Run any predicate (columns by name, e.g. ``Eq("domain", 3)`` or
+        ``In("quality_bin", range(8, 16))``) through the planner.
         Returns (row_ids, compressed_words_scanned)."""
-        idx = self.index
-        col_pos = {self.COLS[idx.original_column(i)]: i
-                   for i in range(len(self.COLS))}
-        streams = []
-        scanned = 0
-        result = None
-        for col, value in conditions.items():
-            rows, sc = idx.equality_query(col_pos[col], int(value))
-            scanned += sc
-            rows = set(rows.tolist())
-            result = rows if result is None else (result & rows)
-        return np.asarray(sorted(result or [])), scanned
+        return self.index.query(pred, backend=backend, names=self.COLS)
+
+    def query(self, _backend: str = "numpy", **conditions):
+        """Equality query: rows matching all column=value conditions
+        (compiled to one And(Eq, ...) plan — a single smallest-streams-first
+        AND fan-in).  Returns (row_ids, compressed_words_scanned)."""
+        if not conditions:
+            return np.asarray([], dtype=np.int64), 0
+        pred = And(*[Eq(col, int(v)) for col, v in conditions.items()])
+        return self.query_pred(pred, backend=_backend)
 
     def size_words(self) -> int:
         return self.index.size_words()

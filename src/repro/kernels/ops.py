@@ -63,6 +63,29 @@ def wordops(a, b, op="and", use_kernel=True, interpret=None):
     return r.reshape(-1)[:n], cls.reshape(-1)[:n]
 
 
+@partial(jax.jit, static_argnames=("op", "use_kernel", "interpret"))
+def wordops_fold(stacked, op="and", use_kernel=True, interpret=None):
+    """Fold ``op`` across axis 0 of (m, n) word vectors -> (n,).
+
+    Tree reduction: each level combines *all* of its pairs in one flattened
+    ``wordops`` launch, so a whole batch of queries (n = B * words-per-query)
+    folds in ceil(log2 m) kernel dispatches — the query plane's batched
+    jax-backend primitive.
+    """
+    m, n = stacked.shape
+    while m > 1:
+        even = (m // 2) * 2
+        a = stacked[0:even:2].reshape(-1)
+        b = stacked[1:even:2].reshape(-1)
+        r, _ = wordops(a, b, op, use_kernel=use_kernel, interpret=interpret)
+        merged = r.reshape(even // 2, n)
+        if m % 2:
+            merged = jnp.concatenate([merged, stacked[-1:]], axis=0)
+        stacked = merged
+        m = stacked.shape[0]
+    return stacked[0]
+
+
 @partial(jax.jit, static_argnames=("inverse", "use_kernel", "interpret"))
 def gray(x, inverse=False, use_kernel=True, interpret=None):
     """uint32 vector -> Gray code (or inverse)."""

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
+from repro.core import BitmapIndex, Eq, IndexSpec
 from repro.dist.sharding import (batch_shardings, cache_shardings,
                                  param_shardings, replicated)
 from repro.launch.mesh import make_cli_mesh
@@ -37,13 +38,28 @@ def make_requests(n, rng, max_len=96):
     return np.clip(lens + jitter, 8, max_len)
 
 
-def pack_batches(lengths, batch_size, histogram_aware=True):
-    """Return list of index-batches; histogram-aware = Gray-Frequency order."""
+def pack_batches(lengths, batch_size, histogram_aware=True, backend="numpy"):
+    """Return list of index-batches; histogram-aware = Gray-Frequency order.
+
+    The histogram-aware path runs through the bitmap query plane: a bitmap
+    index over the length-bin column, one Eq(bin) plan per bin, bins admitted
+    in descending frequency (paper §4.2 applied to serving), lengths
+    ascending within a bin.  With backend="jax" all per-bin plans share one
+    batched device dispatch (same plan shape -> one padded kernel launch).
+    """
+    lengths = np.asarray(lengths)
     n = len(lengths)
     if histogram_aware:
         bins = lengths // 8
-        freq = np.bincount(bins, minlength=bins.max() + 1)[bins]
-        order = np.lexsort((lengths, -freq))  # desc freq, then length
+        idx = BitmapIndex.build(
+            [bins], IndexSpec(row_order="unsorted", column_order="given"))
+        uniq, counts = np.unique(bins, return_counts=True)
+        by_freq = uniq[np.lexsort((uniq, -counts))]
+        results = idx.query_many([Eq(0, int(b)) for b in by_freq],
+                                 backend=backend)
+        order = np.concatenate(
+            [rows[np.argsort(lengths[rows], kind="stable")]
+             for rows, _ in results])
     else:
         order = np.arange(n)
     return [order[i : i + batch_size] for i in range(0, n, batch_size)]
@@ -69,6 +85,9 @@ def main(argv=None):
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--mesh", default=None,
                     help="data,model (default: all devices data-parallel)")
+    ap.add_argument("--query-backend", default="numpy",
+                    choices=("numpy", "jax"),
+                    help="query-plane backend for admission packing")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -90,11 +109,15 @@ def main(argv=None):
 
         lengths = make_requests(args.requests, rng)
         for mode in (False, True):
-            batches = pack_batches(lengths, args.batch, histogram_aware=mode)
+            batches = pack_batches(lengths, args.batch, histogram_aware=mode,
+                                   backend=args.query_backend)
             waste = padding_waste(lengths, batches)
-            print(f"packing histogram_aware={mode}: padding waste {waste:.1%}")
+            print(f"packing histogram_aware={mode} "
+                  f"(query backend {args.query_backend}): "
+                  f"padding waste {waste:.1%}")
 
-        batches = pack_batches(lengths, args.batch, histogram_aware=True)
+        batches = pack_batches(lengths, args.batch, histogram_aware=True,
+                               backend=args.query_backend)
         step = jax.jit(partial(serve_step, cfg=cfg),
                        in_shardings=(p_sh, tok_sh, c_sh, replicated(mesh)),
                        out_shardings=(tok_sh, c_sh), donate_argnums=(2,))

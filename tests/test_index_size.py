@@ -98,7 +98,7 @@ def test_equality_query_correct():
     for k in (1, 2):
         idx = BitmapIndex.build(cols, k=k, row_order="lex", column_order=None)
         reordered = [cols[idx.original_column(i)] for i in range(2)]
-        perm = idx._row_perm
+        perm = idx.row_perm
         for ci in range(2):
             for v in (0, 3, 5):
                 rows, scanned = idx.equality_query(ci, v)

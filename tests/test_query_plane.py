@@ -1,0 +1,313 @@
+"""Oracle tests for the predicate-algebra query plane.
+
+Every predicate plan is checked against an uncompressed numpy row-mask
+recomputation on randomized tables, and the numpy (streaming compressed
+domain) and jax (batched in-graph) backends are checked against each other.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import And, BitmapIndex, Eq, In, IndexSpec, Not, Or, Range
+from repro.core import index_size_report
+from repro.core.bitmap_index import assign_codes
+from repro.core.query import backend_names, compile_plan, get_backend
+from repro.core.sorting import order_rows
+from repro.core.strategies import (get_strategy, register_row_order,
+                                   strategy_names, unregister_strategy)
+
+
+def make_table(n, cards, seed):
+    r = np.random.default_rng(seed)
+    return [r.integers(0, c, size=n) for c in cards]
+
+
+def oracle_mask(pred, data):
+    """Recompute the predicate over uncompressed (reordered-space) columns."""
+    if isinstance(pred, Eq):
+        return data[pred.col] == pred.value
+    if isinstance(pred, In):
+        return np.isin(data[pred.col], pred.values)
+    if isinstance(pred, Range):
+        return (data[pred.col] >= pred.lo) & (data[pred.col] <= pred.hi)
+    if isinstance(pred, And):
+        m = oracle_mask(pred.children[0], data)
+        for c in pred.children[1:]:
+            m = m & oracle_mask(c, data)
+        return m
+    if isinstance(pred, Or):
+        m = oracle_mask(pred.children[0], data)
+        for c in pred.children[1:]:
+            m = m | oracle_mask(c, data)
+        return m
+    if isinstance(pred, Not):
+        return ~oracle_mask(pred.child, data)
+    raise TypeError(pred)
+
+
+PREDICATES = [
+    Eq(0, 3),
+    In(1, [1, 5, 9, 9]),            # duplicate values collapse
+    Range(2, 4, 11),
+    Range(2, 50, 40),               # empty range -> no rows
+    And(Eq(0, 2), Eq(1, 4)),
+    Or(Eq(0, 1), Eq(0, 2), Eq(1, 0)),
+    Not(Eq(0, 0)),
+    And(In(0, [0, 1, 2]), Range(1, 0, 6), Not(Eq(2, 5))),
+    Or(And(Eq(0, 1), Eq(1, 1)), Not(In(2, [0, 1, 2]))),
+    Eq(2, 10_000),                  # out of domain -> no rows
+]
+
+
+@pytest.mark.parametrize("row_order", ["unsorted", "lex", "grayfreq"])
+@pytest.mark.parametrize("k", [1, 2])
+def test_plans_match_uncompressed_oracle(k, row_order):
+    # 1237 rows: deliberately not a multiple of 32 (Not must respect the tail)
+    cols = make_table(1237, [7, 11, 31], seed=k * 10 + len(row_order))
+    idx = BitmapIndex.build(cols, IndexSpec(k=k, row_order=row_order))
+    data = {c: cols[c][idx.row_perm] for c in range(3)}
+    for pred in PREDICATES:
+        rows, scanned = idx.query(pred, backend="numpy")
+        expect = np.flatnonzero(oracle_mask(pred, data))
+        np.testing.assert_array_equal(rows, expect)
+        assert scanned >= 1
+
+
+@pytest.mark.parametrize("k", [1, 2])
+def test_numpy_and_jax_backends_agree(k):
+    cols = make_table(900, [5, 13, 40], seed=k)
+    idx = BitmapIndex.build(cols, IndexSpec(k=k, row_order="lex"))
+    data = {c: cols[c][idx.row_perm] for c in range(3)}
+    np_res = idx.query_many(PREDICATES, backend="numpy")
+    jax_res = idx.query_many(PREDICATES, backend="jax")
+    for pred, (rn, _), (rj, _) in zip(PREDICATES, np_res, jax_res):
+        expect = np.flatnonzero(oracle_mask(pred, data))
+        np.testing.assert_array_equal(rn, expect)
+        np.testing.assert_array_equal(rj, expect)
+
+
+def test_and_of_eqs_acceptance():
+    """Acceptance: And(Eq, Eq) returns identical row ids on both backends."""
+    cols = make_table(2000, [9, 17], seed=42)
+    idx = BitmapIndex.build(cols, IndexSpec(k=2, row_order="grayfreq"))
+    pred = And(Eq(0, 3), Eq(1, 5))
+    rows_np, _ = idx.query(pred, backend="numpy")
+    rows_jax, _ = idx.query(pred, backend="jax")
+    np.testing.assert_array_equal(rows_np, rows_jax)
+    data = {c: cols[c][idx.row_perm] for c in range(2)}
+    np.testing.assert_array_equal(
+        rows_np, np.flatnonzero(oracle_mask(pred, data)))
+
+
+def test_operator_sugar():
+    cols = make_table(400, [4, 6], seed=3)
+    idx = BitmapIndex.build(cols, IndexSpec())
+    data = {c: cols[c][idx.row_perm] for c in range(2)}
+    pred = (Eq(0, 1) & Eq(1, 2)) | ~Eq(0, 3)
+    rows, _ = idx.query(pred)
+    np.testing.assert_array_equal(rows, np.flatnonzero(oracle_mask(
+        Or(And(Eq(0, 1), Eq(1, 2)), Not(Eq(0, 3))), data)))
+
+
+def test_plan_flattens_kofn_fanin():
+    """And(Eq, Eq) at k=2 compiles to ONE 4-stream AND fan-in (the k-of-N
+    AND folds into the plan), children cost-ordered smallest-first."""
+    cols = make_table(500, [30, 40], seed=0)
+    idx = BitmapIndex.build(cols, IndexSpec(k=2, row_order="lex"))
+    plan = compile_plan(idx, And(Eq(0, 1), Eq(1, 2)))
+    assert plan.root[0] == "and"
+    assert len(plan.root[1]) == 4
+    assert all(c[0] == "leaf" for c in plan.root[1])
+    sizes = [len(plan.streams[c[1]]) for c in plan.root[1]]
+    assert sizes == sorted(sizes)
+
+
+def test_single_stream_root_scan_cost():
+    """A k=1 equality is a bare-leaf plan; its scan cost is the stream
+    length (the old equality_query special case, now planner policy)."""
+    cols = make_table(800, [6], seed=1)
+    idx = BitmapIndex.build(cols, IndexSpec(k=1, row_order="lex"))
+    plan = compile_plan(idx, Eq(0, 2))
+    assert plan.root[0] == "leaf"
+    rows, scanned = idx.query(Eq(0, 2))
+    assert scanned == len(plan.streams[0]) >= 1
+    rows2, scanned2 = idx.equality_query(0, 2)
+    np.testing.assert_array_equal(
+        rows2, np.flatnonzero(cols[idx.original_column(0)][idx.row_perm] == 2))
+
+
+def test_column_names_resolution():
+    cols = make_table(300, [4, 9], seed=5)
+    idx = BitmapIndex.build(cols, IndexSpec())
+    names = ("alpha", "beta")
+    rows_by_name, _ = idx.query(Eq("beta", 3), names=names)
+    rows_by_pos, _ = idx.query(Eq(1, 3))
+    np.testing.assert_array_equal(rows_by_name, rows_by_pos)
+    with pytest.raises(ValueError, match="alpha, beta"):
+        idx.query(Eq("gamma", 0), names=names)
+    with pytest.raises(ValueError, match="no column names"):
+        idx.query(Eq("beta", 0))
+    with pytest.raises(ValueError, match="out of range"):
+        idx.query(Eq(7, 0))
+
+
+def test_unmaterialized_index_rejects_queries():
+    cols = make_table(200, [4], seed=0)
+    idx = BitmapIndex.build(cols, IndexSpec(), materialize=False)
+    with pytest.raises(ValueError, match="materialize"):
+        idx.query(Eq(0, 1))
+
+
+# -- strategy registry -------------------------------------------------------
+
+
+def test_unknown_strategy_errors_list_names():
+    cols = make_table(100, [3, 5], seed=0)
+    with pytest.raises(ValueError, match="grayfreq"):
+        order_rows(cols, "bogus")
+    with pytest.raises(ValueError, match="gray, lex"):
+        assign_codes(10, 1, code_order="bogus")
+    with pytest.raises(ValueError, match="alpha, freq"):
+        assign_codes(10, 1, value_policy="bogus", hist=np.ones(10, np.int64))
+    with pytest.raises(ValueError, match="heuristic"):
+        BitmapIndex.build(cols, IndexSpec(column_order="bogus"))
+    with pytest.raises(ValueError, match="jax, numpy"):
+        get_backend("bogus")
+    assert "lex" in strategy_names("row_order")
+
+
+def test_custom_strategy_plugs_in():
+    @register_row_order("reverse")
+    def _reverse(columns, hists=None):
+        return np.arange(len(columns[0]))[::-1]
+
+    try:
+        assert get_strategy("row_order", "reverse") is _reverse
+        cols = make_table(50, [4], seed=0)
+        idx = BitmapIndex.build(cols, IndexSpec(row_order="reverse"))
+        np.testing.assert_array_equal(idx.row_perm, np.arange(50)[::-1])
+    finally:
+        unregister_strategy("row_order", "reverse")
+    with pytest.raises(ValueError):
+        get_strategy("row_order", "reverse")
+
+
+def test_indexspec_serialization_roundtrip():
+    for spec in (IndexSpec(),
+                 IndexSpec(k=2, row_order="grayfreq"),
+                 IndexSpec(column_order=(1, 0)),
+                 IndexSpec(column_order=None)):
+        assert IndexSpec.from_dict(spec.to_dict()) == spec
+    assert IndexSpec(column_order=None).column_order == "given"
+    assert IndexSpec(column_order=[1, 0]).column_order == (1, 0)
+    # value-policy auto resolution couples Gray-Frequency to 'freq'
+    assert IndexSpec(row_order="grayfreq").resolved_value_policy() == "freq"
+    assert IndexSpec(row_order="lex").resolved_value_policy() == "alpha"
+    with pytest.raises(ValueError, match="k must be"):
+        IndexSpec(k=0)
+
+
+# -- deprecation shims -------------------------------------------------------
+
+
+def test_legacy_kwargs_shim_matches_spec_build():
+    cols = make_table(700, [6, 12], seed=9)
+    with pytest.warns(DeprecationWarning):
+        legacy = BitmapIndex.build(cols, k=2, row_order="grayfreq",
+                                   column_order=None)
+    spec = BitmapIndex.build(
+        cols, IndexSpec(k=2, row_order="grayfreq", column_order="given"))
+    assert legacy.size_words() == spec.size_words()
+    np.testing.assert_array_equal(legacy.row_perm, spec.row_perm)
+    np.testing.assert_array_equal(legacy.col_perm, spec.col_perm)
+    # private aliases still readable
+    np.testing.assert_array_equal(legacy._row_perm, legacy.row_perm)
+    np.testing.assert_array_equal(legacy._col_perm, legacy.col_perm)
+    with pytest.raises(TypeError, match="not both"):
+        BitmapIndex.build(cols, IndexSpec(), k=1)
+
+
+def test_index_size_report_legacy_and_spec_agree():
+    cols = make_table(600, [8, 20], seed=11)
+    with pytest.warns(DeprecationWarning):
+        rep_legacy = index_size_report(cols, k=1, row_order="lex")
+    rep_spec = index_size_report(cols, IndexSpec(k=1, row_order="lex"))
+    assert rep_legacy == rep_spec
+
+
+# -- metadata index ----------------------------------------------------------
+
+
+def test_metadata_index_query_through_planner():
+    from repro.data.metadata_index import MetadataIndex
+
+    r = np.random.default_rng(0)
+    mi = MetadataIndex()
+    for _ in range(3):
+        mi.add_batch({
+            "source": r.integers(0, 4, 256),
+            "domain": r.integers(0, 8, 256),
+            "quality_bin": r.integers(0, 16, 256),
+            "length_bin": r.integers(0, 6, 256),
+        })
+    idx = mi.index
+    cols = {c: np.concatenate(mi._rows[c])[idx.row_perm] for c in mi.COLS}
+
+    rows, scanned = mi.query(domain=3, quality_bin=8)
+    expect = np.flatnonzero((cols["domain"] == 3) & (cols["quality_bin"] == 8))
+    np.testing.assert_array_equal(rows, expect)
+    assert scanned >= 1
+
+    rows_jax, _ = mi.query(_backend="jax", domain=3, quality_bin=8)
+    np.testing.assert_array_equal(rows_jax, expect)
+
+    # quality_bin >= 8 as a Range predicate by column name
+    rows, _ = mi.query_pred(And(Eq("domain", 3), Range("quality_bin", 8, 15)))
+    expect = np.flatnonzero((cols["domain"] == 3) & (cols["quality_bin"] >= 8))
+    np.testing.assert_array_equal(rows, expect)
+
+    empty, scanned = mi.query()
+    assert len(empty) == 0 and scanned == 0
+
+
+# -- serving plane -----------------------------------------------------------
+
+
+def test_pack_batches_query_plane():
+    from repro.launch.serve import pack_batches, padding_waste
+
+    r = np.random.default_rng(1)
+    lengths = r.integers(8, 96, size=101)
+    naive = pack_batches(lengths, 8, histogram_aware=False)
+    packed = pack_batches(lengths, 8, histogram_aware=True)
+    order = np.concatenate(packed)
+    assert sorted(order.tolist()) == list(range(101))
+    assert padding_waste(lengths, packed) <= padding_waste(lengths, naive)
+    packed_jax = pack_batches(lengths, 8, histogram_aware=True, backend="jax")
+    for a, b in zip(packed, packed_jax):
+        np.testing.assert_array_equal(a, b)
+
+
+# -- kernels -----------------------------------------------------------------
+
+
+@pytest.mark.parametrize("op", ["and", "or", "xor"])
+@pytest.mark.parametrize("m", [1, 2, 3, 5, 8])
+def test_wordops_fold_matches_reduce(op, m):
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+
+    r = np.random.default_rng(m)
+    stacked = r.integers(0, 2**32, size=(m, 200), dtype=np.uint32)
+    out = np.asarray(ops.wordops_fold(jnp.asarray(stacked), op))
+    fn = {"and": np.bitwise_and, "or": np.bitwise_or,
+          "xor": np.bitwise_xor}[op]
+    expect = stacked[0]
+    for i in range(1, m):
+        expect = fn(expect, stacked[i])
+    np.testing.assert_array_equal(out, expect)
+
+
+def test_backend_registry_introspection():
+    assert backend_names() == ("jax", "numpy")
