@@ -160,8 +160,10 @@ class Plan:
         return int(sum(len(s) for s in self.streams))
 
     def signature(self) -> tuple:
-        """Structural shape (ops + leaf placeholders) — equal signatures can
-        batch into one padded device dispatch."""
+        """Structural shape (ops + leaf placeholders).  ``compile_plan``
+        renumbers leaves in tree-traversal order, so two compiled plans with
+        equal signatures have *identical* roots and can batch into one padded
+        device dispatch."""
         return _sig(self.root)
 
 
@@ -243,7 +245,11 @@ def compile_plan(index, pred: Predicate, names=None) -> Plan:
         if isinstance(p, In):
             return values_node(resolve(p.col), p.values)
         if isinstance(p, Range):
-            return values_node(resolve(p.col), range(p.lo, p.hi + 1))
+            # clamp to the column domain before materializing the range —
+            # Range(col, 0, 10**9) must not iterate a billion values
+            pos = resolve(p.col)
+            card = index.columns[pos].codes.shape[0]
+            return values_node(pos, range(max(p.lo, 0), min(p.hi, card - 1) + 1))
         if isinstance(p, And):
             return _fanin("and", [build(c) for c in p.children])
         if isinstance(p, Or):
@@ -254,7 +260,30 @@ def compile_plan(index, pred: Predicate, names=None) -> Plan:
 
     plan = Plan(streams=streams, root=build(pred), n_rows=index.n_rows)
     plan.root = _cost_order(plan.root, streams, plan.n_words)
+    _renumber_leaves(plan)
     return plan
+
+
+def _renumber_leaves(plan: Plan) -> None:
+    """Renumber leaves in tree-traversal order and permute ``plan.streams``
+    to match.  Cost-ordering permutes leaves per-plan, so without this two
+    plans of equal structural signature could assign leaf indices to
+    different tree positions — and the jax backend, which compiles one
+    program per batch group, would evaluate every non-first plan with the
+    wrong leaf-to-stream mapping.  After canonicalization, equal signature
+    implies an identical root tuple."""
+    order: list = []
+
+    def rec(nd):
+        if nd[0] == "leaf":
+            order.append(nd[1])
+            return ("leaf", len(order) - 1)
+        if nd[0] == "not":
+            return ("not", rec(nd[1]))
+        return (nd[0], tuple(rec(c) for c in nd[1]))
+
+    plan.root = rec(plan.root)
+    plan.streams = [plan.streams[i] for i in order]
 
 
 def _fanin(op: str, children: list) -> tuple:
@@ -382,8 +411,10 @@ class NumpyBackend:
 class JaxBackend:
     """Batched in-graph execution over many queries at once.
 
-    Plans are grouped by (structure signature, leaf count, capacity bucket):
-    each group's leaf streams pad into one (B, m, C) uint32 batch, decompress
+    Plans are grouped by (root op tree, capacity bucket): compiled plans
+    carry canonically numbered leaves, so structurally equal plans share one
+    root tuple and hence one compiled program with a correct leaf mapping.
+    Each group's leaf streams pad into one (B, m, C) uint32 batch, decompress
     via a doubly-vmapped ``ewah_jax.decompress``, and fan-ins fold in word
     space through ``kernels.ops.wordops_fold`` (the Pallas word-op kernel,
     whole batch per launch).  Capacities bucket to powers of two so jit
@@ -405,17 +436,21 @@ class JaxBackend:
         groups: dict = {}
         for i, p in enumerate(plans):
             cap = _capacity_bucket(max(len(s) for s in p.streams))
-            key = (p.signature(), len(p.streams), cap, p.n_rows)
+            # key on the full root (leaf indices included), not signature():
+            # only plans with an identical leaf-to-stream mapping may share
+            # a compiled program
+            key = (p.root, cap, p.n_rows)
             groups.setdefault(key, []).append(i)
-        for (_, m, cap, n_rows), idxs in groups.items():
+        for (root, cap, n_rows), idxs in groups.items():
+            m = len(plans[idxs[0]].streams)
             batch = np.zeros((len(idxs), m, cap), dtype=np.uint32)
             lengths = np.zeros((len(idxs), m), dtype=np.int32)
             for b, i in enumerate(idxs):
-                for j, s in enumerate(plans[idxs[b]].streams):
+                for j, s in enumerate(plans[i].streams):
                     batch[b, j, : len(s)] = s
                     lengths[b, j] = len(s)
             n_words = (n_rows + ewah.WORD_BITS - 1) // ewah.WORD_BITS
-            fn = self._compiled(plans[idxs[0]].root, cap, n_words)
+            fn = self._compiled(root, cap, n_words)
             words = np.asarray(fn(jnp.asarray(batch), jnp.asarray(lengths)))
             for b, i in enumerate(idxs):
                 bits = ewah.unpack_bits(words[b], n_rows)
@@ -423,7 +458,7 @@ class JaxBackend:
         return out
 
     def _compiled(self, root, capacity: int, n_words: int):
-        key = (_sig(root), capacity, n_words, self.use_kernel, self.interpret)
+        key = (root, capacity, n_words, self.use_kernel, self.interpret)
         if key in self._jit_cache:
             return self._jit_cache[key]
         import jax

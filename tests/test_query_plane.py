@@ -50,6 +50,7 @@ PREDICATES = [
     In(1, [1, 5, 9, 9]),            # duplicate values collapse
     Range(2, 4, 11),
     Range(2, 50, 40),               # empty range -> no rows
+    Range(1, -5, 10**9),            # clamped to domain, never materialized
     And(Eq(0, 2), Eq(1, 4)),
     Or(Eq(0, 1), Eq(0, 2), Eq(1, 0)),
     Not(Eq(0, 0)),
@@ -84,6 +85,33 @@ def test_numpy_and_jax_backends_agree(k):
         expect = np.flatnonzero(oracle_mask(pred, data))
         np.testing.assert_array_equal(rn, expect)
         np.testing.assert_array_equal(rj, expect)
+
+
+def test_jax_batches_same_signature_different_child_order():
+    """Regression: two plans with equal structural signatures but different
+    source child order — And(Eq, Or(Eq, Eq)) vs And(Or(Eq, Eq), Eq) —
+    used to batch into one jax group compiled from the first plan's root,
+    evaluating the second with the wrong leaf-to-stream mapping.  Canonical
+    leaf numbering makes equal signatures imply identical roots."""
+    cols = make_table(1500, [6, 40], seed=7)
+    idx = BitmapIndex.build(cols, IndexSpec(k=1, row_order="lex"))
+    data = {c: cols[c][idx.row_perm] for c in range(2)}
+    # column 0 is the sorted primary (tiny streams), column 1 is high-card
+    # (long streams), so cost order is Or-then-Eq in both plans and the two
+    # signatures collide deterministically
+    preds = [
+        And(Eq(1, 2), Or(Eq(0, 1), Eq(0, 2))),
+        And(Or(Eq(0, 3), Eq(0, 4)), Eq(1, 5)),
+    ]
+    p1, p2 = (compile_plan(idx, p) for p in preds)
+    assert p1.signature() == p2.signature()
+    assert p1.root == p2.root  # canonical numbering -> shared batch program
+    jax_res = idx.query_many(preds, backend="jax")
+    np_res = idx.query_many(preds, backend="numpy")
+    for pred, (rj, _), (rn, _) in zip(preds, jax_res, np_res):
+        expect = np.flatnonzero(oracle_mask(pred, data))
+        np.testing.assert_array_equal(rj, expect)
+        np.testing.assert_array_equal(rn, expect)
 
 
 def test_and_of_eqs_acceptance():
