@@ -8,6 +8,12 @@ execution backends: ``numpy`` (streaming compressed-domain merges, timed
 per query) and ``jax`` (batched in-graph execution — all of a column's
 queries share padded device dispatches).  Backend row-id agreement is
 validated per configuration.
+
+The cascaded scenario measures the compressed execution path
+(``execute_compressed`` + LRU sub-plan cache): a shared ``In`` selector
+AND'd with a rotating ``Eq`` filter — the dashboard-cascade workload —
+reporting cache hit rate and cached / cold compressed vs dense-jax
+``us_per_query``.
 """
 
 from __future__ import annotations
@@ -16,8 +22,31 @@ import time
 
 import numpy as np
 
-from repro.core import BitmapIndex, Eq, IndexSpec
+from repro.core import And, BitmapIndex, Eq, In, IndexSpec
+from repro.core.query import NumpyBackend, compile_plan, get_backend
 from repro.data.tables import make_census_like
+
+
+REPS = 3           # min-of-N trials: single samples are too noisy to gate on
+MIN_WINDOW = 0.05  # grow each timed window to >= 50ms so scheduler jitter
+                   # and timer resolution stop dominating the cheap rows
+
+
+def _best_of(fn, reps=REPS):
+    """Robust timing for the CI trend gate: estimate once, scale the inner
+    loop so a trial spans >= MIN_WINDOW seconds, take the min of ``reps``
+    trials.  Returns (result, best seconds per single fn() call)."""
+    t0 = time.perf_counter()
+    out = fn()
+    est = time.perf_counter() - t0
+    inner = max(1, int(MIN_WINDOW / max(est, 1e-9)))
+    best = est
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        for _ in range(inner):
+            out = fn()
+        best = min(best, (time.perf_counter() - t0) / inner)
+    return out, best
 
 
 def run(n=60_000, queries=40, quick=False):
@@ -35,9 +64,9 @@ def run(n=60_000, queries=40, quick=False):
                 vals = rng.integers(0, card, size=queries)
                 preds = [Eq(idx.original_column(ci), int(v)) for v in vals]
 
-                t0 = time.perf_counter()
-                np_results = [idx.query(p, backend="numpy") for p in preds]
-                dt_np = (time.perf_counter() - t0) / queries
+                np_results, best = _best_of(
+                    lambda: [idx.query(p, backend="numpy") for p in preds])
+                dt_np = best / queries
                 scanned = sum(sc for _, sc in np_results)
                 out.append({"k": k, "sort": sort, "column": ci,
                             "backend": "numpy", "cardinality": card,
@@ -47,9 +76,9 @@ def run(n=60_000, queries=40, quick=False):
                 # untimed warmup so jit trace/compile stays out of the
                 # timed region (the numpy path has no comparable cost)
                 idx.query_many(preds, backend="jax")
-                t0 = time.perf_counter()
-                jax_results = idx.query_many(preds, backend="jax")
-                dt_jax = (time.perf_counter() - t0) / queries
+                jax_results, best = _best_of(
+                    lambda: idx.query_many(preds, backend="jax"))
+                dt_jax = best / queries
                 agrees = all(
                     np.array_equal(rn, rj)
                     for (rn, _), (rj, _) in zip(np_results, jax_results))
@@ -59,6 +88,55 @@ def run(n=60_000, queries=40, quick=False):
                             "words_scanned":
                                 sum(sc for _, sc in jax_results) / queries,
                             "agrees_with_numpy": agrees})
+    out.extend(run_cascaded(cols, queries=queries))
+    return out
+
+
+def run_cascaded(cols, queries=40):
+    """Cascaded-query scenario: shared sub-plans through the compressed
+    engine's result cache, against the cold compressed path and the dense
+    (row-id) jax path."""
+    idx = BitmapIndex.build(
+        cols, IndexSpec(k=1, row_order="lex", column_order="given"))
+    card0 = int(cols[0].max()) + 1
+    card2 = int(cols[2].max()) + 1
+    shared = In(2, range(card2 // 2))          # the dashboard's selector
+    preds = [And(shared, Eq(0, v % card0)) for v in range(queries)]
+    plans = [compile_plan(idx, p) for p in preds]
+
+    cached = NumpyBackend()                    # fresh caches, not the shared
+    cold = NumpyBackend()                      # get_backend() instances
+    # first pass is the cold-start cascade (its hit rate is the reported
+    # number); timing is min-of-N over the warm steady state
+    cached_results = [cached.execute_compressed(p) for p in plans]
+    hit_rate = cached.result_cache.hit_rate
+    _, best = _best_of(
+        lambda: [cached.execute_compressed(p) for p in plans])
+    dt_cached = best / queries
+
+    def run_cold():
+        for p in plans:
+            cold.execute_compressed(p)
+            cold.result_cache.clear()
+
+    _, best = _best_of(run_cold)
+    dt_cold = best / queries
+
+    jx = get_backend("jax")
+    jx.execute_many(plans)                     # warmup: compile out of timing
+    jax_results, best = _best_of(lambda: jx.execute_many(plans))
+    dt_dense = best / queries
+    agrees = all(np.array_equal(s.to_rows(), rows)
+                 for s, (rows, _) in zip(cached_results, jax_results))
+
+    out = [{"scenario": "cascaded", "backend": "numpy-compressed-cached",
+            "us_per_query": dt_cached * 1e6,
+            "cache_hit_rate": hit_rate,
+            "agrees_with_dense": agrees},
+           {"scenario": "cascaded", "backend": "numpy-compressed-cold",
+            "us_per_query": dt_cold * 1e6, "cache_hit_rate": 0.0},
+           {"scenario": "cascaded", "backend": "jax-dense",
+            "us_per_query": dt_dense * 1e6}]
     return out
 
 
@@ -68,8 +146,8 @@ def validate(rows):
     # sorting reduces words scanned on the primary column (numpy backend
     # words-scanned is the streaming-cursor cost, the paper's proxy)
     def get(k, sort, ci):
-        return [r for r in rows if r["k"] == k and r["sort"] == sort
-                and r["column"] == ci and r["backend"] == "numpy"][0]
+        return [r for r in rows if r.get("k") == k and r.get("sort") == sort
+                and r.get("column") == ci and r["backend"] == "numpy"][0]
     for k in (1, 2):
         s, u = get(k, "lex", 0), get(k, "unsorted", 0)
         ok = s["words_scanned"] <= u["words_scanned"]
@@ -87,4 +165,20 @@ def validate(rows):
     ok = bool(jax_rows) and all(r["agrees_with_numpy"] for r in jax_rows)
     checks.append(f"jax backend row ids match numpy on "
                   f"{len(jax_rows)} configs: {'PASS' if ok else 'FAIL'}")
+    # cascaded scenario: the shared sub-plan cache actually hits, and the
+    # compressed cached path agrees with the dense backend
+    casc = {r["backend"]: r for r in rows if r.get("scenario") == "cascaded"}
+    hit = casc["numpy-compressed-cached"]["cache_hit_rate"]
+    ok = hit > 0.0
+    checks.append(f"cascade sub-plan cache hit rate {hit:.0%}: "
+                  f"{'PASS' if ok else 'FAIL'}")
+    ok = casc["numpy-compressed-cached"]["agrees_with_dense"]
+    checks.append(f"cascade compressed rows match dense backend: "
+                  f"{'PASS' if ok else 'FAIL'}")
+    cached = casc["numpy-compressed-cached"]["us_per_query"]
+    cold = casc["numpy-compressed-cold"]["us_per_query"]
+    dense = casc["jax-dense"]["us_per_query"]
+    checks.append(f"cascade us/query cached {cached:.0f} vs cold {cold:.0f} "
+                  f"vs dense-jax {dense:.0f}: "
+                  f"{'PASS' if cached <= cold else 'FAIL'}")
     return checks

@@ -1,0 +1,216 @@
+"""Benchmark trend gate: fail when ``us_per_query`` regresses against the
+committed baseline.
+
+CI runs this right after ``benchmarks.run --quick``::
+
+  PYTHONPATH=src python -m benchmarks.trend \
+      --baseline benchmarks/BENCH_baseline.json \
+      --current results/benchmarks.json
+
+A row regresses when its ``us_per_query`` exceeds the baseline's by more
+than ``--tolerance`` (default 0.25, override with the
+``BENCH_TREND_TOLERANCE`` env var) *and* by more than ``--abs-floor``
+microseconds (absolute damping so ~10us timings don't flap on scheduler
+jitter).  Three layers keep wall-clock noise from failing unrelated
+commits while a genuine regression still trips every layer:
+
+1. **machine-factor normalization** — the committed baseline is seeded on
+   one machine and CI runners are another, so timings first normalize by
+   the median current/baseline ratio across all matched rows: a uniformly
+   slower runner cancels out (``--no-normalize`` compares raw);
+2. **windowed min-of-N timing** at the producer (`bench_fig6._best_of`
+   grows each timed window to >= 50ms);
+3. **confirmation re-runs** — suspected regressions re-run *only their
+   suites* (``--confirm``, default 1) and a row fails only when it
+   regresses in every pass.  Scheduler phantoms (this container shows
+   per-row swings up to 2x) don't reproduce; a real slowdown does.
+
+Rows are matched by suite + their non-volatile fields (k, sort, column,
+backend, scenario, ...); measurements (``us_per_query``,
+``words_scanned``, ``cache_hit_rate``) and validation flags never
+participate in identity.  Rows new to the current run are informational;
+rows missing from it warn but do not fail.
+
+``--update`` rewrites the baseline (how it advances after an accepted
+perf change): it re-runs the timed suites until it holds ``--update-reps``
+samples per row (the current results count as one) and writes the
+*per-row median* — a single run's rows carry up to +-30% sampling bias
+that would then "regress" forever, so one-shot copying is deliberately
+not offered.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+VOLATILE = {"us_per_query", "words_scanned", "cache_hit_rate",
+            "agrees_with_numpy", "agrees_with_dense"}
+
+
+def row_identity(suite: str, row: dict):
+    return (suite, tuple(sorted(
+        (k, v) for k, v in row.items()
+        if k not in VOLATILE and isinstance(v, (str, int, bool)))))
+
+
+def collect(results: dict) -> dict:
+    """results json -> {identity: mean us_per_query} (rows without a
+    us_per_query measurement don't participate in the gate)."""
+    acc: dict = {}
+    for suite, payload in results.items():
+        for row in payload.get("rows", []):
+            if not isinstance(row, dict) or "us_per_query" not in row:
+                continue
+            acc.setdefault(row_identity(suite, row), []).append(
+                float(row["us_per_query"]))
+    return {k: sum(v) / len(v) for k, v in acc.items()}
+
+
+def fmt(ident) -> str:
+    suite, fields = ident
+    return f"{suite}[" + ",".join(f"{k}={v}" for k, v in fields) + "]"
+
+
+def find_regressions(base: dict, cur: dict, tolerance: float,
+                     abs_floor: float, normalize: bool,
+                     factor: float | None = None):
+    """-> (regressions [(ident, adj_baseline, current)], factor,
+    improvements).  Pass an explicit ``factor`` to skip re-deriving the
+    machine factor — the confirmation pass must reuse the main pass's
+    fleet-wide factor, because re-deriving it from only the suspect
+    suites' rows would normalize a genuine uniform regression away (the
+    median ratio of a uniformly-2x-slower suite IS the regression)."""
+    matched = sorted(set(base) & set(cur))
+    if factor is None:
+        factor = 1.0
+        if matched and normalize:
+            ratios = sorted(cur[i] / base[i] for i in matched if base[i] > 0)
+            factor = ratios[len(ratios) // 2]
+    regressions = []
+    improvements = 0
+    for ident in matched:
+        b_adj = base[ident] * factor  # baseline at this machine's speed
+        c = cur[ident]
+        if c > b_adj * (1 + tolerance) and c - b_adj > abs_floor:
+            regressions.append((ident, b_adj, c))
+        elif c < b_adj:
+            improvements += 1
+    return regressions, factor, improvements
+
+
+def rerun_suites(suites) -> dict:
+    """Re-run only the named benchmark suites; return their fresh
+    row measurements (the confirmation pass)."""
+    import subprocess
+    import tempfile
+
+    out = os.path.join(tempfile.mkdtemp(prefix="bench_confirm"),
+                       "benchmarks.json")
+    cmd = [sys.executable, "-m", "benchmarks.run", "--quick",
+           "--only", ",".join(sorted(suites)), "--out", out]
+    print(f"# confirming {len(suites)} suite(s): {' '.join(cmd)}")
+    proc = subprocess.run(cmd, capture_output=True, text=True)
+    if proc.returncode != 0 and not os.path.exists(out):
+        print(proc.stdout[-2000:])
+        print(proc.stderr[-2000:])
+        raise SystemExit(f"confirmation re-run failed: {cmd}")
+    with open(out) as f:
+        return collect(json.load(f))
+
+
+def update_baseline(current: str, baseline: str, reps: int) -> None:
+    """Write ``baseline`` with every timed row at its per-row median over
+    ``reps`` samples (the current results file plus fresh suite re-runs)."""
+    with open(current) as f:
+        data = json.load(f)
+    timed = [(suite, row) for suite, payload in data.items()
+             for row in payload.get("rows", [])
+             if isinstance(row, dict) and "us_per_query" in row]
+    samples: dict = {}
+    for suite, row in timed:
+        samples.setdefault(row_identity(suite, row), []).append(
+            float(row["us_per_query"]))
+    for _ in range(max(0, reps - 1)):
+        for ident, v in rerun_suites({s for s, _ in timed}).items():
+            samples.setdefault(ident, []).append(v)
+    for suite, row in timed:
+        vals = sorted(samples[row_identity(suite, row)])
+        row["us_per_query"] = vals[len(vals) // 2]
+    with open(baseline, "w") as f:
+        json.dump(data, f, indent=1, default=str)
+    print(f"baseline {baseline} reseeded: {len(timed)} timed rows at "
+          f"per-row median of {reps} samples")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="benchmarks/BENCH_baseline.json")
+    ap.add_argument("--current", default="results/benchmarks.json")
+    ap.add_argument("--tolerance", type=float,
+                    default=float(os.environ.get("BENCH_TREND_TOLERANCE",
+                                                 0.25)))
+    ap.add_argument("--abs-floor", type=float, default=5.0,
+                    help="ignore regressions smaller than this many us")
+    ap.add_argument("--no-normalize", action="store_true",
+                    help="skip the median machine-factor normalization")
+    ap.add_argument("--confirm", type=int, default=1,
+                    help="re-run suspect suites this many times; a row "
+                         "fails only if it regresses in every pass (0 = "
+                         "gate on the single sample)")
+    ap.add_argument("--update", action="store_true",
+                    help="reseed the baseline: per-row median of "
+                         "--update-reps samples (current results + fresh "
+                         "re-runs of the timed suites)")
+    ap.add_argument("--update-reps", type=int, default=3)
+    args = ap.parse_args()
+
+    if args.update:
+        update_baseline(args.current, args.baseline, args.update_reps)
+        return
+
+    with open(args.baseline) as f:
+        base = collect(json.load(f))
+    with open(args.current) as f:
+        cur = collect(json.load(f))
+
+    normalize = not args.no_normalize
+    for ident in sorted(set(base) - set(cur)):
+        print(f"# WARN row gone from current run: {fmt(ident)}")
+    for ident in sorted(set(cur) - set(base)):
+        print(f"# new row (no baseline yet): {fmt(ident)}")
+
+    regressions, factor, improvements = find_regressions(
+        base, cur, args.tolerance, args.abs_floor, normalize)
+
+    confirms = 0
+    while regressions and confirms < args.confirm:
+        confirms += 1
+        suspects = {ident for ident, _, _ in regressions}
+        fresh = rerun_suites({ident[0] for ident in suspects})
+        confirmed, cfactor, _ = find_regressions(
+            {i: b for i, b in base.items() if i in fresh},
+            fresh, args.tolerance, args.abs_floor, normalize, factor=factor)
+        still = {ident for ident, _, _ in confirmed} & suspects
+        for ident, b, c in regressions:
+            if ident not in still:
+                print(f"# not reproduced on confirm pass {confirms} "
+                      f"(factor {cfactor:.2f}x): {fmt(ident)}")
+        regressions = [r for r in regressions if r[0] in still]
+
+    for ident, b, c in regressions:
+        print(f"REGRESSION {fmt(ident)}: {b:.1f}us -> {c:.1f}us "
+              f"(+{(c / b - 1):.0%}, tolerance {args.tolerance:.0%}, "
+              f"reproduced on {confirms} confirm pass(es))")
+    print(f"# trend: {len(base)} baseline rows, {len(regressions)} "
+          f"regressions, {improvements} improvements "
+          f"(machine factor {factor:.2f}x, tolerance {args.tolerance:.0%}, "
+          f"floor {args.abs_floor}us, confirm {args.confirm})")
+    if regressions:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

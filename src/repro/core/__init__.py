@@ -3,14 +3,16 @@ histogram-aware row/column reordering, compressed-domain logical ops — behind
 one composable API: IndexSpec (strategy registry) -> BitmapIndex.build ->
 predicate algebra (query.Eq/In/Range/And/Or/Not) -> pluggable backends."""
 
-from . import (column_order, encoding, ewah, histogram, index_size, query,
-               sorting, strategies)
+from . import (column_order, encoding, ewah, ewah_stream, histogram,
+               index_size, query, sorting, strategies)
 from .bitmap_index import BitmapIndex, assign_codes, index_size_report
+from .ewah_stream import EwahStream
 from .query import And, Eq, In, Not, Or, Range
 from .strategies import IndexSpec
 
 __all__ = [
     "BitmapIndex",
+    "EwahStream",
     "IndexSpec",
     "assign_codes",
     "index_size_report",
@@ -23,6 +25,7 @@ __all__ = [
     "column_order",
     "encoding",
     "ewah",
+    "ewah_stream",
     "histogram",
     "index_size",
     "query",

@@ -187,6 +187,16 @@ class BitmapIndex:
         plan = compile_plan(self, pred, names=names)
         return get_backend(backend, **backend_opts).execute(plan)
 
+    def query_compressed(self, pred, backend: str = "numpy", names=None,
+                         **backend_opts):
+        """Compressed-in/compressed-out execution: the result stays an EWAH
+        stream (:class:`~repro.core.ewah_stream.EwahStream` — ``.to_rows()``
+        materializes, ``.count()`` popcounts without expansion), and
+        sub-plan results are memoized in the backend's LRU result cache so
+        cascaded predicates reuse shared work."""
+        plan = compile_plan(self, pred, names=names)
+        return get_backend(backend, **backend_opts).execute_compressed(plan)
+
     def query_many(self, preds, backend: str = "numpy", names=None,
                    **backend_opts):
         """Batch-execute many predicates; on the jax backend, same-shape

@@ -98,158 +98,29 @@ def compressed_size(words: np.ndarray) -> int:
 
 
 # ---------------------------------------------------------------------------
-# Streaming logical operations (compressed domain, O(|A| + |B|)).
+# Streaming logical operations — now in ewah_stream (the public cursor /
+# appender engine).  Lazy re-exports keep ``ewah.logical_op`` etc. working;
+# the import is deferred because ewah_stream imports this module's
+# primitives (PEP 562 module __getattr__, no cycle at load time).
 # ---------------------------------------------------------------------------
 
-
-class _Cursor:
-    """Iterates a compressed stream as (clean_rem, ctype, dirty_rem) runs."""
-
-    __slots__ = ("s", "i", "clean_rem", "ctype", "dirty_rem", "scanned")
-
-    def __init__(self, stream: np.ndarray):
-        self.s = np.asarray(stream, dtype=np.uint32)
-        self.i = 0
-        self.clean_rem = 0
-        self.ctype = 0
-        self.dirty_rem = 0
-        self.scanned = 0
-        self._load()
-
-    def _load(self) -> None:
-        while (
-            self.clean_rem == 0
-            and self.dirty_rem == 0
-            and self.i < len(self.s)
-        ):
-            self.ctype, self.clean_rem, self.dirty_rem = unpack_marker(self.s[self.i])
-            self.i += 1
-            self.scanned += 1
-
-    def exhausted(self) -> bool:
-        return self.clean_rem == 0 and self.dirty_rem == 0 and self.i >= len(self.s)
-
-    def take_clean(self, n: int) -> None:
-        self.clean_rem -= n
-        self._load()
-
-    def take_dirty(self) -> int:
-        w = int(self.s[self.i])
-        self.i += 1
-        self.scanned += 1
-        self.dirty_rem -= 1
-        self._load()
-        return w
-
-    def skip_dirty(self, n: int) -> None:
-        self.i += n
-        self.scanned += n
-        self.dirty_rem -= n
-        self._load()
-
-
-class _Appender:
-    """Re-compresses a stream of words/runs fed to it."""
-
-    def __init__(self):
-        self.out: list[int] = []
-        self.ctype = 0
-        self.n_clean = 0
-        self.dirty: list[int] = []
-
-    def _flush(self) -> None:
-        if self.n_clean or self.dirty:
-            _emit_group(self.out, self.ctype, self.n_clean, np.asarray(self.dirty, dtype=np.uint32))
-            self.ctype, self.n_clean, self.dirty = 0, 0, []
-
-    def add_clean(self, ctype: int, n: int) -> None:
-        if n == 0:
-            return
-        if self.dirty or (self.n_clean and self.ctype != ctype):
-            self._flush()
-        self.ctype = ctype
-        self.n_clean += n
-
-    def add_word(self, w: int) -> None:
-        if w == 0:
-            self.add_clean(0, 1)
-        elif w == 0xFFFFFFFF:
-            self.add_clean(1, 1)
-        else:
-            self.dirty.append(w)
-
-    def finish(self) -> np.ndarray:
-        self._flush()
-        if not self.out:
-            self.out.append(make_marker(0, 0, 0))
-        return np.asarray(self.out, dtype=np.uint32)
-
-
-_OPS = {
-    "and": lambda a, b: a & b,
-    "or": lambda a, b: a | b,
-    "xor": lambda a, b: a ^ b,
+_STREAM_COMPAT = {
+    "_Cursor": "Cursor",
+    "_Appender": "Appender",
+    "logical_op": "logical_op",
+    "logical_many": "logical_many",
+    "logical_not": "logical_not",
+    "concat_streams": "concat_streams",
+    "EwahStream": "EwahStream",
 }
-# (op, clean_type) -> clean run dominates (result is clean of known type)
-_DOMINATES = {("and", 0): 0, ("or", 1): 1}
 
 
-def logical_op(a: np.ndarray, b: np.ndarray, op: str = "and"):
-    """Streaming merge of two EWAH streams; returns (stream, words_scanned).
+def __getattr__(name: str):
+    if name in _STREAM_COMPAT:
+        from . import ewah_stream
 
-    Never decompresses: runs are consumed run-at-a-time so the work is
-    O(|a| + |b|) in *compressed* words (the paper's Section 3 claim).
-    """
-    fn = _OPS[op]
-    ca, cb = _Cursor(a), _Cursor(b)
-    res = _Appender()
-    while not ca.exhausted() and not cb.exhausted():
-        if ca.clean_rem and cb.clean_rem:
-            n = min(ca.clean_rem, cb.clean_rem)
-            ta = fn(ca.ctype, cb.ctype) & 1
-            res.add_clean(ta, n)
-            ca.take_clean(n)
-            cb.take_clean(n)
-        elif ca.clean_rem or cb.clean_rem:
-            clean, other = (ca, cb) if ca.clean_rem else (cb, ca)
-            n = min(clean.clean_rem, other.dirty_rem)
-            dom = _DOMINATES.get((op, clean.ctype))
-            if dom is not None:
-                res.add_clean(dom, n)
-                other.skip_dirty(n)
-            else:
-                pat = 0xFFFFFFFF if clean.ctype else 0
-                for _ in range(n):
-                    res.add_word(fn(other.take_dirty(), pat) & 0xFFFFFFFF)
-            clean.take_clean(n)
-        else:  # both dirty
-            n = min(ca.dirty_rem, cb.dirty_rem)
-            for _ in range(n):
-                res.add_word(fn(ca.take_dirty(), cb.take_dirty()) & 0xFFFFFFFF)
-    # tail: the paper's bitmaps all have equal (uncompressed) length; if one
-    # stream ends early the remainder ops against implicit zeros.
-    for tail in (ca, cb):
-        while not tail.exhausted():
-            if tail.clean_rem:
-                n = tail.clean_rem
-                t = fn(tail.ctype, 0) & 1
-                res.add_clean(t, n)
-                tail.take_clean(n)
-            else:
-                w = tail.take_dirty()
-                res.add_word(fn(w, 0) & 0xFFFFFFFF)
-    return res.finish(), ca.scanned + cb.scanned
-
-
-def logical_many(streams, op: str = "and"):
-    """Fold ``op`` over many compressed bitmaps; returns (stream, scanned)."""
-    assert streams
-    acc = streams[0]
-    total = 0
-    for s in streams[1:]:
-        acc, scanned = logical_op(acc, s, op)
-        total += scanned
-    return acc, total
+        return getattr(ewah_stream, _STREAM_COMPAT[name])
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 # ---------------------------------------------------------------------------

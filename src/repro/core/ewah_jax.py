@@ -42,10 +42,24 @@ def compress(words: jax.Array, capacity: int):
     Requires n_words <= MAX_DIRTY (asserted statically) so that every
     (clean run, dirty run) group fits a single marker.
     """
+    kind = classify(words)
+    start, _ = _run_ids(kind)
+    return compress_from_runs(words, kind, start, capacity)
+
+
+def compress_from_runs(words: jax.Array, kind: jax.Array, start: jax.Array,
+                       capacity: int):
+    """Scan/scatter epilogue of the vectorized compressor.
+
+    ``kind`` (0/1/2 per word) and ``start`` (run-boundary flags) come either
+    from :func:`classify` + ``_run_ids`` (the jnp path in :func:`compress`)
+    or from the fused Pallas prefix pass (``kernels.ops.recompress_batch``).
+    Vmappable — the jax query backend re-encodes a whole batch of query
+    results per dispatch.  Returns (stream[capacity], length).
+    """
     n = words.shape[0]
     assert n <= MAX_DIRTY, f"vectorized path supports <= {MAX_DIRTY} words"
-    kind = classify(words)
-    start, run_id = _run_ids(kind)
+    run_id = jnp.cumsum(start.astype(jnp.int32)) - 1
     n_runs = run_id[-1] + 1
     idx = jnp.arange(n)
 

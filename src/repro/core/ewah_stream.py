@@ -1,37 +1,393 @@
-"""Streaming compressed-domain query ops in JAX (lax.while_loop).
+"""The compressed-domain stream engine: one public cursor/appender core.
 
-The paper's §3 claim — logical ops in time O(|B1| + |B2|) of the
-*compressed* sizes — as an in-graph primitive: a dual-cursor walk over two
-EWAH streams that never materializes the n/32 uncompressed words.  Each
-iteration consumes at least one compressed word (or one clean-run overlap),
-so trip count <= |A| + |B| + #markers.
+Every layer that touches EWAH streams — the numpy logical ops, the query
+backends' compressed execution path, the dist-shard result merge — runs on
+the same two primitives defined here:
 
-``and_popcount`` returns the row count of (A AND B) — the equality-query
-/ data-curation primitive (count rows matching both predicates).  The
-iteration count is returned too, so tests assert the complexity claim.
+  * :class:`Cursor`   — iterates a compressed stream as
+    (clean_rem, ctype, dirty_rem) runs without decompressing;
+  * :class:`Appender` — re-compresses words/runs fed to it, coalescing
+    adjacent clean runs of equal type.
+
+On top of them:
+
+  * :func:`logical_op` / :func:`logical_many` — the paper's §3 streaming
+    merges, O(|A| + |B|) in *compressed* words;
+  * :func:`logical_not` — compressed-domain complement by *marker-type
+    flipping*: clean runs flip their type bit, verbatim words complement in
+    place.  One pass over the stream itself; the dense n/32-word complement
+    is never materialized (a dirty word's complement is still dirty, so the
+    output has exactly the input's run structure);
+  * :func:`concat_streams` — bit-concatenation of word-aligned streams with
+    clean-run coalescing across the seams (the dist-shard merge protocol);
+  * :class:`EwahStream` — the compressed result value object the query
+    backends' ``execute_compressed`` returns.
+
+The jax dual-cursor walk (:func:`and_popcount`) lives here too — it is the
+in-graph rendition of the same cursor state machine.
+
+``ewah.py`` keeps the codec primitives (compress / decompress / marker
+arithmetic) and re-exports the names below for backwards compatibility.
 """
 
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .ewah import WORD_BITS, _emit_group, unpack_marker
+
+__all__ = [
+    "Cursor", "Appender", "EwahStream",
+    "logical_op", "logical_many", "logical_not", "concat_streams",
+    "and_popcount",
+]
 
 
-def _unpack(w):
-    t = (w >> jnp.uint32(31)) & jnp.uint32(1)
-    nc = (w >> jnp.uint32(15)) & jnp.uint32(0xFFFF)
-    nd = w & jnp.uint32(0x7FFF)
-    return t.astype(jnp.int32), nc.astype(jnp.int32), nd.astype(jnp.int32)
+class Cursor:
+    """Iterates a compressed stream as (clean_rem, ctype, dirty_rem) runs.
+
+    ``scanned`` counts compressed words visited — the paper's
+    machine-independent query cost.
+    """
+
+    __slots__ = ("s", "i", "clean_rem", "ctype", "dirty_rem", "scanned")
+
+    def __init__(self, stream: np.ndarray):
+        self.s = np.asarray(stream, dtype=np.uint32)
+        self.i = 0
+        self.clean_rem = 0
+        self.ctype = 0
+        self.dirty_rem = 0
+        self.scanned = 0
+        self._load()
+
+    def _load(self) -> None:
+        while (
+            self.clean_rem == 0
+            and self.dirty_rem == 0
+            and self.i < len(self.s)
+        ):
+            self.ctype, self.clean_rem, self.dirty_rem = unpack_marker(self.s[self.i])
+            self.i += 1
+            self.scanned += 1
+
+    def exhausted(self) -> bool:
+        return self.clean_rem == 0 and self.dirty_rem == 0 and self.i >= len(self.s)
+
+    def take_clean(self, n: int) -> None:
+        self.clean_rem -= n
+        self._load()
+
+    def take_dirty(self) -> int:
+        w = int(self.s[self.i])
+        self.i += 1
+        self.scanned += 1
+        self.dirty_rem -= 1
+        self._load()
+        return w
+
+    def skip_dirty(self, n: int) -> None:
+        self.i += n
+        self.scanned += n
+        self.dirty_rem -= n
+        self._load()
 
 
-def and_popcount(sa: jax.Array, la, sb: jax.Array, lb):
+class Appender:
+    """Re-compresses a stream of words/runs fed to it.
+
+    Adjacent clean runs of equal type merge; words that classify as clean
+    (0x0 / 0xFFFFFFFF) join clean runs even when fed through ``add_word`` —
+    so feeding one stream's runs through an Appender canonicalizes it.
+    """
+
+    def __init__(self):
+        self.out: list[int] = []
+        self.ctype = 0
+        self.n_clean = 0
+        self.dirty: list[int] = []
+        self.n_words = 0  # uncompressed words represented so far
+
+    def _flush(self) -> None:
+        if self.n_clean or self.dirty:
+            _emit_group(self.out, self.ctype, self.n_clean,
+                        np.asarray(self.dirty, dtype=np.uint32))
+            self.ctype, self.n_clean, self.dirty = 0, 0, []
+
+    def add_clean(self, ctype: int, n: int) -> None:
+        if n == 0:
+            return
+        if self.dirty or (self.n_clean and self.ctype != ctype):
+            self._flush()
+        self.ctype = ctype
+        self.n_clean += n
+        self.n_words += n
+
+    def add_word(self, w: int) -> None:
+        if w == 0:
+            self.add_clean(0, 1)
+        elif w == 0xFFFFFFFF:
+            self.add_clean(1, 1)
+        else:
+            self.dirty.append(w)
+            self.n_words += 1
+
+    def add_cursor(self, cur: Cursor) -> None:
+        """Drain a cursor into this appender run-at-a-time (coalescing)."""
+        while not cur.exhausted():
+            if cur.clean_rem:
+                n = cur.clean_rem
+                self.add_clean(cur.ctype, n)
+                cur.take_clean(n)
+            else:
+                self.add_word(cur.take_dirty())
+
+    def finish(self) -> np.ndarray:
+        self._flush()
+        if not self.out:
+            self.out.append(0)  # make_marker(0, 0, 0)
+        return np.asarray(self.out, dtype=np.uint32)
+
+
+@dataclass(frozen=True, eq=False)
+class EwahStream:
+    """A compressed query result: EWAH words + the row count they cover.
+
+    The value object ``execute_compressed`` returns and the dist fan-out
+    ships between shards.  ``data`` encodes exactly
+    ``ceil(n_rows / 32)`` uncompressed words; bits at positions >= n_rows
+    (the final word's padding) are unspecified and truncated by the
+    row-materializing accessors.
+
+    Equality/hash are by content (stream words + row count;
+    ``words_scanned`` is a measurement, not identity) — the generated
+    dataclass comparison would choke on the ndarray field.
+    """
+
+    data: np.ndarray
+    n_rows: int
+    words_scanned: int = field(default=0, compare=False)
+
+    def __eq__(self, other):
+        if not isinstance(other, EwahStream):
+            return NotImplemented
+        return (self.n_rows == other.n_rows
+                and np.array_equal(self.data, other.data))
+
+    def __hash__(self):
+        return hash((self.n_rows,
+                     np.asarray(self.data, dtype=np.uint32).tobytes()))
+
+    @property
+    def n_words(self) -> int:
+        return (self.n_rows + WORD_BITS - 1) // WORD_BITS
+
+    def __len__(self) -> int:
+        return len(self.data)
+
+    def to_words(self) -> np.ndarray:
+        from . import ewah
+
+        return ewah.decompress(self.data, self.n_words)
+
+    def to_bits(self) -> np.ndarray:
+        from . import ewah
+
+        return ewah.unpack_bits(self.to_words(), self.n_rows)
+
+    def to_rows(self) -> np.ndarray:
+        return np.flatnonzero(self.to_bits())
+
+    def count(self) -> int:
+        """Popcount of the valid bits (rows matching), compressed-domain:
+        clean-1 runs count 32*n without expansion; only dirty words and the
+        final padded word are inspected."""
+        total = 0
+        pos = 0  # uncompressed word position
+        cur = Cursor(self.data)
+        last = self.n_words - 1
+        tail_bits = self.n_rows - last * WORD_BITS
+        tail_mask = (1 << tail_bits) - 1 if self.n_rows else 0
+        while not cur.exhausted():
+            if cur.clean_rem:
+                n = cur.clean_rem
+                if cur.ctype:
+                    total += n * WORD_BITS
+                    if pos + n - 1 == last:
+                        total -= WORD_BITS - tail_bits
+                pos += n
+                cur.take_clean(n)
+            else:
+                w = cur.take_dirty()
+                if pos == last:
+                    w &= tail_mask
+                total += bin(w).count("1")
+                pos += 1
+        return total
+
+
+# ---------------------------------------------------------------------------
+# Streaming logical operations (compressed domain, O(|A| + |B|)).
+# ---------------------------------------------------------------------------
+
+_OPS = {
+    "and": lambda a, b: a & b,
+    "or": lambda a, b: a | b,
+    "xor": lambda a, b: a ^ b,
+}
+# (op, clean_type) -> clean run dominates (result is clean of known type)
+_DOMINATES = {("and", 0): 0, ("or", 1): 1}
+
+
+def logical_op(a: np.ndarray, b: np.ndarray, op: str = "and"):
+    """Streaming merge of two EWAH streams; returns (stream, words_scanned).
+
+    Never decompresses: runs are consumed run-at-a-time so the work is
+    O(|a| + |b|) in *compressed* words (the paper's Section 3 claim).
+    """
+    fn = _OPS[op]
+    ca, cb = Cursor(a), Cursor(b)
+    res = Appender()
+    while not ca.exhausted() and not cb.exhausted():
+        if ca.clean_rem and cb.clean_rem:
+            n = min(ca.clean_rem, cb.clean_rem)
+            ta = fn(ca.ctype, cb.ctype) & 1
+            res.add_clean(ta, n)
+            ca.take_clean(n)
+            cb.take_clean(n)
+        elif ca.clean_rem or cb.clean_rem:
+            clean, other = (ca, cb) if ca.clean_rem else (cb, ca)
+            n = min(clean.clean_rem, other.dirty_rem)
+            dom = _DOMINATES.get((op, clean.ctype))
+            if dom is not None:
+                res.add_clean(dom, n)
+                other.skip_dirty(n)
+            else:
+                pat = 0xFFFFFFFF if clean.ctype else 0
+                for _ in range(n):
+                    res.add_word(fn(other.take_dirty(), pat) & 0xFFFFFFFF)
+            clean.take_clean(n)
+        else:  # both dirty
+            n = min(ca.dirty_rem, cb.dirty_rem)
+            for _ in range(n):
+                res.add_word(fn(ca.take_dirty(), cb.take_dirty()) & 0xFFFFFFFF)
+    # tail: the paper's bitmaps all have equal (uncompressed) length; if one
+    # stream ends early the remainder ops against implicit zeros.
+    for tail in (ca, cb):
+        while not tail.exhausted():
+            if tail.clean_rem:
+                n = tail.clean_rem
+                t = fn(tail.ctype, 0) & 1
+                res.add_clean(t, n)
+                tail.take_clean(n)
+            else:
+                w = tail.take_dirty()
+                res.add_word(fn(w, 0) & 0xFFFFFFFF)
+    return res.finish(), ca.scanned + cb.scanned
+
+
+def logical_many(streams, op: str = "and"):
+    """Fold ``op`` over many compressed bitmaps; returns (stream, scanned).
+
+    ``and``/``or`` fold smallest-pair-first through a min-heap on actual
+    compressed sizes (the paper's smallest-streams-first cost model);
+    ``xor`` — associative and commutative but size-agnostic (a xor can grow
+    past both inputs) — folds the same way, which keeps one code path for
+    all three ops instead of the former binary-only left fold.
+    """
+    import heapq
+
+    assert streams
+    if len(streams) == 1:
+        return np.asarray(streams[0], dtype=np.uint32), 0
+    if op not in _OPS:
+        raise ValueError(f"unknown op {op!r}; supported: {', '.join(_OPS)}")
+    heap = [(len(s), i, s) for i, s in enumerate(streams)]
+    heapq.heapify(heap)
+    tiebreak = len(heap)
+    total = 0
+    while len(heap) > 1:
+        _, _, a = heapq.heappop(heap)
+        _, _, b = heapq.heappop(heap)
+        r, scanned = logical_op(a, b, op)
+        total += scanned
+        heapq.heappush(heap, (len(r), tiebreak, r))
+        tiebreak += 1
+    return heap[0][2], total
+
+
+def logical_not(stream: np.ndarray, n_words: int | None = None):
+    """Compressed-domain complement; returns (stream, words_scanned).
+
+    Marker-type flipping: every clean run re-emits with its type bit
+    flipped, every verbatim word complements in place (a dirty word's
+    complement is neither 0x0 nor 0xFFFFFFFF, so it stays dirty).  One pass
+    over the compressed words — the dense complement is never materialized
+    and the output has exactly the input's run structure (same size).
+
+    ``n_words`` pads a short stream's implicit zero tail to clean-1s so the
+    complement covers the full bitmap length.
+    """
+    cur = Cursor(stream)
+    res = Appender()
+    while not cur.exhausted():
+        if cur.clean_rem:
+            n = cur.clean_rem
+            res.add_clean(1 - cur.ctype, n)
+            cur.take_clean(n)
+        else:
+            res.add_word(~cur.take_dirty() & 0xFFFFFFFF)
+    if n_words is not None and res.n_words < n_words:
+        res.add_clean(1, n_words - res.n_words)
+    return res.finish(), cur.scanned
+
+
+def concat_streams(parts) -> np.ndarray:
+    """Bit-concatenate compressed streams with clean-run coalescing.
+
+    ``parts`` is an iterable of EWAH uint32 arrays.  Every part except the
+    last must cover a multiple-of-32 rows (word alignment — the dist
+    fan-out's shard splitter guarantees it), so concatenating in word space
+    is concatenating in row space.  Runs feed through one shared
+    :class:`Appender`, so a clean run ending one shard and starting the next
+    merges into a single marker ("concatenation with clean-run coalescing",
+    the shard merge protocol).
+    """
+    res = Appender()
+    for s in parts:
+        res.add_cursor(Cursor(s))
+    return res.finish()
+
+
+# ---------------------------------------------------------------------------
+# In-graph dual-cursor walk (jax).
+# ---------------------------------------------------------------------------
+
+
+def and_popcount(sa, la, sb, lb):
     """Popcount of (A AND B) over two EWAH streams (uint32 arrays + lengths).
 
-    Returns (count, iterations).  Streams must encode the same number of
-    uncompressed words (the index builder guarantees this).
+    The lax.while_loop rendition of the dual-cursor state machine above:
+    each iteration consumes at least one compressed word (or one clean-run
+    overlap), so trip count <= |A| + |B| + #markers — the paper's §3
+    O(|B1| + |B2|) claim as an in-graph primitive.  Returns
+    (count, iterations); tests assert the complexity claim on the
+    iteration count.  Streams must encode the same number of uncompressed
+    words (the index builder guarantees this).
     """
+    import jax
+    import jax.numpy as jnp
+
     sa = sa.astype(jnp.uint32)
     sb = sb.astype(jnp.uint32)
+
+    def _unpack(w):
+        t = (w >> jnp.uint32(31)) & jnp.uint32(1)
+        nc = (w >> jnp.uint32(15)) & jnp.uint32(0xFFFF)
+        nd = w & jnp.uint32(0x7FFF)
+        return t.astype(jnp.int32), nc.astype(jnp.int32), nd.astype(jnp.int32)
 
     # cursor: (i, clean_rem, clean_type, dirty_rem)
     def load(s, length, cur):

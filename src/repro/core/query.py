@@ -16,27 +16,42 @@ fan-in.  Fan-in children are ordered smallest-estimated-size-first (leaf cost
 
 Backends (pluggable via :func:`register_backend`):
 
-* ``numpy`` — compressed-domain streaming merges (``ewah.logical_op``),
-  never decompressing intermediates; ``words_scanned`` counts compressed
-  words the cursors actually visited (the paper's machine-independent cost).
+* ``numpy`` — compressed-domain streaming merges (``ewah_stream``
+  cursor/appender engine), never decompressing intermediates;
+  ``words_scanned`` counts compressed words the cursors actually visited
+  (the paper's machine-independent cost).
 * ``jax``  — batched in-graph execution: leaf streams are padded to a
   capacity bucket, decompressed with ``ewah_jax.decompress`` (vmapped over
   queries x leaves), and fan-ins fold in word space through the Pallas
   word-op kernel (``kernels.ops.wordops_fold``), many queries per dispatch.
   ``words_scanned`` is the total compressed leaf words read.
 
-Backends agree on row ids; tests assert it (tests/test_query_plane.py).
+Each backend exposes two result surfaces:
+
+* ``execute(plan) -> (row_ids, words_scanned)`` — the row-id path;
+* ``execute_compressed(plan) -> EwahStream`` — compressed in, compressed
+  out: the result stays an EWAH stream (``Not`` by marker-type flipping on
+  numpy, in-graph recompression through the Pallas classify/run-start
+  kernel on jax), backed by an LRU result cache keyed by the canonical
+  plan root with content-digested leaves, so cascaded / overlapping
+  predicates reuse sub-plan results.
+
+Backends agree bit-for-bit; tests assert it (tests/test_query_plane.py,
+tests/test_compressed_engine.py).
 """
 
 from __future__ import annotations
 
-import heapq
+import hashlib
+import weakref
+from collections import OrderedDict
 from dataclasses import dataclass
 from functools import lru_cache
 
 import numpy as np
 
-from . import ewah
+from . import ewah, ewah_stream
+from .ewah_stream import EwahStream
 
 # ---------------------------------------------------------------------------
 # Predicate algebra
@@ -249,7 +264,21 @@ def compile_plan(index, pred: Predicate, names=None) -> Plan:
             # Range(col, 0, 10**9) must not iterate a billion values
             pos = resolve(p.col)
             card = index.columns[pos].codes.shape[0]
-            return values_node(pos, range(max(p.lo, 0), min(p.hi, card - 1) + 1))
+            lo, hi = max(p.lo, 0), min(p.hi, card - 1)
+            if lo > hi:
+                return leaf(_zero_stream(index.n_rows))
+            width = hi - lo + 1
+            # a range spanning more than half the domain compiles through
+            # the compressed-domain complement: Not(In(complement)) halves
+            # the OR fan-in (rows hold exactly one dense value id, so the
+            # complement-In is exact), and Not is a marker-type flip — same
+            # compressed size as its child, no densification
+            if width > card - width:
+                if width == card:
+                    return leaf(_ones_stream(index.n_rows))
+                return ("not",
+                        values_node(pos, [*range(0, lo), *range(hi + 1, card)]))
+            return values_node(pos, range(lo, hi + 1))
         if isinstance(p, And):
             return _fanin("and", [build(c) for c in p.children])
         if isinstance(p, Or):
@@ -304,7 +333,9 @@ def _cost_order(node, streams, n_words: int):
         if nd[0] == "leaf":
             return len(streams[nd[1]])
         if nd[0] == "not":
-            return n_words + 2  # complement of a compressible run can be dense
+            # marker-type flipping preserves run structure: the complement
+            # has exactly the child's compressed size
+            return est(nd[1]) + 1
         return sum(est(c) for c in nd[1])
 
     def rec(nd):
@@ -316,6 +347,101 @@ def _cost_order(node, streams, n_words: int):
         return (nd[0], tuple(children))
 
     return rec(node)
+
+
+# ---------------------------------------------------------------------------
+# Compressed-result cache
+# ---------------------------------------------------------------------------
+
+
+_DIGEST_MEMO: dict = {}  # id(stream) -> (weakref, digest)
+
+
+def _leaf_digest(stream) -> bytes:
+    """Content digest of a leaf stream, memoized per array object.
+
+    Leaf streams are immutable after ``BitmapIndex.build``, so the digest
+    is computed once per stream instead of once per query (a cache *hit*
+    must not cost O(leaf bytes)).  The memo key is the object's id with a
+    weakref identity check, so a recycled id can never alias a dead array.
+    """
+    key = id(stream)
+    hit = _DIGEST_MEMO.get(key)
+    if hit is not None and hit[0]() is stream:
+        return hit[1]
+    s = np.ascontiguousarray(stream, dtype=np.uint32)
+    digest = hashlib.blake2b(s.tobytes(), digest_size=12).digest()
+    try:
+        # the death callback evicts the entry, so the memo's size is
+        # bounded by the number of *live* digested arrays — no sweeps
+        ref = weakref.ref(stream,
+                          lambda _, k=key: _DIGEST_MEMO.pop(k, None))
+    except TypeError:
+        return digest  # non-weakref-able input: skip memoization
+    _DIGEST_MEMO[key] = (ref, digest)
+    return digest
+
+
+def _node_key(node, digests, n_rows: int):
+    """Canonical cache key for a (sub-)plan: the op tree with each leaf
+    index replaced by a content digest of its stream.  Equal sub-plans hit
+    across plans, indexes, and predicate spellings; rebuilding an index
+    changes the digests, so stale entries can never be returned."""
+
+    def rec(nd):
+        if nd[0] == "leaf":
+            return ("L", digests[nd[1]])
+        if nd[0] == "not":
+            return ("not", rec(nd[1]))
+        return (nd[0], tuple(rec(c) for c in nd[1]))
+
+    return (n_rows, rec(node))
+
+
+class ResultCache:
+    """LRU cache of compressed (sub-)plan results, shared across queries.
+
+    Values are EWAH streams, keys come from :func:`_node_key`.  Capacity
+    is **entry-count** based (``maxsize`` results, not a byte budget) —
+    each entry holds only a compressed stream, but very large results
+    count the same as tiny ones.  ``hits`` / ``misses`` feed the
+    cache-hit-rate benchmark and capacity tuning."""
+
+    def __init__(self, maxsize: int = 256):
+        self.maxsize = maxsize
+        self._data: OrderedDict = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key):
+        if key in self._data:
+            self._data.move_to_end(key)
+            self.hits += 1
+            return self._data[key]
+        self.misses += 1
+        return None
+
+    def put(self, key, value) -> None:
+        self._data[key] = value
+        self._data.move_to_end(key)
+        while len(self._data) > self.maxsize:
+            self._data.popitem(last=False)
+
+    def clear(self) -> None:
+        self._data.clear()
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / max(self.hits + self.misses, 1)
+
+    def stats(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "entries": len(self._data), "hit_rate": self.hit_rate}
 
 
 # ---------------------------------------------------------------------------
@@ -367,11 +493,22 @@ def get_backend(name: str, **opts):
 class NumpyBackend:
     """Compressed-domain streaming execution (paper §3, O(|A|+|B|) merges).
 
-    Fan-ins fold through a min-heap on actual compressed sizes, so the
-    cheapest intermediate results merge first.  A bare-leaf root (k=1
-    equality) costs its own stream length — the words a scan touches to
-    materialize the answer.
+    Fan-ins fold through ``ewah_stream.logical_many`` (min-heap on actual
+    compressed sizes: cheapest intermediates merge first); ``Not`` is a
+    marker-type flip (``ewah_stream.logical_not``), never an XOR against a
+    materialized all-ones bitmap.  A bare-leaf root (k=1 equality) costs
+    its own stream length — the words a scan touches to materialize the
+    answer.
+
+    ``execute`` is the uncached row-id oracle path; ``execute_compressed``
+    returns the result as an :class:`EwahStream` and memoizes every
+    internal node in ``result_cache``, so cascaded predicates sharing
+    sub-plans (the same ``In`` selector AND'd with varying filters, a
+    repeated dashboard query) skip the merge entirely.
     """
+
+    def __init__(self, cache_size: int = 256):
+        self.result_cache = ResultCache(cache_size)
 
     def execute(self, plan: Plan):
         stream, scanned = self._eval(plan, plan.root)
@@ -383,28 +520,44 @@ class NumpyBackend:
     def execute_many(self, plans):
         return [self.execute(p) for p in plans]
 
-    def _eval(self, plan: Plan, node):
-        kind = node[0]
-        if kind == "leaf":
-            return plan.streams[node[1]], 0
-        if kind == "not":
-            s, scanned = self._eval(plan, node[1])
-            r, sc = ewah.logical_op(s, _ones_stream(plan.n_rows), "xor")
+    def execute_compressed(self, plan: Plan) -> EwahStream:
+        digests = [_leaf_digest(s) for s in plan.streams]
+        stream, scanned = self._eval_cached(plan, plan.root, digests)
+        if plan.root[0] == "leaf":
+            scanned = len(stream)
+        return EwahStream(np.asarray(stream, dtype=np.uint32), plan.n_rows,
+                          int(scanned))
+
+    def execute_compressed_many(self, plans):
+        return [self.execute_compressed(p) for p in plans]
+
+    def _combine(self, plan: Plan, node, eval_child):
+        if node[0] == "not":
+            s, scanned = eval_child(node[1])
+            r, sc = ewah_stream.logical_not(s, plan.n_words)
             return r, scanned + sc
         op, children = node
-        parts = [self._eval(plan, c) for c in children]
+        parts = [eval_child(c) for c in children]
         scanned = sum(sc for _, sc in parts)
-        heap = [(len(s), i, s) for i, (s, _) in enumerate(parts)]
-        heapq.heapify(heap)
-        tiebreak = len(heap)
-        while len(heap) > 1:
-            _, _, a = heapq.heappop(heap)
-            _, _, b = heapq.heappop(heap)
-            r, sc = ewah.logical_op(a, b, op)
-            scanned += sc
-            heapq.heappush(heap, (len(r), tiebreak, r))
-            tiebreak += 1
-        return heap[0][2], scanned
+        r, sc = ewah_stream.logical_many([s for s, _ in parts], op)
+        return r, scanned + sc
+
+    def _eval(self, plan: Plan, node):
+        if node[0] == "leaf":
+            return plan.streams[node[1]], 0
+        return self._combine(plan, node, lambda c: self._eval(plan, c))
+
+    def _eval_cached(self, plan: Plan, node, digests):
+        if node[0] == "leaf":
+            return plan.streams[node[1]], 0
+        key = _node_key(node, digests, plan.n_rows)
+        hit = self.result_cache.get(key)
+        if hit is not None:
+            return hit, 0  # reused: no compressed words visited
+        r, scanned = self._combine(
+            plan, node, lambda c: self._eval_cached(plan, c, digests))
+        self.result_cache.put(key, r)
+        return r, scanned
 
 
 @register_backend("jax")
@@ -421,10 +574,12 @@ class JaxBackend:
     variants stay bounded across query mixes.
     """
 
-    def __init__(self, use_kernel: bool = True, interpret=None):
+    def __init__(self, use_kernel: bool = True, interpret=None,
+                 cache_size: int = 256):
         self.use_kernel = use_kernel
         self.interpret = interpret
         self._jit_cache: dict = {}
+        self.result_cache = ResultCache(cache_size)
 
     def execute(self, plan: Plan):
         return self.execute_many([plan])[0]
@@ -433,22 +588,8 @@ class JaxBackend:
         import jax.numpy as jnp
 
         out: list = [None] * len(plans)
-        groups: dict = {}
-        for i, p in enumerate(plans):
-            cap = _capacity_bucket(max(len(s) for s in p.streams))
-            # key on the full root (leaf indices included), not signature():
-            # only plans with an identical leaf-to-stream mapping may share
-            # a compiled program
-            key = (p.root, cap, p.n_rows)
-            groups.setdefault(key, []).append(i)
-        for (root, cap, n_rows), idxs in groups.items():
-            m = len(plans[idxs[0]].streams)
-            batch = np.zeros((len(idxs), m, cap), dtype=np.uint32)
-            lengths = np.zeros((len(idxs), m), dtype=np.int32)
-            for b, i in enumerate(idxs):
-                for j, s in enumerate(plans[i].streams):
-                    batch[b, j, : len(s)] = s
-                    lengths[b, j] = len(s)
+        for (root, cap, n_rows), idxs in self._group(plans).items():
+            batch, lengths = self._pad_group(plans, idxs, cap)
             n_words = (n_rows + ewah.WORD_BITS - 1) // ewah.WORD_BITS
             fn = self._compiled(root, cap, n_words)
             words = np.asarray(fn(jnp.asarray(batch), jnp.asarray(lengths)))
@@ -457,8 +598,74 @@ class JaxBackend:
                 out[i] = (np.flatnonzero(bits), plans[i].leaf_words())
         return out
 
-    def _compiled(self, root, capacity: int, n_words: int):
-        key = (root, capacity, n_words, self.use_kernel, self.interpret)
+    def execute_compressed(self, plan: Plan) -> EwahStream:
+        return self.execute_compressed_many([plan])[0]
+
+    def execute_compressed_many(self, plans):
+        """Batched compressed-in/compressed-out execution: uncached plans
+        group exactly like ``execute_many``, but the compiled program ends
+        with the in-graph recompression stage (Pallas classify/run-start
+        kernel + vmapped scan/scatter emit), so results come back as EWAH
+        streams, whole-plan results land in ``result_cache``."""
+        import jax.numpy as jnp
+
+        out: list = [None] * len(plans)
+        keys: list = [None] * len(plans)
+        todo = []
+        for i, p in enumerate(plans):
+            digests = [_leaf_digest(s) for s in p.streams]
+            keys[i] = _node_key(p.root, digests, p.n_rows)
+            hit = self.result_cache.get(keys[i])
+            if hit is not None:
+                out[i] = EwahStream(hit.data, hit.n_rows, 0)  # cache: no scan
+            else:
+                todo.append(i)
+        for (root, cap, n_rows), idxs in self._group(plans, todo).items():
+            batch, lengths = self._pad_group(plans, idxs, cap)
+            n_words = (n_rows + ewah.WORD_BITS - 1) // ewah.WORD_BITS
+            if n_words <= ewah.MAX_DIRTY:
+                fn = self._compiled(root, cap, n_words, compressed=True)
+                streams, lens = fn(jnp.asarray(batch), jnp.asarray(lengths))
+                streams, lens = np.asarray(streams), np.asarray(lens)
+                enc = [streams[b, : lens[b]] for b in range(len(idxs))]
+            else:
+                # beyond the single-marker-per-group limit of the vectorized
+                # emit (~1M rows) the re-encode happens host-side
+                fn = self._compiled(root, cap, n_words)
+                words = np.asarray(fn(jnp.asarray(batch), jnp.asarray(lengths)))
+                enc = [ewah.compress(words[b]) for b in range(len(idxs))]
+            for b, i in enumerate(idxs):
+                res = EwahStream(enc[b], n_rows, plans[i].leaf_words())
+                self.result_cache.put(keys[i], res)
+                out[i] = res
+        return out
+
+    def _group(self, plans, idxs=None) -> dict:
+        groups: dict = {}
+        for i in range(len(plans)) if idxs is None else idxs:
+            p = plans[i]
+            cap = _capacity_bucket(max(len(s) for s in p.streams))
+            # key on the full root (leaf indices included), not signature():
+            # only plans with an identical leaf-to-stream mapping may share
+            # a compiled program
+            groups.setdefault((p.root, cap, p.n_rows), []).append(i)
+        return groups
+
+    @staticmethod
+    def _pad_group(plans, idxs, cap):
+        m = len(plans[idxs[0]].streams)
+        batch = np.zeros((len(idxs), m, cap), dtype=np.uint32)
+        lengths = np.zeros((len(idxs), m), dtype=np.int32)
+        for b, i in enumerate(idxs):
+            for j, s in enumerate(plans[i].streams):
+                batch[b, j, : len(s)] = s
+                lengths[b, j] = len(s)
+        return batch, lengths
+
+    def _compiled(self, root, capacity: int, n_words: int,
+                  compressed: bool = False):
+        key = (root, capacity, n_words, compressed,
+               self.use_kernel, self.interpret)
         if key in self._jit_cache:
             return self._jit_cache[key]
         import jax
@@ -485,7 +692,13 @@ class JaxBackend:
                     use_kernel=use_kernel, interpret=interpret)
                 return folded.reshape(parts.shape[1:])
 
-            return ev(root)
+            words = ev(root)
+            if not compressed:
+                return words
+            # worst-case EWAH size for n words is n + 1 (all-dirty: one
+            # marker + n verbatim words; clean groups only shrink it)
+            return kops.recompress_batch(
+                words, n_words + 1, use_kernel=use_kernel, interpret=interpret)
 
         fn = jax.jit(run)
         self._jit_cache[key] = fn

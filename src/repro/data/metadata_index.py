@@ -8,6 +8,14 @@ workload; the index is built with histogram-aware column ordering and
 Gray-Frequency row sorting (the paper's best heuristics) and queried through
 the predicate planner (repro.core.query), on either the numpy streaming
 backend or the batched jax backend.
+
+With ``query_fanout > 1`` the index shards over word-aligned row ranges
+(``repro.dist.query_fanout``) and every query fans out, each shard
+executing in the compressed domain and shipping its compressed result
+stream.  Fan-out queries return row ids in **original** (ingest) row order
+— there is no global reordered space across independently sorted shards —
+whereas the single-index path keeps the historical reordered-space ids
+(map back with ``index.row_perm[row_ids]``).
 """
 
 from __future__ import annotations
@@ -21,34 +29,61 @@ class MetadataIndex:
     COLS = ("source", "domain", "quality_bin", "length_bin")
 
     def __init__(self, k: int = 1, row_order: str = "grayfreq",
-                 spec: IndexSpec | None = None):
+                 spec: IndexSpec | None = None, query_fanout: int = 0):
         self.spec = spec or IndexSpec(k=k, row_order=row_order,
                                       column_order="heuristic")
         self.k = self.spec.k
         self.row_order = self.spec.row_order
+        self.query_fanout = query_fanout
         self._rows = {c: [] for c in self.COLS}
         self._index: BitmapIndex | None = None
+        self._sharded = None
 
     def add_batch(self, meta: dict):
         for c in self.COLS:
             self._rows[c].append(np.asarray(meta[c]))
         self._index = None
+        self._sharded = None
+
+    def _cols(self):
+        return [np.concatenate(self._rows[c]) for c in self.COLS]
 
     def build(self):
-        cols = [np.concatenate(self._rows[c]) for c in self.COLS]
-        self._index = BitmapIndex.build(cols, self.spec)
+        if self.query_fanout > 1:
+            return self.sharded
+        self._index = BitmapIndex.build(self._cols(), self.spec)
         return self._index
 
     @property
     def index(self) -> BitmapIndex:
+        if self.query_fanout > 1:
+            # a silently-built second full index would double memory and
+            # answer in a different row space than the fan-out path
+            raise ValueError(
+                "MetadataIndex was built with query_fanout="
+                f"{self.query_fanout}; use .sharded (row ids from queries "
+                "are original ingest positions, not reordered space)")
         if self._index is None:
-            self.build()
+            self._index = BitmapIndex.build(self._cols(), self.spec)
         return self._index
+
+    @property
+    def sharded(self):
+        if self._sharded is None:
+            from ..dist.query_fanout import ShardedIndex
+
+            self._sharded = ShardedIndex.build(
+                self._cols(), self.spec, n_shards=self.query_fanout,
+                names=self.COLS)
+        return self._sharded
 
     def query_pred(self, pred, backend: str = "numpy"):
         """Run any predicate (columns by name, e.g. ``Eq("domain", 3)`` or
         ``In("quality_bin", range(8, 16))``) through the planner.
-        Returns (row_ids, compressed_words_scanned)."""
+        Returns (row_ids, compressed_words_scanned); with fan-out active,
+        row ids are original ingest positions (see module docstring)."""
+        if self.query_fanout > 1:
+            return self.sharded.query(pred, backend=backend, names=self.COLS)
         return self.index.query(pred, backend=backend, names=self.COLS)
 
     def query(self, _backend: str = "numpy", **conditions):
@@ -61,4 +96,6 @@ class MetadataIndex:
         return self.query_pred(pred, backend=_backend)
 
     def size_words(self) -> int:
+        if self.query_fanout > 1:
+            return self.sharded.size_words()
         return self.index.size_words()

@@ -1,11 +1,14 @@
-"""Distributed layer: placement (sharding) and fault tolerance (checkpoint)."""
+"""Distributed layer: placement (sharding), fault tolerance (checkpoint),
+and query fan-out over row-range index shards (query_fanout)."""
 
-from . import checkpoint, sharding
+from . import checkpoint, query_fanout, sharding
+from .query_fanout import IndexShard, ShardedIndex, shard_ranges
 from .sharding import (batch_shardings, cache_shardings, opt_shardings,
                        param_shardings, replicated)
 
 __all__ = [
-    "checkpoint", "sharding",
+    "checkpoint", "query_fanout", "sharding",
+    "IndexShard", "ShardedIndex", "shard_ranges",
     "batch_shardings", "cache_shardings", "opt_shardings",
     "param_shardings", "replicated",
 ]

@@ -1,0 +1,176 @@
+"""Query fan-out across row-range shards of a bitmap index.
+
+Sharding-for-serving counterpart of the placement/checkpoint modules: a
+table splits into contiguous *word-aligned* row ranges (every boundary a
+multiple of 32 rows, so shard result bitmaps concatenate in word space),
+each shard builds its own locally-sorted :class:`BitmapIndex`, and a query
+fans out as
+
+  1. the predicate compiles *per shard* against that shard's index (value
+     domains are shard-local: a value a shard never saw compiles to a
+     constant-empty leaf, and ``Not`` complements only the shard's row
+     range);
+  2. every shard executes the plan through ``execute_compressed`` — the
+     result that crosses the (logical) wire is the compressed EWAH stream,
+     not row ids, typically orders of magnitude smaller;
+  3. the coordinator merges by **concatenation with clean-run coalescing**
+     (:func:`~repro.core.ewah_stream.concat_streams`): a clean run ending
+     one shard and opening the next collapses into a single marker, so the
+     merged stream is exactly what a single-shard execution over the
+     concatenated row space would produce.
+
+Shards are independent — the per-shard step parallelizes across processes
+or hosts without coordination; this module keeps the execution loop local
+and the *protocol* (word alignment, compressed shipping, coalescing merge)
+is what `docs/dist.md` specifies for a multi-host deployment.
+
+Row-id semantics: each shard's local ids live in its own reordered row
+space; :meth:`ShardedIndex.query` maps them through the shard's
+``row_perm`` and row offset, so fan-out queries return **original** table
+row positions (unlike ``BitmapIndex.query``, whose ids live in reordered
+space — there is no global reordered space across independently sorted
+shards).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from ..core import BitmapIndex
+from ..core.ewah import WORD_BITS
+from ..core.ewah_stream import EwahStream, concat_streams
+from ..core.query import compile_plan, get_backend
+
+
+def shard_ranges(n_rows: int, n_shards: int) -> list:
+    """Split ``n_rows`` into up to ``n_shards`` contiguous [start, stop)
+    ranges with every internal boundary word-aligned (multiple of 32 rows).
+    Ranges cover the table exactly; empty ranges are dropped (tiny tables
+    yield fewer shards than requested)."""
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    words = (n_rows + WORD_BITS - 1) // WORD_BITS
+    bounds = [min((words * i // n_shards) * WORD_BITS, n_rows)
+              for i in range(n_shards)] + [n_rows]
+    return [(bounds[i], bounds[i + 1]) for i in range(n_shards)
+            if bounds[i + 1] > bounds[i]]
+
+
+@dataclass
+class IndexShard:
+    """One shard: a locally-built index over rows [row_start, row_stop)."""
+
+    index: BitmapIndex
+    row_start: int
+    row_stop: int
+
+    @property
+    def n_rows(self) -> int:
+        return self.row_stop - self.row_start
+
+    def original_rows(self, local_rows: np.ndarray) -> np.ndarray:
+        """Map shard-local reordered row ids to original table positions."""
+        return self.row_start + self.index.row_perm[np.asarray(local_rows)]
+
+
+class ShardedIndex:
+    """A bitmap index fanned out over word-aligned row-range shards."""
+
+    def __init__(self, shards: list, names=None):
+        if not shards:
+            raise ValueError("ShardedIndex needs at least one shard")
+        self.shards = shards
+        self.names = names
+
+    @staticmethod
+    def build(table_cols, spec=None, n_shards: int = 4,
+              names=None) -> "ShardedIndex":
+        """Build one :class:`BitmapIndex` per word-aligned row range.
+
+        Each shard sorts its own rows (the paper's reordering applies per
+        shard — sorted runs never span shard boundaries, which is also what
+        keeps shard builds embarrassingly parallel)."""
+        table_cols = [np.asarray(c) for c in table_cols]
+        n_rows = len(table_cols[0])
+        shards = [
+            IndexShard(
+                index=BitmapIndex.build([c[start:stop] for c in table_cols],
+                                        spec),
+                row_start=start, row_stop=stop)
+            for start, stop in shard_ranges(n_rows, n_shards)
+        ]
+        return ShardedIndex(shards, names=names)
+
+    @property
+    def n_rows(self) -> int:
+        return self.shards[-1].row_stop
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.shards)
+
+    def size_words(self) -> int:
+        return sum(sh.index.size_words() for sh in self.shards)
+
+    # -- execution ---------------------------------------------------------
+
+    def execute_compressed(self, pred, backend: str = "numpy", names=None,
+                           **backend_opts):
+        """Fan the predicate out; returns (shard_results, merged).
+
+        ``shard_results`` is the per-shard list of
+        :class:`~repro.core.ewah_stream.EwahStream` (what each shard ships);
+        ``merged`` is their concatenation with clean-run coalescing — one
+        compressed stream over the full row space, bit-identical to a
+        single-index execution over the same (per-shard reordered) rows.
+        """
+        return self.execute_compressed_many(
+            [pred], backend=backend, names=names, **backend_opts)[0]
+
+    def execute_compressed_many(self, preds, backend: str = "numpy",
+                                names=None, **backend_opts):
+        """Batched fan-out: all predicates' per-shard plans go to the
+        backend in **one** ``execute_compressed_many`` call, so the jax
+        backend's same-shape grouping batches across predicates *and*
+        shards (one padded dispatch per plan shape, not one per
+        predicate x shard).  Returns a (shard_results, merged) pair per
+        predicate."""
+        names = names if names is not None else self.names
+        be = get_backend(backend, **backend_opts)
+        plans = [compile_plan(sh.index, p, names=names)
+                 for p in preds for sh in self.shards]
+        if hasattr(be, "execute_compressed_many"):
+            results = be.execute_compressed_many(plans)
+        else:
+            results = [be.execute_compressed(p) for p in plans]
+        out = []
+        n = len(self.shards)
+        for i in range(len(preds)):
+            per_shard = results[i * n : (i + 1) * n]
+            merged = EwahStream(
+                concat_streams([r.data for r in per_shard]), self.n_rows,
+                sum(r.words_scanned for r in per_shard))
+            out.append((per_shard, merged))
+        return out
+
+    def query(self, pred, backend: str = "numpy", names=None,
+              **backend_opts):
+        """Fan-out query; returns (row_ids, words_scanned) with row ids in
+        **original** table row space, sorted ascending (each shard's local
+        ids map through its ``row_perm`` + row offset)."""
+        return self.query_many([pred], backend=backend, names=names,
+                               **backend_opts)[0]
+
+    def query_many(self, preds, backend: str = "numpy", names=None,
+                   **backend_opts):
+        """Batched fan-out queries; one (row_ids, words_scanned) per
+        predicate, row ids in original table row space."""
+        out = []
+        for per_shard, merged in self.execute_compressed_many(
+                preds, backend=backend, names=names, **backend_opts):
+            ids = [sh.original_rows(r.to_rows())
+                   for sh, r in zip(self.shards, per_shard)]
+            out.append((np.sort(np.concatenate(ids)), merged.words_scanned))
+        return out

@@ -12,11 +12,13 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from ..core import ewah_jax
 from . import ref
 from .bitpack import LANE_TILE, ROW_TILE, bitpack_kernel
 from .gray import gray_kernel
 from .histmm import TOK_TILE, VAL_TILE, histmm_kernel
 from .moe_route import moe_route_kernel
+from .recompress import recompress_kernel
 from .wordops import wordops_kernel
 
 
@@ -84,6 +86,53 @@ def wordops_fold(stacked, op="and", use_kernel=True, interpret=None):
         stacked = merged
         m = stacked.shape[0]
     return stacked[0]
+
+
+@partial(jax.jit, static_argnames=("capacity", "use_kernel", "interpret"))
+def recompress_batch(words, capacity, use_kernel=True, interpret=None):
+    """(B, W) dense uint32 word rows -> (streams (B, capacity), lengths (B,)).
+
+    In-graph EWAH re-encode of a batch of query results (the compressed-
+    domain closure of the jax backend: ``wordops_fold`` output goes back to
+    EWAH without leaving the graph).  One Pallas launch computes per-word
+    classification + run-start flags for the *whole* batch — rows get an
+    opposite-class sentinel as word 0's predecessor, so runs never bleed
+    across queries — then the scan/scatter epilogue
+    (``ewah_jax.compress_from_runs``) vmaps over rows.
+
+    Requires W <= 2**15 - 1 (one marker per group, asserted statically).
+    """
+    B, W = words.shape
+    words = words.astype(jnp.uint32)
+    sent = jnp.where(words[:, :1] == 0, jnp.uint32(0xFFFFFFFF), jnp.uint32(0))
+    prev = jnp.concatenate([sent, words[:, :-1]], axis=1)
+    if use_kernel:
+        interpret = not _on_tpu() if interpret is None else interpret
+        lanes = 128
+        from .recompress import ROW_TILE as RT
+        n = B * W
+        rows_p = -(-(-(-n // lanes)) // RT) * RT
+        w2 = (jnp.zeros((rows_p * lanes,), jnp.uint32)
+              .at[:n].set(words.reshape(-1)).reshape(rows_p, lanes))
+        p2 = (jnp.zeros((rows_p * lanes,), jnp.uint32)
+              .at[:n].set(prev.reshape(-1)).reshape(rows_p, lanes))
+        kind, start = recompress_kernel(w2, p2, interpret=interpret)
+        kind = kind.reshape(-1)[:n].reshape(B, W)
+        start = start.reshape(-1)[:n].reshape(B, W)
+    else:
+        kind = ewah_jax.classify(words)
+        start = (kind != ewah_jax.classify(prev)).astype(jnp.int32)
+    return jax.vmap(
+        lambda w, k, s: ewah_jax.compress_from_runs(w, k, s, capacity)
+    )(words, kind, start)
+
+
+@partial(jax.jit, static_argnames=("capacity", "use_kernel", "interpret"))
+def recompress(words, capacity, use_kernel=True, interpret=None):
+    """(W,) dense uint32 words -> (stream[capacity], length), in-graph."""
+    streams, lengths = recompress_batch(
+        words[None, :], capacity, use_kernel=use_kernel, interpret=interpret)
+    return streams[0], lengths[0]
 
 
 @partial(jax.jit, static_argnames=("inverse", "use_kernel", "interpret"))

@@ -1,0 +1,60 @@
+"""Pallas TPU kernel: fused classify + run-boundary pass for in-graph EWAH
+recompression.
+
+The segmented run-length emit that re-encodes a query result's dense words
+back to an EWAH stream without leaving the graph (DESIGN.md §3: the jax
+backend's word-space fold output must stay compressed for result caching /
+shard shipping) splits into
+
+  1. a VPU-friendly prefix pass — classify every word
+     (clean-0 / clean-1 / dirty) and flag run starts by comparing each
+     word's class against its predecessor's — this kernel, one VMEM round
+     trip for both jobs over 128-lane tiles;
+  2. a scan/scatter epilogue (exclusive scan of group sizes, marker and
+     dirty-word scatter) in jnp — ``ewah_jax.compress_from_runs``.
+
+The caller supplies the predecessor array (a flat shift by one word, with a
+sentinel of *opposite* class at each row's word 0), so batches of many
+query-result rows flatten into a single launch without runs bleeding across
+rows.
+
+  in : w     (N, 128) uint32  words
+       p     (N, 128) uint32  predecessor words
+  out: kind  (N, 128) int32 in {0,1,2}  (0x0, 0xFF.., dirty)
+       start (N, 128) int32 in {0,1}    (class(w) != class(p))
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROW_TILE = 64
+LANE_TILE = 128
+
+
+def _kernel(w_ref, p_ref, kind_ref, start_ref):
+    w = w_ref[...]
+    p = p_ref[...]
+    full = jnp.bitwise_not(jnp.zeros_like(w))  # 0xFFFFFFFF without capture
+    kw = jnp.where(w == 0, 0, jnp.where(w == full, 1, 2)).astype(jnp.int32)
+    kp = jnp.where(p == 0, 0, jnp.where(p == full, 1, 2)).astype(jnp.int32)
+    kind_ref[...] = kw
+    start_ref[...] = (kw != kp).astype(jnp.int32)
+
+
+def recompress_kernel(w: jax.Array, p: jax.Array, *, interpret: bool = True):
+    N, C = w.shape
+    assert w.shape == p.shape and N % ROW_TILE == 0 and C % LANE_TILE == 0
+    grid = (N // ROW_TILE, C // LANE_TILE)
+    spec = pl.BlockSpec((ROW_TILE, LANE_TILE), lambda i, j: (i, j))
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=(spec, spec),
+        out_shape=(jax.ShapeDtypeStruct((N, C), jnp.int32),
+                   jax.ShapeDtypeStruct((N, C), jnp.int32)),
+        interpret=interpret,
+    )(w, p)

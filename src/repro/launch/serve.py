@@ -38,7 +38,8 @@ def make_requests(n, rng, max_len=96):
     return np.clip(lens + jitter, 8, max_len)
 
 
-def pack_batches(lengths, batch_size, histogram_aware=True, backend="numpy"):
+def pack_batches(lengths, batch_size, histogram_aware=True, backend="numpy",
+                 query_fanout=0):
     """Return list of index-batches; histogram-aware = Gray-Frequency order.
 
     The histogram-aware path runs through the bitmap query plane: a bitmap
@@ -46,17 +47,32 @@ def pack_batches(lengths, batch_size, histogram_aware=True, backend="numpy"):
     in descending frequency (paper §4.2 applied to serving), lengths
     ascending within a bin.  With backend="jax" all per-bin plans share one
     batched device dispatch (same plan shape -> one padded kernel launch).
+    With query_fanout > 1 the admission index shards over word-aligned row
+    ranges (repro.dist.query_fanout) and every per-bin plan fans out, each
+    shard shipping its compressed result stream — the multi-host admission
+    topology, exercised in-process.
     """
     lengths = np.asarray(lengths)
     n = len(lengths)
     if histogram_aware:
         bins = lengths // 8
-        idx = BitmapIndex.build(
-            [bins], IndexSpec(row_order="unsorted", column_order="given"))
+        spec = IndexSpec(row_order="unsorted", column_order="given")
         uniq, counts = np.unique(bins, return_counts=True)
         by_freq = uniq[np.lexsort((uniq, -counts))]
-        results = idx.query_many([Eq(0, int(b)) for b in by_freq],
-                                 backend=backend)
+        if query_fanout > 1:
+            from repro.dist.query_fanout import ShardedIndex
+
+            sidx = ShardedIndex.build([bins], spec, n_shards=query_fanout)
+            # unsorted row order keeps row_perm the identity, so fan-out's
+            # original-space ids are directly comparable to the single
+            # path; query_many keeps all bins' per-shard plans in one
+            # backend call (same-shape plans batch across bins and shards)
+            results = sidx.query_many([Eq(0, int(b)) for b in by_freq],
+                                      backend=backend)
+        else:
+            idx = BitmapIndex.build([bins], spec)
+            results = idx.query_many([Eq(0, int(b)) for b in by_freq],
+                                     backend=backend)
         order = np.concatenate(
             [rows[np.argsort(lengths[rows], kind="stable")]
              for rows, _ in results])
@@ -88,6 +104,10 @@ def main(argv=None):
     ap.add_argument("--query-backend", default="numpy",
                     choices=("numpy", "jax"),
                     help="query-plane backend for admission packing")
+    ap.add_argument("--query-fanout", type=int, default=0,
+                    help="shard the admission index over N word-aligned row "
+                         "ranges and fan every packing query out across "
+                         "them (0/1 = single index)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -110,14 +130,17 @@ def main(argv=None):
         lengths = make_requests(args.requests, rng)
         for mode in (False, True):
             batches = pack_batches(lengths, args.batch, histogram_aware=mode,
-                                   backend=args.query_backend)
+                                   backend=args.query_backend,
+                                   query_fanout=args.query_fanout)
             waste = padding_waste(lengths, batches)
             print(f"packing histogram_aware={mode} "
-                  f"(query backend {args.query_backend}): "
+                  f"(query backend {args.query_backend}, "
+                  f"fanout {args.query_fanout}): "
                   f"padding waste {waste:.1%}")
 
         batches = pack_batches(lengths, args.batch, histogram_aware=True,
-                               backend=args.query_backend)
+                               backend=args.query_backend,
+                               query_fanout=args.query_fanout)
         step = jax.jit(partial(serve_step, cfg=cfg),
                        in_shardings=(p_sh, tok_sh, c_sh, replicated(mesh)),
                        out_shardings=(tok_sh, c_sh), donate_argnums=(2,))

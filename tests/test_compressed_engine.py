@@ -1,0 +1,282 @@
+"""Compressed-domain execution engine: execute_compressed vs the row-id
+path, marker-flip Not (with a densification guard), the Range->Not planner
+rewrite, xor folds, and the LRU result cache."""
+
+import numpy as np
+import pytest
+
+from helpers import random_words
+from repro.core import (And, BitmapIndex, Eq, In, IndexSpec, Not, Or, Range,
+                        ewah)
+from repro.core import ewah_stream as es
+from repro.core.query import (JaxBackend, NumpyBackend, backend_names,
+                              compile_plan, get_backend)
+
+
+def make_index(n=3001, cards=(8, 13, 40), k=2, seed=0):
+    r = np.random.default_rng(seed)
+    cols = [r.integers(0, c, size=n) for c in cards]
+    return BitmapIndex.build(cols, IndexSpec(k=k, row_order="grayfreq")), cols
+
+
+PREDICATES = [
+    Eq(0, 3),
+    In(1, [1, 5, 9]),
+    Range(2, 4, 11),                     # narrow: straight OR fan-in
+    Range(2, 2, 38),                     # wide: Not(In(complement))
+    Range(1, -5, 10**9),                 # full domain
+    Range(2, 50, 40),                    # empty
+    And(Eq(0, 2), Eq(1, 4)),
+    Or(Eq(0, 1), Eq(0, 2), Eq(1, 0)),
+    Not(Eq(0, 0)),
+    Not(Not(Eq(1, 2))),
+    And(In(0, [0, 1, 2]), Range(1, 0, 6), Not(Eq(2, 5))),
+    Or(And(Eq(0, 1), Eq(1, 1)), Not(In(2, [0, 1, 2]))),
+]
+
+
+@pytest.fixture(scope="module")
+def indexed():
+    return make_index()
+
+
+# ---------------------------------------------------------------------------
+# execute_compressed agrees bit-for-bit with the row-id path, every backend
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", sorted(backend_names()))
+@pytest.mark.parametrize("pred", PREDICATES, ids=repr)
+def test_compressed_matches_rowid_path(indexed, backend, pred):
+    idx, _ = indexed
+    plan = compile_plan(idx, pred)
+    be = get_backend(backend)
+    rows, _ = be.execute(plan)
+    stream = be.execute_compressed(plan)
+    assert stream.n_rows == idx.n_rows
+    np.testing.assert_array_equal(stream.to_rows(), rows)
+    assert stream.count() == len(rows)
+
+
+@pytest.mark.parametrize("pred", PREDICATES, ids=repr)
+def test_backends_agree_on_streams(indexed, pred):
+    """numpy and jax compressed results are the same words, bit for bit."""
+    idx, _ = indexed
+    plan = compile_plan(idx, pred)
+    s_np = get_backend("numpy").execute_compressed(plan)
+    s_jx = get_backend("jax").execute_compressed(plan)
+    np.testing.assert_array_equal(s_np.to_words(), s_jx.to_words())
+    np.testing.assert_array_equal(s_np.data, s_jx.data)
+
+
+def test_compressed_many_batches(indexed):
+    idx, _ = indexed
+    plans = [compile_plan(idx, p) for p in PREDICATES]
+    for backend in sorted(backend_names()):
+        be = get_backend(backend)
+        singles = [be.execute(p)[0] for p in plans]
+        batched = be.execute_compressed_many(plans)
+        for rows, stream in zip(singles, batched):
+            np.testing.assert_array_equal(stream.to_rows(), rows)
+
+
+def test_count_handles_final_word_padding():
+    """n_rows not a multiple of 32: Not sets the padding bits; count() and
+    to_rows() must truncate them."""
+    idx, cols = make_index(n=997, cards=(5, 7, 9), k=1, seed=3)
+    plan = compile_plan(idx, Not(Eq(0, 1)))
+    stream = get_backend("numpy").execute_compressed(plan)
+    rows, _ = get_backend("numpy").execute(plan)
+    assert stream.count() == len(rows) == int(np.sum(cols[0] != 1))
+
+
+# ---------------------------------------------------------------------------
+# Not: marker-type flipping, never a dense complement
+# ---------------------------------------------------------------------------
+
+
+def test_not_never_densifies(indexed, monkeypatch):
+    """Densification guard: the compressed path must finish a Not plan
+    without ever calling decompress/unpack_bits (no dense complement, no
+    XOR against a materialized all-ones bitmap)."""
+    idx, _ = indexed
+    pred = Not(Or(Eq(0, 1), In(2, [3, 4, 5])))
+    plan = compile_plan(idx, pred)
+    expected, _ = get_backend("numpy").execute(plan)
+
+    def boom(*a, **k):
+        raise AssertionError("compressed path densified a bitmap")
+
+    monkeypatch.setattr(ewah, "decompress", boom)
+    monkeypatch.setattr(ewah, "unpack_bits", boom)
+    be = NumpyBackend()
+    stream = be.execute_compressed(plan)
+    monkeypatch.undo()
+    np.testing.assert_array_equal(stream.to_rows(), expected)
+
+
+def test_logical_not_is_marker_flip():
+    """The complement has exactly the input's run structure: same compressed
+    length, one pass, involution."""
+    for seed in range(5):
+        w = random_words(300, seed=seed)
+        c = ewah.compress(w)
+        nc, scanned = es.logical_not(c, len(w))
+        assert len(nc) == len(c)          # same size: pure marker flip
+        assert scanned == len(c)          # one pass over the stream itself
+        np.testing.assert_array_equal(ewah.decompress(nc, len(w)), ~w)
+        back, _ = es.logical_not(nc, len(w))
+        np.testing.assert_array_equal(back, c)
+
+
+def test_logical_not_pads_short_stream():
+    """A short stream's implicit zero tail complements to clean-1s."""
+    c = ewah.compress(np.zeros(4, dtype=np.uint32))
+    nc, _ = es.logical_not(c, 10)  # complement over 10 words
+    np.testing.assert_array_equal(
+        ewah.decompress(nc, 10), np.full(10, 0xFFFFFFFF, dtype=np.uint32))
+
+
+# ---------------------------------------------------------------------------
+# Range -> Not(In(complement)) planner rewrite
+# ---------------------------------------------------------------------------
+
+
+def _count_leaves(node):
+    if node[0] == "leaf":
+        return 1
+    if node[0] == "not":
+        return _count_leaves(node[1])
+    return sum(_count_leaves(c) for c in node[1])
+
+
+def test_wide_range_compiles_to_not(indexed):
+    idx, cols = indexed
+    card = int(cols[2].max()) + 1  # 40 values on column 2
+    wide = compile_plan(idx, Range(2, 2, card - 2))     # 37 of 40 values
+    narrow = compile_plan(idx, Range(2, 4, 11))
+    assert wide.root[0] == "not"
+    assert narrow.root[0] != "not"
+    # fan-in blowup fixed: the wide plan enumerates the 3-value complement,
+    # not the 37-value range
+    k = idx.columns[2].k
+    assert _count_leaves(wide.root) <= 3 * k
+    assert _count_leaves(narrow.root) == 8 * k
+
+
+def test_full_domain_range_is_constant(indexed):
+    idx, _ = indexed
+    plan = compile_plan(idx, Range(1, -5, 10**9))
+    assert plan.root[0] == "leaf" and len(plan.streams) == 1
+    rows, _ = get_backend("numpy").execute(plan)
+    assert len(rows) == idx.n_rows
+
+
+@pytest.mark.parametrize("lo,hi", [(0, 39), (1, 38), (5, 35), (0, 19),
+                                   (20, 39), (17, 23), (39, 39), (0, 0)])
+def test_range_rewrite_oracle(indexed, lo, hi):
+    idx, cols = indexed
+    expect = np.flatnonzero((cols[2] >= lo) & (cols[2] <= hi))
+    for backend in sorted(backend_names()):
+        rows, _ = idx.query(Range(2, lo, hi), backend=backend)
+        np.testing.assert_array_equal(np.sort(idx.row_perm[rows]), expect)
+
+
+# ---------------------------------------------------------------------------
+# xor fold
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m", [2, 3, 5, 8])
+def test_logical_many_xor_oracle(m):
+    """xor fold over many streams against the unpacked-bits oracle."""
+    words = [random_words(257, seed=s) for s in range(m)]
+    streams = [ewah.compress(w) for w in words]
+    res, scanned = es.logical_many(streams, "xor")
+    expect = words[0].copy()
+    for w in words[1:]:
+        expect ^= w
+    np.testing.assert_array_equal(ewah.decompress(res, 257), expect)
+    assert scanned > 0
+
+
+def test_logical_many_unknown_op():
+    with pytest.raises(ValueError, match="unknown op"):
+        es.logical_many([ewah.compress(np.zeros(4, np.uint32))] * 2, "nand")
+
+
+def test_logical_many_single_stream_passthrough():
+    c = ewah.compress(random_words(64, seed=1))
+    res, scanned = es.logical_many([c], "xor")
+    np.testing.assert_array_equal(res, c)
+    assert scanned == 0
+
+
+# ---------------------------------------------------------------------------
+# LRU result cache
+# ---------------------------------------------------------------------------
+
+
+def test_cache_reuses_whole_plans(indexed):
+    idx, _ = indexed
+    be = NumpyBackend()
+    pred = And(Eq(0, 2), Eq(1, 4))
+    plan = compile_plan(idx, pred)
+    first = be.execute_compressed(plan)
+    assert first.words_scanned > 0
+    again = be.execute_compressed(compile_plan(idx, pred))
+    assert be.result_cache.hits >= 1
+    assert again.words_scanned == 0          # reused, nothing scanned
+    np.testing.assert_array_equal(first.data, again.data)
+
+
+def test_cache_shares_subplans_across_predicates(indexed):
+    """Cascaded queries: the same In selector AND'd with different filters
+    reuses the selector's OR fan-in result."""
+    idx, _ = indexed
+    be = NumpyBackend()
+    shared = In(2, list(range(12)))
+    be.execute_compressed(compile_plan(idx, And(shared, Eq(0, 1))))
+    h0 = be.result_cache.hits
+    stream = be.execute_compressed(compile_plan(idx, And(shared, Eq(0, 2))))
+    assert be.result_cache.hits > h0          # the In sub-plan hit
+    rows, _ = be.execute(compile_plan(idx, And(shared, Eq(0, 2))))
+    np.testing.assert_array_equal(stream.to_rows(), rows)
+
+
+def test_cache_differentiates_indexes():
+    """Same predicate over different data must not collide (leaf digests)."""
+    idx_a, cols_a = make_index(seed=1)
+    idx_b, cols_b = make_index(seed=2)
+    be = NumpyBackend()
+    ra = be.execute_compressed(compile_plan(idx_a, Eq(0, 3)))
+    rb = be.execute_compressed(compile_plan(idx_b, Eq(0, 3)))
+    np.testing.assert_array_equal(
+        np.sort(idx_a.row_perm[ra.to_rows()]), np.flatnonzero(cols_a[0] == 3))
+    np.testing.assert_array_equal(
+        np.sort(idx_b.row_perm[rb.to_rows()]), np.flatnonzero(cols_b[0] == 3))
+
+
+def test_cache_lru_eviction(indexed):
+    idx, _ = indexed
+    be = NumpyBackend(cache_size=4)
+    for v in range(8):
+        be.execute_compressed(compile_plan(idx, And(Eq(0, v % 8), Eq(1, 1))))
+    assert len(be.result_cache) <= 4
+    assert be.result_cache.stats()["entries"] <= 4
+
+
+def test_jax_cache_and_in_graph_recompress(indexed):
+    """The jax backend's compressed path caches by the same canonical keys
+    and its in-graph recompression round-trips."""
+    idx, _ = indexed
+    be = JaxBackend()
+    pred = Or(Eq(0, 1), Eq(1, 2))
+    plan = compile_plan(idx, pred)
+    first = be.execute_compressed(plan)
+    again = be.execute_compressed(compile_plan(idx, pred))
+    assert be.result_cache.hits >= 1
+    assert again.words_scanned == 0
+    np.testing.assert_array_equal(first.data, again.data)
+    rows, _ = be.execute(plan)
+    np.testing.assert_array_equal(first.to_rows(), rows)

@@ -102,3 +102,131 @@ def test_sharded_matches_single_device(dist_results):
     np.testing.assert_allclose(
         dist_results["sharded_loss"], dist_results["ref_loss"],
         rtol=2e-2, atol=2e-2)
+
+
+# ---------------------------------------------------------------------------
+# Query fan-out over row-range index shards (repro.dist.query_fanout) —
+# in-process, no mesh needed.
+# ---------------------------------------------------------------------------
+
+
+def _fanout_fixture(n=4017, seed=11, k=2):
+    from repro.core import BitmapIndex, IndexSpec
+    from repro.dist.query_fanout import ShardedIndex
+
+    r = np.random.default_rng(seed)
+    cols = [r.integers(0, c, size=n) for c in (6, 11, 29)]
+    spec = IndexSpec(k=k, row_order="grayfreq")
+    return cols, BitmapIndex.build(cols, spec), \
+        ShardedIndex.build(cols, spec, n_shards=4)
+
+
+def test_shard_ranges_word_aligned():
+    from repro.dist.query_fanout import shard_ranges
+
+    for n, s in [(1000, 4), (31, 4), (64, 2), (65, 4), (100_000, 7), (32, 1)]:
+        ranges = shard_ranges(n, s)
+        assert ranges[0][0] == 0 and ranges[-1][1] == n
+        assert all(start % 32 == 0 for start, _ in ranges)
+        assert all(b == c for (_, b), (c, _) in zip(ranges, ranges[1:]))
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_fanout_4_shards_matches_single(backend):
+    """Fan-out over a 4-shard split returns identical row ids to
+    single-shard execution, for every predicate shape."""
+    from repro.core import And, Eq, In, Not, Or, Range
+
+    cols, single, sharded = _fanout_fixture()
+    assert sharded.n_shards == 4
+    preds = [
+        Eq(0, 3), In(1, [1, 5, 9]), Range(2, 4, 25), Range(2, 2, 27),
+        Not(Eq(0, 0)),
+        And(In(0, [0, 1, 2]), Range(1, 0, 6), Not(Eq(2, 5))),
+        Or(And(Eq(0, 1), Eq(1, 1)), Not(In(2, [0, 1, 2]))),
+    ]
+    for pred in preds:
+        rows_single, _ = single.query(pred, backend=backend)
+        expect = np.sort(single.row_perm[rows_single])
+        got, scanned = sharded.query(pred, backend=backend)
+        np.testing.assert_array_equal(got, expect)
+        assert scanned >= 0
+
+
+def test_fanout_ships_compressed_and_coalesces():
+    """Shards ship EWAH streams; the merge is concatenation with clean-run
+    coalescing, so the merged stream counts exactly the matched rows and
+    is no longer than the sum of its parts."""
+    from repro.core import Eq, Not
+
+    cols, single, sharded = _fanout_fixture()
+    for pred in (Eq(0, 3), Not(Eq(1, 2))):
+        results, merged = sharded.execute_compressed(pred)
+        assert len(results) == 4
+        assert merged.n_rows == len(cols[0])
+        rows_single, _ = single.query(pred)
+        assert merged.count() == len(rows_single)
+        assert len(merged) <= sum(len(r) for r in results)
+        # per-shard word alignment: every shard but the last covers a
+        # multiple of 32 rows
+        assert all(sh.n_rows % 32 == 0 for sh in sharded.shards[:-1])
+
+
+def test_fanout_shard_local_value_domains():
+    """A value only some shards ever saw still resolves globally (missing
+    shards compile it to a constant-empty plan)."""
+    from repro.core import Eq
+    from repro.core.strategies import IndexSpec
+    from repro.dist.query_fanout import ShardedIndex
+
+    col = np.zeros(256, dtype=np.int64)
+    col[200:210] = 7                    # value 7 exists only in shard 4
+    sharded = ShardedIndex.build([col], IndexSpec(k=1, row_order="unsorted",
+                                                  column_order="given"),
+                                 n_shards=4)
+    rows, _ = sharded.query(Eq(0, 7))
+    np.testing.assert_array_equal(rows, np.arange(200, 210))
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_fanout_query_many_batches_across_predicates(backend):
+    """query_many sends all predicates' per-shard plans to the backend in
+    one call and matches per-predicate query() results."""
+    from repro.core import Eq, In
+
+    cols, single, sharded = _fanout_fixture()
+    preds = [Eq(0, v) for v in range(4)] + [In(1, [1, 5])]
+    batched = sharded.query_many(preds, backend=backend)
+    for pred, (rows, scanned) in zip(preds, batched):
+        one_rows, one_scanned = sharded.query(pred, backend=backend)
+        np.testing.assert_array_equal(rows, one_rows)
+        rows_single, _ = single.query(pred, backend=backend)
+        np.testing.assert_array_equal(
+            rows, np.sort(single.row_perm[rows_single]))
+
+
+def test_metadata_index_query_fanout():
+    """MetadataIndex(query_fanout=N) routes queries through the sharded
+    path (original-row-space ids) and guards the single-index accessor."""
+    from repro.core import In
+    from repro.data.metadata_index import MetadataIndex
+
+    r = np.random.default_rng(5)
+    meta = {c: r.integers(0, k, size=500) for c, k in
+            zip(MetadataIndex.COLS, (4, 8, 16, 6))}
+    plain = MetadataIndex(k=1)
+    plain.add_batch(meta)
+    fanned = MetadataIndex(k=1, query_fanout=4)
+    fanned.add_batch(meta)
+
+    rows_plain, _ = plain.query(domain=3, quality_bin=8)
+    expect = np.sort(plain.index.row_perm[rows_plain])
+    rows_fan, _ = fanned.query(domain=3, quality_bin=8)
+    np.testing.assert_array_equal(rows_fan, expect)
+    rows_pred, _ = fanned.query_pred(In("domain", [1, 3]), backend="jax")
+    np.testing.assert_array_equal(
+        rows_pred, np.flatnonzero(np.isin(meta["domain"], [1, 3])))
+    assert fanned.sharded.n_shards == 4
+    assert fanned.size_words() > 0
+    with pytest.raises(ValueError, match="sharded"):
+        fanned.index  # would silently build a second, inconsistent index
