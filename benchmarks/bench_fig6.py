@@ -14,6 +14,13 @@ The cascaded scenario measures the compressed execution path
 AND'd with a rotating ``Eq`` filter — the dashboard-cascade workload —
 reporting cache hit rate and cached / cold compressed vs dense-jax
 ``us_per_query``.
+
+The segmented scenario measures the append/seal/compact lifecycle
+(``repro.core.lifecycle``): segment-count vs ``size_words`` vs
+``us_per_query`` across monolithic / multi-segment / compacted layouts,
+plus the cache-invalidation contract — after an append (new segment) or a
+compaction, only touched segments' cached results miss; the steady-state
+and post-mutation hit rates are reported and validated.
 """
 
 from __future__ import annotations
@@ -22,7 +29,7 @@ import time
 
 import numpy as np
 
-from repro.core import And, BitmapIndex, Eq, In, IndexSpec
+from repro.core import And, BitmapIndex, Eq, In, IndexSpec, IndexWriter
 from repro.core.query import NumpyBackend, compile_plan, get_backend
 from repro.data.tables import make_census_like
 
@@ -89,6 +96,7 @@ def run(n=60_000, queries=40, quick=False):
                                 sum(sc for _, sc in jax_results) / queries,
                             "agrees_with_numpy": agrees})
     out.extend(run_cascaded(cols, queries=queries))
+    out.extend(run_segmented(cols, queries=queries))
     return out
 
 
@@ -140,6 +148,106 @@ def run_cascaded(cols, queries=40):
     return out
 
 
+def run_segmented(cols, queries=40):
+    """Append/seal/compact lifecycle scenario: layout cost (segment count vs
+    compressed size vs query latency over the SAME rows) and
+    segment-generation cache invalidation (appends/compactions evict only
+    touched entries)."""
+    spec = IndexSpec(k=1, row_order="lex", column_order="given")
+    n = len(cols[0])
+    cards = [int(c.max()) + 1 for c in cols]
+    preds = [And(In(2, range(cards[2] // 2)), Eq(0, v % cards[0]))
+             for v in range(queries)]
+    out = []
+
+    # -- layout cost: monolithic vs 4-way segmented vs compacted, all over
+    # exactly the same n rows (the writer is closed, so sealed == n)
+    mono = BitmapIndex.build(cols, spec)
+    w = IndexWriter(spec)
+    for i in range(0, n, -(-n // 4)):
+        w.append([c[i : i + -(-n // 4)] for c in cols])
+        w.seal()
+    w.close()
+    be = get_backend("numpy", cache_size=4096)
+
+    def timed_layout(layout, run_queries, n_segments, size_words):
+        def cold():
+            be.result_cache.clear()          # cold compressed path per trial
+            return run_queries()
+
+        _, best = _best_of(cold)
+        out.append({"scenario": "segmented", "layout": layout,
+                    "segments": n_segments, "size_words": size_words,
+                    "us_per_query": best / queries * 1e6})
+
+    def run_mono():
+        # same execution surface as the segmented layouts (compile + the
+        # compressed engine + row materialization), so the timing isolates
+        # the LAYOUT, not the row-id-vs-compressed path difference
+        streams = be.execute_compressed_many(
+            [compile_plan(mono, p) for p in preds])
+        return [np.sort(mono.row_perm[s.to_rows()]) for s in streams]
+
+    timed_layout("monolithic", run_mono, 1, mono.size_words())
+    view = w.index
+    timed_layout("4-segment",
+                 lambda: view.query_many(preds, backend="numpy",
+                                         cache_size=4096),
+                 len(w.segments), w.size_words())
+    w.compact(span=(0, len(w.segments)))
+    timed_layout("compacted",
+                 lambda: view.query_many(preds, backend="numpy",
+                                         cache_size=4096),
+                 len(w.segments), w.size_words())
+    out.append({"scenario": "segmented", "layout": "size-check",
+                "segments": len(w.segments),
+                "size_words": w.size_words(),
+                "monolithic_words": mono.size_words(),
+                "agrees_with_monolithic": all(
+                    np.array_equal(
+                        rows_seg, np.sort(mono.row_perm[mono.query(p)[0]]))
+                    for p, (rows_seg, _) in zip(
+                        preds[:5],
+                        view.query_many(preds[:5], backend="numpy")))})
+
+    # -- cache invalidation: a live (open) writer; steady-state hit rate,
+    # then an append (new segment: old entries keep hitting) and a
+    # compaction (exactly the retired segments' entries evicted)
+    w2 = IndexWriter(spec)
+    for i in range(0, n, -(-n // 4)):
+        w2.append([c[i : i + -(-n // 4)] for c in cols])
+        w2.seal()
+    view2 = w2.index
+    be.result_cache.clear()
+
+    def hit_rate_of_pass():
+        be.result_cache.hits = be.result_cache.misses = 0
+        view2.query_many(preds, backend="numpy", cache_size=4096)
+        return be.result_cache.hit_rate
+
+    view2.query_many(preds, backend="numpy", cache_size=4096)  # populate
+    steady = hit_rate_of_pass()
+
+    r = np.random.default_rng(7)
+    w2.append([r.integers(0, c, size=n // 5) for c in cards])
+    w2.seal()
+    post_append = hit_rate_of_pass()
+
+    entries_before = len(be.result_cache)
+    w2.compact(span=(len(w2.segments) - 2, len(w2.segments)))
+    evicted = entries_before - len(be.result_cache)
+    post_compact = hit_rate_of_pass()
+
+    for phase, rate, extra in (
+            ("steady", steady, {}),
+            ("post-append", post_append, {}),
+            ("post-compact", post_compact,
+             {"entries_evicted": evicted, "entries_before": entries_before})):
+        out.append({"scenario": "segmented-cache", "phase": phase,
+                    "cache_hit_rate": rate, **extra})
+    return out
+
+
 def validate(rows):
     checks = []
 
@@ -161,7 +269,7 @@ def validate(rows):
                   f"({s2['words_scanned']:.0f} vs {s1['words_scanned']:.0f}): "
                   f"{'PASS' if ok else 'FAIL'}")
     # numpy and jax backends return identical row ids everywhere
-    jax_rows = [r for r in rows if r["backend"] == "jax"]
+    jax_rows = [r for r in rows if r.get("backend") == "jax"]
     ok = bool(jax_rows) and all(r["agrees_with_numpy"] for r in jax_rows)
     checks.append(f"jax backend row ids match numpy on "
                   f"{len(jax_rows)} configs: {'PASS' if ok else 'FAIL'}")
@@ -181,4 +289,38 @@ def validate(rows):
     checks.append(f"cascade us/query cached {cached:.0f} vs cold {cold:.0f} "
                   f"vs dense-jax {dense:.0f}: "
                   f"{'PASS' if cached <= cold else 'FAIL'}")
+    # segmented lifecycle: compaction recovers the monolithic size (within
+    # 10%), answers stay bit-identical, and segment-generation invalidation
+    # evicts only touched entries (hit rate stays > 0 after mutations)
+    seg = {r["layout"]: r for r in rows if r.get("scenario") == "segmented"}
+    sc = seg["size-check"]
+    ratio = sc["size_words"] / max(sc["monolithic_words"], 1)
+    checks.append(
+        f"segmented: compacted size {sc['size_words']} within 10% of "
+        f"monolithic {sc['monolithic_words']} (ratio {ratio:.2f}): "
+        f"{'PASS' if ratio <= 1.10 else 'FAIL'}")
+    checks.append(f"segmented rows match monolithic rebuild: "
+                  f"{'PASS' if sc['agrees_with_monolithic'] else 'FAIL'}")
+    ok = seg["4-segment"]["size_words"] >= seg["compacted"]["size_words"]
+    checks.append(
+        f"segmented: compaction shrinks index "
+        f"({seg['4-segment']['size_words']} -> "
+        f"{seg['compacted']['size_words']} words): "
+        f"{'PASS' if ok else 'FAIL'}")
+    cache = {r["phase"]: r for r in rows
+             if r.get("scenario") == "segmented-cache"}
+    steady = cache["steady"]["cache_hit_rate"]
+    checks.append(f"segmented cache steady-state hit rate {steady:.0%}: "
+                  f"{'PASS' if steady > 0.9 else 'FAIL'}")
+    pa = cache["post-append"]["cache_hit_rate"]
+    checks.append(
+        f"append evicts nothing (untouched segments keep hitting): "
+        f"post-append hit rate {pa:.0%}: {'PASS' if pa > 0.5 else 'FAIL'}")
+    pc = cache["post-compact"]
+    ok = 0 < pc["entries_evicted"] < pc["entries_before"] \
+        and pc["cache_hit_rate"] > 0
+    checks.append(
+        f"compaction evicts only touched entries "
+        f"({pc['entries_evicted']}/{pc['entries_before']}, post-compact "
+        f"hit rate {pc['cache_hit_rate']:.0%}): {'PASS' if ok else 'FAIL'}")
     return checks

@@ -1,21 +1,31 @@
 """Core: the paper's contribution — EWAH compression, k-of-N encodings,
 histogram-aware row/column reordering, compressed-domain logical ops — behind
-one composable API: IndexSpec (strategy registry) -> BitmapIndex.build ->
-predicate algebra (query.Eq/In/Range/And/Or/Not) -> pluggable backends."""
+one composable API: IndexSpec (strategy registry) -> IndexWriter (append /
+seal / compact lifecycle) -> Segment / SegmentedIndex -> predicate algebra
+(query.Eq/In/Range/And/Or/Not) -> pluggable backends.  BitmapIndex.build is
+the seal-once convenience over the writer."""
 
 from . import (column_order, encoding, ewah, ewah_stream, histogram,
                index_size, query, sorting, strategies)
 from .bitmap_index import BitmapIndex, assign_codes, index_size_report
 from .ewah_stream import EwahStream
-from .query import And, Eq, In, Not, Or, Range
+from .lifecycle import IndexWriter, compact, size_tiered_pick
+from .query import And, Eq, In, Not, Or, Range, evaluate_mask
+from .segment import Segment, SegmentedIndex
 from .strategies import IndexSpec
 
 __all__ = [
     "BitmapIndex",
     "EwahStream",
     "IndexSpec",
+    "IndexWriter",
+    "Segment",
+    "SegmentedIndex",
     "assign_codes",
+    "compact",
+    "evaluate_mask",
     "index_size_report",
+    "size_tiered_pick",
     "And",
     "Eq",
     "In",
@@ -32,3 +42,7 @@ __all__ = [
     "sorting",
     "strategies",
 ]
+
+# import-cycle note: segment/lifecycle import bitmap_index at module level;
+# bitmap_index reaches lifecycle lazily inside build(), so the order above
+# (bitmap_index first) is load-bearing.

@@ -5,6 +5,12 @@ resolved through the strategy registry (row order, code enumeration, value
 policy, column order); queries go through the predicate algebra + planner in
 :mod:`repro.core.query`.
 
+``BitmapIndex.build`` is a *seal-once convenience* over the incremental
+lifecycle (:mod:`repro.core.lifecycle`): it appends the whole table to an
+:class:`~repro.core.lifecycle.IndexWriter` and closes it into a single
+segment.  Streaming ingestion, per-batch sealing, and compaction live on
+the writer; see docs/lifecycle.md.
+
 Two paths:
   * ``BitmapIndex`` materializes per-bitmap EWAH streams (supports predicate
     queries via compressed-domain logical ops) — used at query-benchmark
@@ -12,13 +18,14 @@ Two paths:
   * ``index_size_report`` computes exact sizes only, in O(nck + L), for the
     multi-million-row size tables.
 
-The pre-IndexSpec string kwargs (``row_order=...`` etc.) still work as thin
-deprecation shims; see docs/query_api.md for the migration table.
+The pre-IndexSpec string kwargs (``BitmapIndex.build(cols, k=2,
+row_order=...)``), deprecated since the IndexSpec migration, are **removed**;
+``IndexSpec`` is the only entry point (docs/query_api.md has the migration
+table).
 """
 
 from __future__ import annotations
 
-import warnings
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -30,7 +37,20 @@ from .index_size import column_bitmap_sizes
 from .query import compile_plan, get_backend
 from .strategies import IndexSpec, get_strategy
 
-_UNSET = object()
+_LEGACY_KWARGS = ("k", "row_order", "code_order", "value_policy",
+                  "column_order")
+
+
+def _reject_legacy(kwargs: dict) -> None:
+    legacy = sorted(set(kwargs) & set(_LEGACY_KWARGS))
+    if legacy:
+        raise TypeError(
+            f"the string-kwarg build API ({', '.join(legacy)}=...) was "
+            "removed; pass an IndexSpec — e.g. "
+            "BitmapIndex.build(cols, IndexSpec(k=2, row_order='grayfreq')) "
+            "(see docs/query_api.md, 'Migration from the string-kwargs API')")
+    if kwargs:
+        raise TypeError(f"unexpected keyword arguments: {sorted(kwargs)}")
 
 
 def assign_codes(
@@ -71,6 +91,10 @@ class BitmapIndex:
     ``row_perm`` / ``col_perm`` are public: the row and column permutations
     the build applied (query row ids live in ``row_perm`` space; map back to
     original rows with ``index.row_perm[row_ids]``).
+
+    ``cache_scope`` tags this index's cached query results for scoped
+    eviction (:func:`repro.core.query.invalidate_scope`); the segment
+    lifecycle sets it to ``("segment", generation)``.
     """
 
     n_rows: int
@@ -78,94 +102,34 @@ class BitmapIndex:
     spec: IndexSpec | None = None
     row_perm: np.ndarray | None = None
     col_perm: np.ndarray | None = None
-
-    # deprecated private aliases (pre-PR-2 spelling)
-    @property
-    def _row_perm(self):
-        return self.row_perm
-
-    @property
-    def _col_perm(self):
-        return self.col_perm
+    cache_scope: tuple | None = None
 
     # -- construction ------------------------------------------------------
 
     @staticmethod
-    def build(
-        table_cols: list,
-        spec: IndexSpec | None = None,
-        *,
-        materialize: bool = True,
-        k=_UNSET,
-        row_order=_UNSET,
-        code_order=_UNSET,
-        value_policy=_UNSET,
-        column_order=_UNSET,
-    ) -> "BitmapIndex":
-        """End-to-end Algorithm-1-style construction.
+    def build(table_cols: list, spec: IndexSpec | None = None, *,
+              materialize: bool = True, **removed) -> "BitmapIndex":
+        """End-to-end Algorithm-1-style construction: a seal-once
+        convenience over :class:`~repro.core.lifecycle.IndexWriter`
+        (append everything, close into one segment, return its index).
 
         table_cols: list of (n,) integer value-id arrays (0-based, dense ids).
         spec: IndexSpec naming the row-order / code-order / value-policy /
           column-order strategies (see repro.core.strategies).
-
-        The keyword arguments after ``materialize`` are the deprecated
-        pre-IndexSpec API; they are translated via
-        ``IndexSpec.from_legacy_kwargs`` and will be removed.
         """
-        legacy = {
-            name: v
-            for name, v in (
-                ("k", k), ("row_order", row_order), ("code_order", code_order),
-                ("value_policy", value_policy), ("column_order", column_order),
-            )
-            if v is not _UNSET
-        }
+        _reject_legacy(removed)
         if spec is not None and not isinstance(spec, IndexSpec):
             raise TypeError(
                 f"second argument must be an IndexSpec, got {spec!r}; the old "
-                "positional form build(cols, k) is gone — pass "
-                "IndexSpec(k=...) or the (deprecated) k=... keyword")
-        if legacy:
-            if spec is not None:
-                raise TypeError(
-                    "pass either an IndexSpec or legacy string kwargs, not both")
-            warnings.warn(
-                "BitmapIndex.build(k=..., row_order=..., ...) string kwargs are "
-                "deprecated; pass an IndexSpec (repro.core.IndexSpec)",
-                DeprecationWarning, stacklevel=2)
-            spec = IndexSpec.from_legacy_kwargs(**legacy)
-        spec = (spec or IndexSpec()).validate()
-        strategies = spec.strategies()
+                "positional form build(cols, k) is gone — pass IndexSpec(k=...)")
+        from .lifecycle import IndexWriter
 
-        table_cols = [np.asarray(c) for c in table_cols]
-        n = len(table_cols[0])
-        cards = [int(c.max()) + 1 for c in table_cols]
-
-        if strategies["column_order"] is not None:
-            perm_cols = np.asarray(strategies["column_order"](cards, spec.k))
-        else:  # explicit permutation carried by the spec
-            perm_cols = np.asarray(spec.column_order)
-        cols = [table_cols[i] for i in perm_cols]
-        cards = [cards[i] for i in perm_cols]
-
-        # histograms are row-permutation invariant: compute once, share with
-        # the row-order strategy and the value policy
-        hists = [column_histogram(c, card) for c, card in zip(cols, cards)]
-        row_perm = strategies["row_order"](cols, hists)
-        cols = [c[row_perm] for c in cols]
-
-        idx = BitmapIndex(n_rows=n, spec=spec, row_perm=np.asarray(row_perm),
-                          col_perm=perm_cols)
-        value_policy_name = spec.resolved_value_policy()
-        for col, card, hist in zip(cols, cards, hists):
-            codes, N, k_eff = assign_codes(
-                card, spec.k, spec.code_order, value_policy_name, hist)
-            ci = ColumnIndex(codes=codes, N=N, k=k_eff)
-            ci.sizes, _, _ = column_bitmap_sizes(col, codes, N)
-            if materialize:
-                ci.streams = _materialize_streams(col, codes, N, n)
-            idx.columns.append(ci)
-        return idx
+        writer = IndexWriter(spec, materialize=materialize)
+        writer.append(table_cols)
+        seg = writer.close()
+        if seg is None:
+            raise ValueError("cannot build an index over zero rows")
+        return seg.index
 
     # -- stats -------------------------------------------------------------
 
@@ -221,6 +185,49 @@ class BitmapIndex:
         return int(self.col_perm[reordered_idx])
 
 
+def _construct(table_cols: list, spec: IndexSpec | None,
+               materialize: bool = True) -> "BitmapIndex":
+    """The actual Algorithm-1 pipeline over one run of rows.
+
+    This is what :meth:`IndexWriter.seal` runs per segment (and what
+    ``BitmapIndex.build`` reaches through its one-segment writer): column
+    histograms -> column permutation -> row sort -> per-column k-of-N code
+    assignment -> EWAH streams.
+    """
+    spec = (spec or IndexSpec()).validate()
+    strategies = spec.strategies()
+
+    table_cols = [np.asarray(c) for c in table_cols]
+    n = len(table_cols[0])
+    cards = [int(c.max()) + 1 for c in table_cols]
+
+    if strategies["column_order"] is not None:
+        perm_cols = np.asarray(strategies["column_order"](cards, spec.k))
+    else:  # explicit permutation carried by the spec
+        perm_cols = np.asarray(spec.column_order)
+    cols = [table_cols[i] for i in perm_cols]
+    cards = [cards[i] for i in perm_cols]
+
+    # histograms are row-permutation invariant: compute once, share with
+    # the row-order strategy and the value policy
+    hists = [column_histogram(c, card) for c, card in zip(cols, cards)]
+    row_perm = strategies["row_order"](cols, hists)
+    cols = [c[row_perm] for c in cols]
+
+    idx = BitmapIndex(n_rows=n, spec=spec, row_perm=np.asarray(row_perm),
+                      col_perm=perm_cols)
+    value_policy_name = spec.resolved_value_policy()
+    for col, card, hist in zip(cols, cards, hists):
+        codes, N, k_eff = assign_codes(
+            card, spec.k, spec.code_order, value_policy_name, hist)
+        ci = ColumnIndex(codes=codes, N=N, k=k_eff)
+        ci.sizes, _, _ = column_bitmap_sizes(col, codes, N)
+        if materialize:
+            ci.streams = _materialize_streams(col, codes, N, n)
+        idx.columns.append(ci)
+    return idx
+
+
 def _materialize_streams(col, codes, N, n_rows):
     """Per-bitmap compressed streams in O(n*k + sum of stream sizes)."""
     order = np.argsort(col, kind="stable")
@@ -245,26 +252,11 @@ def _materialize_streams(col, codes, N, n_rows):
     return streams
 
 
-def index_size_report(
-    table_cols,
-    spec: IndexSpec | None = None,
-    *,
-    k=_UNSET,
-    row_order=_UNSET,
-    code_order=_UNSET,
-    value_policy=_UNSET,
-    column_order=_UNSET,
-) -> dict:
+def index_size_report(table_cols, spec: IndexSpec | None = None,
+                      **removed) -> dict:
     """Size-only construction (no bitmap materialization)."""
-    legacy = {
-        name: v
-        for name, v in (
-            ("k", k), ("row_order", row_order), ("code_order", code_order),
-            ("value_policy", value_policy), ("column_order", column_order),
-        )
-        if v is not _UNSET
-    }
-    idx = BitmapIndex.build(table_cols, spec, materialize=False, **legacy)
+    _reject_legacy(removed)
+    idx = BitmapIndex.build(table_cols, spec, materialize=False)
     return {
         "total_words": idx.size_words(),
         "per_column_words": idx.per_column_words(),

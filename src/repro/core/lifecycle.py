@@ -1,0 +1,260 @@
+"""Index lifecycle: the append / seal / compact writer API.
+
+The one-shot ``BitmapIndex.build`` freezes the paper's whole pipeline behind
+a single static call — every new batch of rows would force a full re-sort
+and re-encode.  :class:`IndexWriter` makes the lifecycle incremental,
+LSM-style:
+
+* ``writer.append(rows)`` buffers rows in the **open segment** (queryable
+  immediately through the live :class:`~repro.core.segment.SegmentedIndex`
+  view — dense evaluation, no index build);
+* ``writer.seal()`` runs the full histogram-aware pipeline (histogram
+  refresh, column/value reordering, row sort per the ``IndexSpec``) on the
+  word-aligned prefix of the buffer and emits an immutable
+  :class:`~repro.core.segment.Segment`; the ``len(buffer) % 32`` tail rows
+  carry over into the next open segment, preserving the word-alignment
+  contract that lets segment results concatenate in word space;
+* ``writer.close()`` seals *everything* left (the final segment may be
+  non-word-aligned — it is last, so nothing concatenates after it) and
+  rejects further appends;
+* :func:`compact` merges adjacent segments into one re-sorted segment
+  (rows re-sort globally across the merged range, recovering the
+  single-sort compression the per-segment splits gave up);
+  ``writer.compact()`` applies the size-tiered policy, swaps the merged
+  segment in, and evicts exactly the retired segments' result-cache
+  entries (:func:`repro.core.query.invalidate_scope`).
+
+``BitmapIndex.build`` is now a seal-once convenience over this writer.
+See docs/lifecycle.md for semantics and the cache-invalidation contract.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from . import ewah
+from .query import invalidate_scope
+from .segment import Segment, SegmentedIndex
+from .strategies import IndexSpec
+
+__all__ = ["IndexWriter", "compact", "size_tiered_pick"]
+
+
+class IndexWriter:
+    """Incremental builder: append rows, seal immutable segments, compact.
+
+    Parameters
+    ----------
+    spec:
+        The :class:`~repro.core.strategies.IndexSpec` every seal resolves
+        (one spec per writer — segments of one index sort consistently).
+    names:
+        Optional column names, forwarded to the query surface.
+    seal_rows:
+        Auto-seal threshold: ``append`` seals whenever the open buffer
+        reaches this many rows (None = manual sealing only).
+    materialize:
+        Forwarded to the per-segment index build (False = sizes only).
+    """
+
+    def __init__(self, spec: IndexSpec | None = None, *, names=None,
+                 seal_rows: int | None = None, materialize: bool = True):
+        self.spec = (spec or IndexSpec()).validate()
+        self.names = tuple(names) if names is not None else None
+        self.seal_rows = seal_rows
+        self.materialize = materialize
+        self.segments: list[Segment] = []
+        self._chunks: list[list[np.ndarray]] = []   # buffered per-append chunks
+        self._buffered = 0
+        self._n_cols: int | None = None
+        self._closed = False
+
+    # -- state -------------------------------------------------------------
+
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
+    @property
+    def buffered_rows(self) -> int:
+        return self._buffered
+
+    @property
+    def n_rows(self) -> int:
+        return self.sealed_rows + self._buffered
+
+    @property
+    def sealed_rows(self) -> int:
+        return self.segments[-1].row_stop if self.segments else 0
+
+    def buffer_columns(self) -> list:
+        """The open buffer as per-column arrays (ingest order); [] when
+        nothing is buffered."""
+        if not self._chunks:
+            return []
+        return [np.concatenate([chunk[c] for chunk in self._chunks])
+                for c in range(self._n_cols)]
+
+    @property
+    def index(self) -> SegmentedIndex:
+        """The live query surface: sealed segments + the open buffer."""
+        return SegmentedIndex(self.segments, names=self.names, writer=self)
+
+    def size_words(self) -> int:
+        return sum(s.size_words() for s in self.segments)
+
+    # -- append ------------------------------------------------------------
+
+    def append(self, rows) -> None:
+        """Buffer a batch of rows in the open segment.
+
+        ``rows`` is a list of per-column integer value-id arrays (the
+        ``BitmapIndex.build`` table convention) or, when the writer carries
+        ``names``, a dict mapping those names to arrays.  All columns must
+        be equal length; column count is fixed by the first append.
+        """
+        if self._closed:
+            raise ValueError("writer is closed; no further appends")
+        if isinstance(rows, dict):
+            if self.names is None:
+                raise ValueError(
+                    "dict appends need a writer built with names=...")
+            missing = [c for c in self.names if c not in rows]
+            if missing:
+                raise ValueError(f"append missing columns: {missing}")
+            rows = [rows[c] for c in self.names]
+        chunk = [np.asarray(c) for c in rows]
+        if not chunk:
+            raise ValueError("append needs at least one column")
+        n = len(chunk[0])
+        if any(len(c) != n for c in chunk):
+            raise ValueError("append columns must be equal length")
+        if self._n_cols is None:
+            self._n_cols = len(chunk)
+        elif len(chunk) != self._n_cols:
+            raise ValueError(
+                f"append has {len(chunk)} columns, writer has {self._n_cols}")
+        if n == 0:
+            return
+        self._chunks.append(chunk)
+        self._buffered += n
+        if self.seal_rows is not None and self._buffered >= self.seal_rows:
+            self.seal()
+
+    # -- seal --------------------------------------------------------------
+
+    def seal(self) -> Segment | None:
+        """Seal the word-aligned prefix of the open buffer into an
+        immutable segment; the ``% 32`` tail rows stay buffered (they seal
+        with the next segment, or with :meth:`close`).  Returns the new
+        :class:`Segment`, or None when fewer than 32 rows are buffered."""
+        if self._closed:
+            raise ValueError("writer is closed")
+        n_seal = (self._buffered // ewah.WORD_BITS) * ewah.WORD_BITS
+        return self._seal_rows(n_seal) if n_seal else None
+
+    def close(self) -> Segment | None:
+        """Seal everything left in the buffer — the final segment may be
+        non-word-aligned because nothing concatenates after it — and close
+        the writer.  Returns the final segment (None if nothing buffered)."""
+        if self._closed:
+            raise ValueError("writer is already closed")
+        seg = self._seal_rows(self._buffered) if self._buffered else None
+        self._closed = True
+        return seg
+
+    def _seal_rows(self, n_seal: int) -> Segment:
+        cols = self.buffer_columns()
+        head = [c[:n_seal] for c in cols]
+        tail = [c[n_seal:] for c in cols]
+        seg = Segment.seal(head, self.spec, row_start=self.sealed_rows,
+                           materialize=self.materialize)
+        self.segments.append(seg)
+        remaining = self._buffered - n_seal
+        self._chunks = [tail] if remaining else []
+        self._buffered = remaining
+        return seg
+
+    # -- compaction --------------------------------------------------------
+
+    def compact(self, span: tuple | None = None, *, fanout: int = 4,
+                ratio: float = 4.0) -> Segment | None:
+        """Merge a run of adjacent segments into one re-sorted segment.
+
+        ``span=(i, j)`` compacts ``segments[i:j]`` explicitly; without it
+        the size-tiered policy (:func:`size_tiered_pick`) picks the first
+        run of >= ``fanout`` adjacent segments whose compressed sizes are
+        within ``ratio`` of each other (LSM size tiering, restricted to
+        adjacent runs because segments must stay contiguous).  Retired
+        segments' result-cache entries are evicted from every registered
+        backend by generation scope; untouched segments keep theirs.
+        Returns the merged segment, or None when no run qualifies.
+        """
+        if span is None:
+            span = size_tiered_pick(self.segments, fanout=fanout, ratio=ratio)
+            if span is None:
+                return None
+        i, j = span
+        if not 0 <= i < j <= len(self.segments) or j - i < 2:
+            raise ValueError(f"compaction span {span} must cover >= 2 "
+                             f"segments of {len(self.segments)}")
+        retired = self.segments[i:j]
+        merged = compact(retired, self.spec, materialize=self.materialize)
+        self.segments[i:j] = [merged]
+        for seg in retired:
+            invalidate_scope(seg.cache_scope)
+        return merged
+
+
+def compact(segments, spec: IndexSpec | None = None, *,
+            materialize: bool = True) -> Segment:
+    """Merge adjacent sealed segments into one re-sorted segment.
+
+    Rows concatenate in original ingest order and the full pipeline
+    (histogram refresh over the merged distribution, reordering, row sort)
+    re-runs across the whole range — the merged segment compresses like a
+    monolithic build over those rows.  Segments must cover contiguous row
+    ranges (the writer's invariant); violations raise ValueError.
+    """
+    segments = list(segments)
+    if len(segments) < 2:
+        raise ValueError("compact needs at least 2 segments")
+    for a, b in zip(segments, segments[1:]):
+        if a.row_stop != b.row_start:
+            raise ValueError(
+                f"segments are not adjacent: [{a.row_start}, {a.row_stop}) "
+                f"then [{b.row_start}, {b.row_stop})")
+    if any(s.columns is None for s in segments):
+        raise ValueError(
+            "cannot compact segments sealed with keep_columns=False: their "
+            "row store was dropped (dist fan-out shards are never compacted)")
+    n_cols = len(segments[0].columns)
+    if any(len(s.columns) != n_cols for s in segments):
+        raise ValueError("segments disagree on column count")
+    cols = [np.concatenate([s.columns[c] for s in segments])
+            for c in range(n_cols)]
+    return Segment.seal(cols, spec, row_start=segments[0].row_start,
+                        materialize=materialize)
+
+
+def size_tiered_pick(segments, fanout: int = 4, ratio: float = 4.0):
+    """First run of >= ``fanout`` adjacent segments whose compressed sizes
+    are within ``ratio`` of each other; returns ``(i, j)`` or None.
+
+    Classic size tiering buckets segments by size wherever they live; here
+    runs must be *adjacent* (segments stay contiguous row ranges), so the
+    policy slides a window and fires on the first size-homogeneous run.
+    """
+    if fanout < 2:
+        raise ValueError(f"fanout must be >= 2, got {fanout}")
+    sizes = [max(s.size_words(), 1) for s in segments]
+    for i in range(len(sizes) - fanout + 1):
+        window = sizes[i : i + fanout]
+        if max(window) <= ratio * min(window):
+            j = i + fanout
+            # greedily extend the tier while sizes stay homogeneous
+            while j < len(sizes) and \
+                    max(max(sizes[i:j + 1]), 1) <= ratio * min(sizes[i:j + 1]):
+                j += 1
+            return (i, j)
+    return None

@@ -160,11 +160,18 @@ class Not(Predicate):
 
 @dataclass
 class Plan:
-    """A compiled, cost-ordered op tree over leaf EWAH streams."""
+    """A compiled, cost-ordered op tree over leaf EWAH streams.
+
+    ``scope`` tags every result this plan lands in a backend cache with the
+    source index's ``cache_scope`` (segments set ``("segment", generation)``)
+    so :func:`invalidate_scope` can evict exactly one retired segment's
+    entries; None means unscoped (only content-digest staleness protection).
+    """
 
     streams: list
     root: tuple
     n_rows: int
+    scope: tuple | None = None
 
     @property
     def n_words(self) -> int:
@@ -287,10 +294,64 @@ def compile_plan(index, pred: Predicate, names=None) -> Plan:
             return ("not", build(p.child))
         raise TypeError(f"not a Predicate: {p!r}")
 
-    plan = Plan(streams=streams, root=build(pred), n_rows=index.n_rows)
+    plan = Plan(streams=streams, root=build(pred), n_rows=index.n_rows,
+                scope=getattr(index, "cache_scope", None))
     plan.root = _cost_order(plan.root, streams, plan.n_words)
     _renumber_leaves(plan)
     return plan
+
+
+def evaluate_mask(pred: Predicate, columns, names=None) -> np.ndarray:
+    """Evaluate a predicate directly over uncompressed integer columns.
+
+    ``columns`` is the usual per-column array list in **original** order (no
+    index, no reordering); returns an (n,) boolean row mask.  This is the
+    open-buffer path of :class:`~repro.core.segment.SegmentedIndex` — rows a
+    writer has appended but not yet sealed evaluate densely — and doubles
+    as the oracle the compressed paths are tested against.
+    """
+    columns = [np.asarray(c) for c in columns]
+
+    def resolve(col):
+        if isinstance(col, str):
+            if names is None:
+                raise ValueError(
+                    f"predicate references column {col!r} by name but no "
+                    "names were given")
+            try:
+                return columns[list(names).index(col)]
+            except ValueError:
+                raise ValueError(
+                    f"unknown column {col!r}; known: {', '.join(names)}"
+                ) from None
+        col = int(col)
+        if not 0 <= col < len(columns):
+            raise ValueError(f"column {col} out of range (0..{len(columns) - 1})")
+        return columns[col]
+
+    def rec(p) -> np.ndarray:
+        if isinstance(p, Eq):
+            return resolve(p.col) == p.value
+        if isinstance(p, In):
+            return np.isin(resolve(p.col), np.asarray(p.values, dtype=np.int64))
+        if isinstance(p, Range):
+            c = resolve(p.col)
+            return (c >= p.lo) & (c <= p.hi)
+        if isinstance(p, And):
+            m = rec(p.children[0])
+            for child in p.children[1:]:
+                m = m & rec(child)
+            return m
+        if isinstance(p, Or):
+            m = rec(p.children[0])
+            for child in p.children[1:]:
+                m = m | rec(child)
+            return m
+        if isinstance(p, Not):
+            return ~rec(p.child)
+        raise TypeError(f"not a Predicate: {p!r}")
+
+    return rec(pred)
 
 
 def _renumber_leaves(plan: Plan) -> None:
@@ -405,32 +466,70 @@ class ResultCache:
     is **entry-count** based (``maxsize`` results, not a byte budget) —
     each entry holds only a compressed stream, but very large results
     count the same as tiny ones.  ``hits`` / ``misses`` feed the
-    cache-hit-rate benchmark and capacity tuning."""
+    cache-hit-rate benchmark and capacity tuning.
+
+    Entries may carry a **scope** tag (a hashable; segments use
+    ``("segment", generation)``): :meth:`invalidate` evicts exactly one
+    scope's entries, the segmented-index compaction contract — appends
+    never touch cached state (open-buffer rows are not cached) and
+    compaction evicts only the retired segments' entries."""
 
     def __init__(self, maxsize: int = 256):
         self.maxsize = maxsize
-        self._data: OrderedDict = OrderedDict()
+        self._data: OrderedDict = OrderedDict()  # key -> (value, scope)
+        self._scope_keys: dict = {}              # scope -> set of keys
         self.hits = 0
         self.misses = 0
+        self.invalidated = 0
 
     def get(self, key):
-        if key in self._data:
+        hit = self._data.get(key)
+        if hit is not None:
             self._data.move_to_end(key)
             self.hits += 1
-            return self._data[key]
+            return hit[0]
         self.misses += 1
         return None
 
-    def put(self, key, value) -> None:
-        self._data[key] = value
-        self._data.move_to_end(key)
+    def put(self, key, value, scope=None) -> None:
+        old = self._data.pop(key, None)
+        if old is not None:
+            self._unscope(key, old[1])
+        self._data[key] = (value, scope)
+        if scope is not None:
+            self._scope_keys.setdefault(scope, set()).add(key)
         while len(self._data) > self.maxsize:
-            self._data.popitem(last=False)
+            k, (_, s) = self._data.popitem(last=False)
+            self._unscope(k, s)
+
+    def _unscope(self, key, scope) -> None:
+        if scope is not None:
+            keys = self._scope_keys.get(scope)
+            if keys is not None:
+                keys.discard(key)
+                if not keys:
+                    del self._scope_keys[scope]
+
+    def invalidate(self, scope) -> int:
+        """Evict every entry tagged with ``scope``; returns the count."""
+        keys = self._scope_keys.pop(scope, None)
+        if not keys:
+            return 0
+        for k in keys:
+            self._data.pop(k, None)
+        self.invalidated += len(keys)
+        return len(keys)
+
+    def scopes(self) -> tuple:
+        """The scopes with live entries (diagnostics / tests)."""
+        return tuple(self._scope_keys)
 
     def clear(self) -> None:
         self._data.clear()
+        self._scope_keys.clear()
         self.hits = 0
         self.misses = 0
+        self.invalidated = 0
 
     def __len__(self) -> int:
         return len(self._data)
@@ -441,7 +540,8 @@ class ResultCache:
 
     def stats(self) -> dict:
         return {"hits": self.hits, "misses": self.misses,
-                "entries": len(self._data), "hit_rate": self.hit_rate}
+                "entries": len(self._data), "hit_rate": self.hit_rate,
+                "invalidated": self.invalidated}
 
 
 # ---------------------------------------------------------------------------
@@ -487,6 +587,25 @@ def get_backend(name: str, **opts):
     if key not in _BACKEND_INSTANCES:
         _BACKEND_INSTANCES[key] = cls(**opts)
     return _BACKEND_INSTANCES[key]
+
+
+def invalidate_scope(scope) -> int:
+    """Evict one scope's entries from every registered backend instance's
+    result cache; returns the total evicted count.
+
+    The segmented-index lifecycle calls this when a segment retires
+    (compaction): content-digested keys already guarantee stale results are
+    never *returned*, invalidation keeps dead segments' entries from
+    squatting in the LRU.  Backends constructed directly (not through
+    :func:`get_backend`) manage their own caches —
+    ``backend.result_cache.invalidate(scope)``.
+    """
+    total = 0
+    for be in _BACKEND_INSTANCES.values():
+        cache = getattr(be, "result_cache", None)
+        if cache is not None:
+            total += cache.invalidate(scope)
+    return total
 
 
 @register_backend("numpy")
@@ -556,7 +675,7 @@ class NumpyBackend:
             return hit, 0  # reused: no compressed words visited
         r, scanned = self._combine(
             plan, node, lambda c: self._eval_cached(plan, c, digests))
-        self.result_cache.put(key, r)
+        self.result_cache.put(key, r, plan.scope)
         return r, scanned
 
 
@@ -636,7 +755,7 @@ class JaxBackend:
                 enc = [ewah.compress(words[b]) for b in range(len(idxs))]
             for b, i in enumerate(idxs):
                 res = EwahStream(enc[b], n_rows, plans[i].leaf_words())
-                self.result_cache.put(keys[i], res)
+                self.result_cache.put(keys[i], res, plans[i].scope)
                 out[i] = res
         return out
 

@@ -1,0 +1,266 @@
+"""Immutable index segments and the segmented query surface.
+
+The paper's pipeline (histogram -> column/value reordering -> row sort ->
+EWAH) runs *per segment*: a :class:`Segment` is one sealed, immutable run of
+rows with its own locally-sorted :class:`~repro.core.bitmap_index.BitmapIndex`
+("Sorting improves word-aligned bitmap indexes" shows the sorting benefit
+survives partitioning into independently sorted blocks).  A
+:class:`SegmentedIndex` stitches many segments — plus the owning writer's
+open (not yet sealed) row buffer — into one query surface:
+
+* segments partition the global row space into contiguous ranges, every
+  boundary word-aligned (a multiple of 32 rows), exactly the
+  ``repro.dist.query_fanout`` shard contract, so per-segment compressed
+  results concatenate with :func:`~repro.core.ewah_stream.concat_streams`;
+* predicates compile per segment (value domains are segment-local: a value
+  a segment never saw compiles to a constant-empty leaf) and execute
+  through the existing compressed engine in **one** batched backend call;
+* open-buffer rows — the writer's in-flight tail — evaluate directly over
+  the uncompressed columns (:func:`~repro.core.query.evaluate_mask`), so
+  appends are queryable before any seal;
+* row ids come back in **original ingest order** (each segment's local ids
+  map through its ``row_perm`` plus row offset) — there is no global
+  reordered space across independently sorted segments.
+
+Each segment carries a monotonically increasing ``generation``; its index's
+``cache_scope`` tags every compressed result the backends cache, so
+compaction evicts exactly the retired segments' cache entries
+(:func:`repro.core.query.invalidate_scope`) and untouched segments keep
+their hits.  See docs/lifecycle.md.
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from . import ewah
+from .bitmap_index import BitmapIndex
+from .ewah_stream import EwahStream, concat_streams
+from .query import compile_plan, evaluate_mask, get_backend
+
+__all__ = ["Segment", "SegmentedIndex"]
+
+_GENERATIONS = itertools.count(1)
+
+
+def next_generation() -> int:
+    """Process-wide monotonic segment generation (cache-invalidation key)."""
+    return next(_GENERATIONS)
+
+
+@dataclass(frozen=True, eq=False)  # identity equality: fields hold ndarrays
+class Segment:
+    """One sealed, immutable run of rows with its own local index.
+
+    ``columns`` keeps the segment's rows in **original ingest order** — the
+    row store compaction re-sorts from (a production system would re-read
+    them from storage); seal with ``keep_columns=False`` when the segment
+    will never compact (the dist fan-out shards do this) and the raw
+    arrays are dropped.  ``index`` is the histogram-aware build over the
+    rows; ``generation`` is the process-wide monotonic id that scopes the
+    segment's entries in backend result caches.
+    """
+
+    index: BitmapIndex
+    columns: tuple | None = field(repr=False)  # ingest-order arrays, or None
+    row_start: int
+    generation: int
+
+    @staticmethod
+    def seal(table_cols, spec=None, *, row_start: int = 0,
+             materialize: bool = True, keep_columns: bool = True) -> "Segment":
+        """Run the full per-segment pipeline and freeze the result."""
+        from .bitmap_index import _construct
+
+        cols = tuple(np.asarray(c) for c in table_cols)
+        gen = next_generation()
+        index = _construct(list(cols), spec, materialize=materialize)
+        index.cache_scope = ("segment", gen)
+        return Segment(index=index, columns=cols if keep_columns else None,
+                       row_start=int(row_start), generation=gen)
+
+    @property
+    def n_rows(self) -> int:
+        return self.index.n_rows
+
+    @property
+    def row_stop(self) -> int:
+        return self.row_start + self.n_rows
+
+    @property
+    def cache_scope(self) -> tuple:
+        return ("segment", self.generation)
+
+    def size_words(self) -> int:
+        return self.index.size_words()
+
+    def original_rows(self, local_rows: np.ndarray) -> np.ndarray:
+        """Map segment-local reordered row ids to original table positions."""
+        return self.row_start + self.index.row_perm[np.asarray(local_rows)]
+
+
+class SegmentedIndex:
+    """A query surface over sealed segments plus an optional open buffer.
+
+    Built by :class:`repro.core.lifecycle.IndexWriter` (the live ``.index``
+    view) or directly from a list of segments (the dist fan-out path).  The
+    contract every execution method checks:
+
+    * segments cover contiguous row ranges in order;
+    * every segment but the last covers a multiple of 32 rows (word
+      alignment — what lets compressed results concatenate in word space);
+    * the open buffer, when present, sits after the last segment.
+    """
+
+    def __init__(self, segments: list, names=None, writer=None):
+        self._segments = segments
+        self.names = names
+        self._writer = writer
+
+    # -- shape -------------------------------------------------------------
+
+    @property
+    def segments(self) -> list:
+        return self._segments
+
+    @property
+    def n_segments(self) -> int:
+        return len(self._segments)
+
+    def generations(self) -> tuple:
+        return tuple(s.generation for s in self._segments)
+
+    def _buffer(self):
+        """(columns, row_start, n_rows) of the open buffer, or None."""
+        w = self._writer
+        if w is None or not w.buffered_rows:
+            return None
+        cols = w.buffer_columns()
+        start = self._segments[-1].row_stop if self._segments else 0
+        return cols, start, len(cols[0])
+
+    @property
+    def n_sealed_rows(self) -> int:
+        return self._segments[-1].row_stop if self._segments else 0
+
+    @property
+    def n_rows(self) -> int:
+        buf = self._buffer()
+        return self.n_sealed_rows + (buf[2] if buf else 0)
+
+    def size_words(self) -> int:
+        """Compressed words across sealed segments (buffer rows are not
+        compressed until sealed)."""
+        return sum(s.size_words() for s in self._segments)
+
+    def _check(self) -> None:
+        pos = self._segments[0].row_start if self._segments else 0
+        last = len(self._segments) - 1
+        for i, seg in enumerate(self._segments):
+            if seg.row_start != pos:
+                raise ValueError(
+                    f"segment {i} (gen {seg.generation}) starts at "
+                    f"{seg.row_start}, expected {pos}: segments must cover "
+                    "contiguous row ranges")
+            if i < last and seg.n_rows % ewah.WORD_BITS:
+                raise ValueError(
+                    f"segment {i} (gen {seg.generation}) covers {seg.n_rows} "
+                    "rows — every segment but the last must be word-aligned "
+                    "(a multiple of 32 rows)")
+            pos = seg.row_stop
+        buf = self._buffer()
+        if buf is not None and self._segments and last >= 0 \
+                and self._segments[last].n_rows % ewah.WORD_BITS:
+            raise ValueError(
+                "open buffer follows a non-word-aligned final segment; "
+                "seal order violated the alignment contract")
+
+    # -- execution ---------------------------------------------------------
+
+    def execute_compressed(self, pred, backend: str = "numpy", names=None,
+                           **backend_opts):
+        """Per-segment compressed execution; returns
+        ``(segment_streams, merged)`` — the merged stream covers sealed
+        segments *and* open-buffer rows."""
+        return self.execute_compressed_many(
+            [pred], backend=backend, names=names, **backend_opts)[0]
+
+    def execute_compressed_many(self, preds, backend: str = "numpy",
+                                names=None, **backend_opts):
+        """Batched execution: all predicates' per-segment plans go to the
+        backend in one ``execute_compressed_many`` call (same-shape plans
+        batch across predicates and segments on the jax backend).  The open
+        buffer evaluates densely over its uncompressed columns and its
+        result stream concatenates after the sealed segments."""
+        return [(per_seg, merged) for per_seg, _, merged in
+                self._execute_many(preds, backend, names, backend_opts)]
+
+    def _execute_many(self, preds, backend, names, backend_opts):
+        """-> one (per_segment_streams, buffer_rows|None, merged) triple per
+        predicate; the buffer is evaluated exactly once per predicate."""
+        self._check()
+        names = names if names is not None else self.names
+        be = get_backend(backend, **backend_opts)
+        plans = [compile_plan(seg.index, p, names=names)
+                 for p in preds for seg in self._segments]
+        if hasattr(be, "execute_compressed_many"):
+            results = be.execute_compressed_many(plans)
+        else:
+            results = [be.execute_compressed(p) for p in plans]
+        buf = self._buffer()
+        out = []
+        n = len(self._segments)
+        total_rows = self.n_rows
+        for i, pred in enumerate(preds):
+            per_seg = list(results[i * n : (i + 1) * n])
+            parts = [r.data for r in per_seg]
+            scanned = sum(r.words_scanned for r in per_seg)
+            buf_rows = None
+            if buf is not None:
+                cols, _, bn = buf
+                # dense one-pass evaluation; scan cost is the buffer's
+                # dense word count
+                buf_rows = np.flatnonzero(
+                    evaluate_mask(pred, cols, names=names))
+                words = ewah.positions_to_words(buf_rows, bn)
+                parts.append(ewah.compress(words))
+                scanned += len(words)
+            merged = (EwahStream(concat_streams(parts), total_rows, scanned)
+                      if parts else EwahStream(ewah.compress(
+                          np.zeros(0, dtype=np.uint32)), 0, 0))
+            out.append((per_seg, buf_rows, merged))
+        return out
+
+    def query(self, pred, backend: str = "numpy", names=None,
+              **backend_opts):
+        """Returns ``(row_ids, words_scanned)`` with row ids in **original**
+        ingest row space, sorted ascending."""
+        return self.query_many([pred], backend=backend, names=names,
+                               **backend_opts)[0]
+
+    def query_many(self, preds, backend: str = "numpy", names=None,
+                   **backend_opts):
+        """Batched queries; one (row_ids, words_scanned) per predicate."""
+        buf_start = self.n_sealed_rows
+        out = []
+        for per_seg, buf_rows, merged in self._execute_many(
+                preds, backend, names, backend_opts):
+            ids = [seg.original_rows(r.to_rows())
+                   for seg, r in zip(self._segments, per_seg)]
+            if buf_rows is not None:
+                ids.append(buf_start + buf_rows)
+            rows = (np.sort(np.concatenate(ids)) if ids
+                    else np.asarray([], dtype=np.int64))
+            out.append((rows, merged.words_scanned))
+        return out
+
+    def count(self, pred, backend: str = "numpy", names=None,
+              **backend_opts) -> int:
+        """Matching-row count without materializing ids (compressed-domain
+        popcount of the merged stream)."""
+        _, merged = self.execute_compressed(pred, backend=backend,
+                                            names=names, **backend_opts)
+        return merged.count()

@@ -212,12 +212,3 @@ class IndexSpec:
     @classmethod
     def from_dict(cls, d: dict) -> "IndexSpec":
         return cls(**d)
-
-    @classmethod
-    def from_legacy_kwargs(
-        cls, k=1, row_order="lex", code_order="gray",
-        value_policy=None, column_order="heuristic",
-    ) -> "IndexSpec":
-        """Map the pre-IndexSpec ``BitmapIndex.build`` string kwargs."""
-        return cls(k=k, row_order=row_order, code_order=code_order,
-                   value_policy=value_policy, column_order=column_order)

@@ -9,20 +9,29 @@ Gray-Frequency row sorting (the paper's best heuristics) and queried through
 the predicate planner (repro.core.query), on either the numpy streaming
 backend or the batched jax backend.
 
-With ``query_fanout > 1`` the index shards over word-aligned row ranges
-(``repro.dist.query_fanout``) and every query fans out, each shard
+Ingestion is **incremental** (repro.core.lifecycle): every ``add_batch``
+appends to an :class:`~repro.core.lifecycle.IndexWriter` and seals the
+word-aligned prefix into an immutable segment — no monolithic rebuild per
+batch.  Queries run through the live
+:class:`~repro.core.segment.SegmentedIndex` view (sealed segments through
+the compressed engine, the open tail densely) and return row ids in
+**original ingest order**.  ``compact()`` applies the size-tiered policy
+when many small batches have accumulated.
+
+With ``query_fanout > 1`` the index instead shards over word-aligned row
+ranges (``repro.dist.query_fanout``) and every query fans out, each shard
 executing in the compressed domain and shipping its compressed result
-stream.  Fan-out queries return row ids in **original** (ingest) row order
-— there is no global reordered space across independently sorted shards —
-whereas the single-index path keeps the historical reordered-space ids
-(map back with ``index.row_perm[row_ids]``).
+stream; fan-out row ids are original ingest positions too, so the two modes
+answer identically.
 """
 
 from __future__ import annotations
 
+import warnings
+
 import numpy as np
 
-from ..core import And, BitmapIndex, Eq, IndexSpec
+from ..core import And, Eq, IndexSpec, IndexWriter
 
 
 class MetadataIndex:
@@ -35,37 +44,49 @@ class MetadataIndex:
         self.k = self.spec.k
         self.row_order = self.spec.row_order
         self.query_fanout = query_fanout
-        self._rows = {c: [] for c in self.COLS}
-        self._index: BitmapIndex | None = None
+        self.writer = IndexWriter(self.spec, names=self.COLS)
         self._sharded = None
 
     def add_batch(self, meta: dict):
-        for c in self.COLS:
-            self._rows[c].append(np.asarray(meta[c]))
-        self._index = None
+        """Append one metadata batch and seal its word-aligned prefix into
+        an immutable segment (the ``len % 32`` tail rides in the open
+        buffer and is still queryable).  In fan-out mode rows only buffer —
+        queries run through ``.sharded``, so per-batch segment indexes
+        would be wasted work."""
+        self.writer.append({c: np.asarray(meta[c]) for c in self.COLS})
+        if self.query_fanout <= 1:
+            self.writer.seal()
         self._sharded = None
 
-    def _cols(self):
-        return [np.concatenate(self._rows[c]) for c in self.COLS]
-
-    def build(self):
-        if self.query_fanout > 1:
-            return self.sharded
-        self._index = BitmapIndex.build(self._cols(), self.spec)
-        return self._index
+    def compact(self, **kwargs):
+        """Size-tiered compaction of accumulated small segments (see
+        ``IndexWriter.compact``); retired segments' cached query results
+        are evicted by generation scope."""
+        return self.writer.compact(**kwargs)
 
     @property
-    def index(self) -> BitmapIndex:
+    def n_rows(self) -> int:
+        return self.writer.n_rows
+
+    def _cols(self):
+        segs = [s.columns for s in self.writer.segments]
+        buf = self.writer.buffer_columns()
+        parts = [[s[c] for s in segs] + ([buf[c]] if buf else [])
+                 for c in range(len(self.COLS))]
+        return [np.concatenate(p) for p in parts]
+
+    @property
+    def index(self):
+        """The live :class:`~repro.core.segment.SegmentedIndex` view
+        (sealed segments + open buffer).  Row ids from queries are original
+        ingest positions."""
         if self.query_fanout > 1:
-            # a silently-built second full index would double memory and
-            # answer in a different row space than the fan-out path
+            # a second full query surface would double memory and confuse
+            # cache scoping; fan-out mode queries through .sharded
             raise ValueError(
                 "MetadataIndex was built with query_fanout="
-                f"{self.query_fanout}; use .sharded (row ids from queries "
-                "are original ingest positions, not reordered space)")
-        if self._index is None:
-            self._index = BitmapIndex.build(self._cols(), self.spec)
-        return self._index
+                f"{self.query_fanout}; use .sharded")
+        return self.writer.index
 
     @property
     def sharded(self):
@@ -80,22 +101,48 @@ class MetadataIndex:
     def query_pred(self, pred, backend: str = "numpy"):
         """Run any predicate (columns by name, e.g. ``Eq("domain", 3)`` or
         ``In("quality_bin", range(8, 16))``) through the planner.
-        Returns (row_ids, compressed_words_scanned); with fan-out active,
-        row ids are original ingest positions (see module docstring)."""
+        Returns (row_ids, compressed_words_scanned); row ids are original
+        ingest positions in both the segmented and fan-out modes."""
         if self.query_fanout > 1:
             return self.sharded.query(pred, backend=backend, names=self.COLS)
-        return self.index.query(pred, backend=backend, names=self.COLS)
+        return self.index.query(pred, backend=backend)
 
-    def query(self, _backend: str = "numpy", **conditions):
-        """Equality query: rows matching all column=value conditions
-        (compiled to one And(Eq, ...) plan — a single smallest-streams-first
-        AND fan-in).  Returns (row_ids, compressed_words_scanned)."""
-        if not conditions:
+    def query(self, where: dict | None = None, *, backend: str = "numpy",
+              **legacy_conditions):
+        """Equality query: rows matching all ``where={column: value}``
+        conditions (compiled to one And(Eq, ...) plan — a single
+        smallest-streams-first AND fan-in).  Returns
+        (row_ids, compressed_words_scanned).
+
+        ``backend`` is a normal keyword-only option; conditions travel in
+        the explicit ``where=`` dict so column names can never collide with
+        option names.  The old spellings — conditions as bare kwargs, the
+        backend as ``_backend=`` — still work for one release with a
+        DeprecationWarning.
+        """
+        if "_backend" in legacy_conditions:
+            warnings.warn(
+                "MetadataIndex.query(_backend=...) is deprecated; backend "
+                "is a normal keyword-only argument now: query(where, "
+                "backend=...)", DeprecationWarning, stacklevel=2)
+            backend = legacy_conditions.pop("_backend")
+        if legacy_conditions:
+            warnings.warn(
+                "passing conditions as bare keyword arguments is "
+                "deprecated (column names could collide with option "
+                "names); use query(where={...})",
+                DeprecationWarning, stacklevel=2)
+            where = {**(where or {}), **legacy_conditions}
+        if not where:
             return np.asarray([], dtype=np.int64), 0
-        pred = And(*[Eq(col, int(v)) for col, v in conditions.items()])
-        return self.query_pred(pred, backend=_backend)
+        unknown = sorted(set(where) - set(self.COLS))
+        if unknown:
+            raise ValueError(
+                f"unknown columns {unknown}; known: {', '.join(self.COLS)}")
+        pred = And(*[Eq(col, int(v)) for col, v in where.items()])
+        return self.query_pred(pred, backend=backend)
 
     def size_words(self) -> int:
         if self.query_fanout > 1:
             return self.sharded.size_words()
-        return self.index.size_words()
+        return self.writer.size_words()

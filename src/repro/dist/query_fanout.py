@@ -1,10 +1,12 @@
 """Query fan-out across row-range shards of a bitmap index.
 
-Sharding-for-serving counterpart of the placement/checkpoint modules: a
-table splits into contiguous *word-aligned* row ranges (every boundary a
-multiple of 32 rows, so shard result bitmaps concatenate in word space),
-each shard builds its own locally-sorted :class:`BitmapIndex`, and a query
-fans out as
+Sharding-for-serving counterpart of the placement/checkpoint modules — and,
+since the segmented-lifecycle redesign, a **thin view over segments**: a
+shard IS a :class:`~repro.core.segment.Segment` (word-aligned contiguous
+row range + locally-sorted index + generation), and :class:`ShardedIndex`
+delegates execution to :class:`~repro.core.segment.SegmentedIndex`.  What
+this module adds is the *placement* policy (``shard_ranges``: split a table
+into up to N equal word-aligned ranges) and the fan-out framing:
 
   1. the predicate compiles *per shard* against that shard's index (value
      domains are shard-local: a value a shard never saw compiles to a
@@ -24,24 +26,19 @@ or hosts without coordination; this module keeps the execution loop local
 and the *protocol* (word alignment, compressed shipping, coalescing merge)
 is what `docs/dist.md` specifies for a multi-host deployment.
 
-Row-id semantics: each shard's local ids live in its own reordered row
-space; :meth:`ShardedIndex.query` maps them through the shard's
-``row_perm`` and row offset, so fan-out queries return **original** table
-row positions (unlike ``BitmapIndex.query``, whose ids live in reordered
-space — there is no global reordered space across independently sorted
-shards).
+Row-id semantics: fan-out queries return **original** table row positions
+(each shard's local ids map through its ``row_perm`` and row offset) —
+the same contract as every segmented surface; ``BitmapIndex.query`` ids
+live in reordered space (map with ``index.row_perm``).
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass
-
-import numpy as np
-
-from ..core import BitmapIndex
 from ..core.ewah import WORD_BITS
-from ..core.ewah_stream import EwahStream, concat_streams
-from ..core.query import compile_plan, get_backend
+from ..core.segment import Segment, SegmentedIndex
+
+# a shard is a segment; the old name stays importable
+IndexShard = Segment
 
 
 def shard_ranges(n_rows: int, n_shards: int) -> list:
@@ -58,47 +55,37 @@ def shard_ranges(n_rows: int, n_shards: int) -> list:
             if bounds[i + 1] > bounds[i]]
 
 
-@dataclass
-class IndexShard:
-    """One shard: a locally-built index over rows [row_start, row_stop)."""
-
-    index: BitmapIndex
-    row_start: int
-    row_stop: int
-
-    @property
-    def n_rows(self) -> int:
-        return self.row_stop - self.row_start
-
-    def original_rows(self, local_rows: np.ndarray) -> np.ndarray:
-        """Map shard-local reordered row ids to original table positions."""
-        return self.row_start + self.index.row_perm[np.asarray(local_rows)]
-
-
 class ShardedIndex:
-    """A bitmap index fanned out over word-aligned row-range shards."""
+    """A bitmap index fanned out over word-aligned row-range shards.
+
+    A thin view: ``shards`` are :class:`~repro.core.segment.Segment`s and
+    every execution method delegates to the shared
+    :class:`~repro.core.segment.SegmentedIndex` engine.
+    """
 
     def __init__(self, shards: list, names=None):
         if not shards:
             raise ValueError("ShardedIndex needs at least one shard")
         self.shards = shards
         self.names = names
+        self._segmented = SegmentedIndex(shards, names=names)
 
     @staticmethod
     def build(table_cols, spec=None, n_shards: int = 4,
               names=None) -> "ShardedIndex":
-        """Build one :class:`BitmapIndex` per word-aligned row range.
+        """Seal one :class:`Segment` per word-aligned row range.
 
         Each shard sorts its own rows (the paper's reordering applies per
         shard — sorted runs never span shard boundaries, which is also what
         keeps shard builds embarrassingly parallel)."""
+        import numpy as np
+
         table_cols = [np.asarray(c) for c in table_cols]
         n_rows = len(table_cols[0])
         shards = [
-            IndexShard(
-                index=BitmapIndex.build([c[start:stop] for c in table_cols],
-                                        spec),
-                row_start=start, row_stop=stop)
+            # shards are never compacted: drop the raw-column row store
+            Segment.seal([c[start:stop] for c in table_cols], spec,
+                         row_start=start, keep_columns=False)
             for start, stop in shard_ranges(n_rows, n_shards)
         ]
         return ShardedIndex(shards, names=names)
@@ -112,9 +99,9 @@ class ShardedIndex:
         return len(self.shards)
 
     def size_words(self) -> int:
-        return sum(sh.index.size_words() for sh in self.shards)
+        return self._segmented.size_words()
 
-    # -- execution ---------------------------------------------------------
+    # -- execution (delegated to the segmented engine) ---------------------
 
     def execute_compressed(self, pred, backend: str = "numpy", names=None,
                            **backend_opts):
@@ -126,8 +113,8 @@ class ShardedIndex:
         compressed stream over the full row space, bit-identical to a
         single-index execution over the same (per-shard reordered) rows.
         """
-        return self.execute_compressed_many(
-            [pred], backend=backend, names=names, **backend_opts)[0]
+        return self._segmented.execute_compressed(
+            pred, backend=backend, names=names, **backend_opts)
 
     def execute_compressed_many(self, preds, backend: str = "numpy",
                                 names=None, **backend_opts):
@@ -137,40 +124,19 @@ class ShardedIndex:
         shards (one padded dispatch per plan shape, not one per
         predicate x shard).  Returns a (shard_results, merged) pair per
         predicate."""
-        names = names if names is not None else self.names
-        be = get_backend(backend, **backend_opts)
-        plans = [compile_plan(sh.index, p, names=names)
-                 for p in preds for sh in self.shards]
-        if hasattr(be, "execute_compressed_many"):
-            results = be.execute_compressed_many(plans)
-        else:
-            results = [be.execute_compressed(p) for p in plans]
-        out = []
-        n = len(self.shards)
-        for i in range(len(preds)):
-            per_shard = results[i * n : (i + 1) * n]
-            merged = EwahStream(
-                concat_streams([r.data for r in per_shard]), self.n_rows,
-                sum(r.words_scanned for r in per_shard))
-            out.append((per_shard, merged))
-        return out
+        return self._segmented.execute_compressed_many(
+            preds, backend=backend, names=names, **backend_opts)
 
     def query(self, pred, backend: str = "numpy", names=None,
               **backend_opts):
         """Fan-out query; returns (row_ids, words_scanned) with row ids in
-        **original** table row space, sorted ascending (each shard's local
-        ids map through its ``row_perm`` + row offset)."""
-        return self.query_many([pred], backend=backend, names=names,
-                               **backend_opts)[0]
+        **original** table row space, sorted ascending."""
+        return self._segmented.query(pred, backend=backend, names=names,
+                                     **backend_opts)
 
     def query_many(self, preds, backend: str = "numpy", names=None,
                    **backend_opts):
         """Batched fan-out queries; one (row_ids, words_scanned) per
         predicate, row ids in original table row space."""
-        out = []
-        for per_shard, merged in self.execute_compressed_many(
-                preds, backend=backend, names=names, **backend_opts):
-            ids = [sh.original_rows(r.to_rows())
-                   for sh, r in zip(self.shards, per_shard)]
-            out.append((np.sort(np.concatenate(ids)), merged.words_scanned))
-        return out
+        return self._segmented.query_many(preds, backend=backend,
+                                          names=names, **backend_opts)

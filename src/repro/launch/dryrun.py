@@ -265,6 +265,47 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, hlo_dir=None,
     return rec
 
 
+def budget_key(rec: dict) -> str:
+    return f"{rec['mesh']}__{rec['arch']}__{rec['shape']}"
+
+
+def check_budget(rec: dict, budget: dict) -> str:
+    """Assert a cell's HLO-collective volume against its committed ceiling.
+
+    Returns 'ok' (within budget), 'exceeded', or 'unbudgeted' (no entry for
+    this cell yet — informational, so the budget file can grow cell by cell
+    via ``--update-budget``).  Only collective *bytes* are gated: op counts
+    are a compiler choice (e.g. all-reduce vs reduce-scatter+all-gather),
+    bytes moved are the cost model.
+    """
+    entry = budget.get(budget_key(rec))
+    if entry is None:
+        return "unbudgeted"
+    got = rec["collectives"]["total_bytes"]
+    limit = entry["total_bytes"]
+    rec["budget"] = {"total_bytes_limit": limit, "total_bytes": got}
+    return "exceeded" if got > limit else "ok"
+
+
+def update_budget(path: str, results: list, slack: float) -> None:
+    """Write observed collective volumes (x ``slack``) as the new ceilings,
+    merging over any existing entries so partial sweeps extend the file."""
+    budget = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            budget = json.load(f)
+    for rec in results:
+        if rec.get("status") == "ok":
+            budget[budget_key(rec)] = {
+                "total_bytes": int(rec["collectives"]["total_bytes"] * slack),
+                "counts": rec["collectives"]["counts"],
+            }
+    with open(path, "w") as f:
+        json.dump(dict(sorted(budget.items())), f, indent=1)
+    print(f"budget {path}: {len(budget)} cells "
+          f"(ceilings = observed bytes x {slack})")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
@@ -278,7 +319,23 @@ def main():
     ap.add_argument("--remat-policy", default=None, choices=[None, "dots", "full"])
     ap.add_argument("--moe-dispatch", default=None, choices=[None, "gather", "scatter"])
     ap.add_argument("--grad-zero", action="store_true")
+    ap.add_argument("--budget", default=None,
+                    help="HLO-collective budget json "
+                         "(benchmarks/COLLECTIVE_budget.json): fail any "
+                         "cell whose collective bytes exceed its committed "
+                         "ceiling; cells without an entry are reported but "
+                         "don't fail")
+    ap.add_argument("--update-budget", default=None, metavar="PATH",
+                    help="after the sweep, write observed collective "
+                         "volumes x --budget-slack as the new ceilings "
+                         "(merges over existing entries)")
+    ap.add_argument("--budget-slack", type=float, default=1.25)
     args = ap.parse_args()
+
+    budget = None
+    if args.budget:
+        with open(args.budget) as f:
+            budget = json.load(f)
 
     archs = list_archs() if (args.all or not args.arch) else [args.arch]
     shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
@@ -299,10 +356,20 @@ def main():
                 results.append(rec)
                 tag = f"{rec['mesh']} {arch} {shape}"
                 if rec["status"] == "ok":
+                    note = ""
+                    if budget is not None:
+                        verdict = check_budget(rec, budget)
+                        rec["budget_status"] = verdict
+                        if verdict == "exceeded":
+                            note = (f"  BUDGET EXCEEDED "
+                                    f"(limit {rec['budget']['total_bytes_limit']:.3e}B)")
+                        elif verdict == "unbudgeted":
+                            note = "  (no budget entry)"
                     print(f"[ok]   {tag}  lower={rec['lower_s']}s "
                           f"compile={rec['compile_s']}s "
                           f"flops={rec['cost'].get('flops'):.3e} "
-                          f"coll={rec['collectives']['total_bytes']:.3e}B",
+                          f"coll={rec['collectives']['total_bytes']:.3e}B"
+                          f"{note}",
                           flush=True)
                 elif rec["status"] == "skipped":
                     print(f"[skip] {tag}  {rec['reason']}", flush=True)
@@ -313,9 +380,18 @@ def main():
                     json.dump(rec, f, indent=1)
     with open(os.path.join(args.out, "summary.json"), "w") as f:
         json.dump(results, f, indent=1)
+    if args.update_budget:
+        update_budget(args.update_budget, results, args.budget_slack)
     n_err = sum(r["status"] == "error" for r in results)
-    print(f"done: {len(results)} cells, {n_err} errors", flush=True)
-    sys.exit(1 if n_err else 0)
+    n_over = sum(r.get("budget_status") == "exceeded" for r in results)
+    n_unbudgeted = sum(r.get("budget_status") == "unbudgeted"
+                       for r in results)
+    msg = f"done: {len(results)} cells, {n_err} errors"
+    if budget is not None:
+        msg += (f", {n_over} over collective budget "
+                f"({n_unbudgeted} unbudgeted)")
+    print(msg, flush=True)
+    sys.exit(1 if (n_err or n_over) else 0)
 
 
 if __name__ == "__main__":

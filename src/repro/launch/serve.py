@@ -19,7 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import BitmapIndex, Eq, IndexSpec
+from repro.core import BitmapIndex, Eq, IndexSpec, IndexWriter
 from repro.dist.sharding import (batch_shardings, cache_shardings,
                                  param_shardings, replicated)
 from repro.launch.mesh import make_cli_mesh
@@ -38,8 +38,67 @@ def make_requests(n, rng, max_len=96):
     return np.clip(lens + jitter, 8, max_len)
 
 
+BIN_WIDTH = 8  # length-bin granularity for admission packing
+
+
+class SegmentedAdmission:
+    """In-flight re-binning admission queue (the streaming serving plane).
+
+    New requests ``admit`` into the **open segment** of an
+    :class:`~repro.core.lifecycle.IndexWriter` — queryable immediately,
+    no index rebuild — and every ``seal_rows`` admitted requests the
+    word-aligned prefix seals into an immutable segment that serves
+    concurrently through the compressed engine.  Each ``pack`` re-bins the
+    *entire* queue against the live length-bin histogram (bins in
+    descending frequency, the paper's Gray-Frequency order applied to
+    serving), so a length class that becomes popular mid-stream promotes
+    earlier requests too: admission order is re-derived in flight, never
+    frozen at arrival.
+    """
+
+    def __init__(self, backend: str = "numpy", seal_rows: int = 256):
+        self.spec = IndexSpec(row_order="unsorted", column_order="given")
+        self.writer = IndexWriter(self.spec, seal_rows=seal_rows)
+        self.backend = backend
+        self._lengths: list = []
+
+    def admit(self, lengths) -> None:
+        """Append arriving request lengths to the open segment."""
+        lengths = np.asarray(lengths)
+        if len(lengths):
+            self._lengths.append(lengths)
+            self.writer.append([lengths // BIN_WIDTH])
+
+    @property
+    def lengths(self) -> np.ndarray:
+        return (np.concatenate(self._lengths) if self._lengths
+                else np.zeros(0, dtype=np.int64))
+
+    @property
+    def n_segments(self) -> int:
+        return len(self.writer.segments)
+
+    def pack(self, batch_size: int) -> list:
+        """Re-bin the whole queue and emit index-batches (one Eq(bin) plan
+        per bin over sealed segments + the open buffer, bins in descending
+        frequency, lengths ascending within a bin)."""
+        lengths = self.lengths
+        if not len(lengths):
+            return []
+        bins = lengths // BIN_WIDTH
+        uniq, counts = np.unique(bins, return_counts=True)
+        by_freq = uniq[np.lexsort((uniq, -counts))]
+        results = self.writer.index.query_many(
+            [Eq(0, int(b)) for b in by_freq], backend=self.backend)
+        order = np.concatenate(
+            [rows[np.argsort(lengths[rows], kind="stable")]
+             for rows, _ in results])
+        return [order[i : i + batch_size]
+                for i in range(0, len(order), batch_size)]
+
+
 def pack_batches(lengths, batch_size, histogram_aware=True, backend="numpy",
-                 query_fanout=0):
+                 query_fanout=0, admission="rebuild"):
     """Return list of index-batches; histogram-aware = Gray-Frequency order.
 
     The histogram-aware path runs through the bitmap query plane: a bitmap
@@ -51,33 +110,53 @@ def pack_batches(lengths, batch_size, histogram_aware=True, backend="numpy",
     ranges (repro.dist.query_fanout) and every per-bin plan fans out, each
     shard shipping its compressed result stream — the multi-host admission
     topology, exercised in-process.
+
+    ``admission="segmented"`` exercises the streaming path instead of a
+    one-shot rebuild: lengths arrive in waves through
+    :class:`SegmentedAdmission` (appends to the open segment, auto-seals,
+    sealed segments serve concurrently) and the final ``pack`` re-bins
+    everything in flight.  Batches are identical to the rebuild path — the
+    lifecycle changes *when* index work happens, not the answer.
     """
     lengths = np.asarray(lengths)
     n = len(lengths)
-    if histogram_aware:
-        bins = lengths // 8
-        spec = IndexSpec(row_order="unsorted", column_order="given")
-        uniq, counts = np.unique(bins, return_counts=True)
-        by_freq = uniq[np.lexsort((uniq, -counts))]
-        if query_fanout > 1:
-            from repro.dist.query_fanout import ShardedIndex
-
-            sidx = ShardedIndex.build([bins], spec, n_shards=query_fanout)
-            # unsorted row order keeps row_perm the identity, so fan-out's
-            # original-space ids are directly comparable to the single
-            # path; query_many keeps all bins' per-shard plans in one
-            # backend call (same-shape plans batch across bins and shards)
-            results = sidx.query_many([Eq(0, int(b)) for b in by_freq],
-                                      backend=backend)
-        else:
-            idx = BitmapIndex.build([bins], spec)
-            results = idx.query_many([Eq(0, int(b)) for b in by_freq],
-                                     backend=backend)
-        order = np.concatenate(
-            [rows[np.argsort(lengths[rows], kind="stable")]
-             for rows, _ in results])
-    else:
+    if not histogram_aware:
         order = np.arange(n)
+        return [order[i : i + batch_size] for i in range(0, n, batch_size)]
+    if admission == "segmented":
+        if query_fanout > 1:
+            raise ValueError(
+                "segmented admission and query_fanout are separate "
+                "topologies; pick one")
+        q = SegmentedAdmission(backend=backend)
+        waves = max(1, min(4, n // max(batch_size, 1)))
+        for chunk in np.array_split(lengths, waves):
+            q.admit(chunk)
+        return q.pack(batch_size)
+    if admission != "rebuild":
+        raise ValueError(f"unknown admission mode {admission!r}; "
+                         "known: rebuild, segmented")
+    bins = lengths // BIN_WIDTH
+    spec = IndexSpec(row_order="unsorted", column_order="given")
+    uniq, counts = np.unique(bins, return_counts=True)
+    by_freq = uniq[np.lexsort((uniq, -counts))]
+    if query_fanout > 1:
+        from repro.dist.query_fanout import ShardedIndex
+
+        sidx = ShardedIndex.build([bins], spec, n_shards=query_fanout)
+        # unsorted row order keeps row_perm the identity, so fan-out's
+        # original-space ids are directly comparable to the single
+        # path; query_many keeps all bins' per-shard plans in one
+        # backend call (same-shape plans batch across bins and shards)
+        results = sidx.query_many([Eq(0, int(b)) for b in by_freq],
+                                  backend=backend)
+    else:
+        idx = BitmapIndex.build([bins], spec)
+        results = idx.query_many([Eq(0, int(b)) for b in by_freq],
+                                 backend=backend)
+    order = np.concatenate(
+        [rows[np.argsort(lengths[rows], kind="stable")]
+         for rows, _ in results])
     return [order[i : i + batch_size] for i in range(0, n, batch_size)]
 
 
@@ -108,6 +187,13 @@ def main(argv=None):
                     help="shard the admission index over N word-aligned row "
                          "ranges and fan every packing query out across "
                          "them (0/1 = single index)")
+    ap.add_argument("--admission", default="rebuild",
+                    choices=("rebuild", "segmented"),
+                    help="'segmented' streams requests through an "
+                         "IndexWriter (in-flight re-binning: appends hit "
+                         "the open segment, sealed segments serve "
+                         "concurrently) instead of rebuilding the "
+                         "admission index per pack")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -131,16 +217,19 @@ def main(argv=None):
         for mode in (False, True):
             batches = pack_batches(lengths, args.batch, histogram_aware=mode,
                                    backend=args.query_backend,
-                                   query_fanout=args.query_fanout)
+                                   query_fanout=args.query_fanout,
+                                   admission=args.admission)
             waste = padding_waste(lengths, batches)
             print(f"packing histogram_aware={mode} "
                   f"(query backend {args.query_backend}, "
-                  f"fanout {args.query_fanout}): "
+                  f"fanout {args.query_fanout}, "
+                  f"admission {args.admission}): "
                   f"padding waste {waste:.1%}")
 
         batches = pack_batches(lengths, args.batch, histogram_aware=True,
                                backend=args.query_backend,
-                               query_fanout=args.query_fanout)
+                               query_fanout=args.query_fanout,
+                               admission=args.admission)
         step = jax.jit(partial(serve_step, cfg=cfg),
                        in_shardings=(p_sh, tok_sh, c_sh, replicated(mesh)),
                        out_shardings=(tok_sh, c_sh), donate_argnums=(2,))

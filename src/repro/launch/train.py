@@ -185,8 +185,8 @@ def main(argv=None):
                       extra={"pipeline": pipeline.snapshot()})
 
         # data-plane bitmap index demo: curation query over trained batches
-        meta_index.build()
-        rows, scanned = meta_index.query(domain=3)
+        # (add_batch sealed segments incrementally; no monolithic build)
+        rows, scanned = meta_index.query(where={"domain": 3})
         elapsed = time.time() - t_start
         print(f"[train] done in {elapsed:.1f}s; metadata index "
               f"{meta_index.size_words()} words; domain=3 -> {len(rows)} rows "

@@ -170,6 +170,9 @@ def test_fanout_ships_compressed_and_coalesces():
         # per-shard word alignment: every shard but the last covers a
         # multiple of 32 rows
         assert all(sh.n_rows % 32 == 0 for sh in sharded.shards[:-1])
+    # shards are Segments sealed WITHOUT the raw-column row store (they
+    # are never compacted; keeping the arrays would double memory)
+    assert all(sh.columns is None for sh in sharded.shards)
 
 
 def test_fanout_shard_local_value_domains():
@@ -219,9 +222,11 @@ def test_metadata_index_query_fanout():
     fanned = MetadataIndex(k=1, query_fanout=4)
     fanned.add_batch(meta)
 
-    rows_plain, _ = plain.query(domain=3, quality_bin=8)
-    expect = np.sort(plain.index.row_perm[rows_plain])
-    rows_fan, _ = fanned.query(domain=3, quality_bin=8)
+    # both modes answer in original ingest row space
+    rows_plain, _ = plain.query(where={"domain": 3, "quality_bin": 8})
+    expect = np.flatnonzero((meta["domain"] == 3) & (meta["quality_bin"] == 8))
+    np.testing.assert_array_equal(rows_plain, expect)
+    rows_fan, _ = fanned.query(where={"domain": 3, "quality_bin": 8})
     np.testing.assert_array_equal(rows_fan, expect)
     rows_pred, _ = fanned.query_pred(In("domain", [1, 3]), backend="jax")
     np.testing.assert_array_equal(
@@ -229,4 +234,4 @@ def test_metadata_index_query_fanout():
     assert fanned.sharded.n_shards == 4
     assert fanned.size_words() > 0
     with pytest.raises(ValueError, match="sharded"):
-        fanned.index  # would silently build a second, inconsistent index
+        fanned.index  # would silently build a second, inconsistent surface

@@ -5,7 +5,7 @@ import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
-from repro.core import ewah
+from repro.core import IndexSpec, ewah
 from repro.core.bitmap_index import BitmapIndex, _materialize_streams, assign_codes
 from repro.core.index_size import column_bitmap_sizes
 from repro.core.sorting import order_rows
@@ -84,10 +84,12 @@ def test_sorting_shrinks_index():
                      r.integers(0, 3000, 2000)], axis=1)
     rows = pool[r.integers(0, 2000, n)]
     cols = [rows[:, j] for j in range(3)]
-    unsorted = BitmapIndex.build(cols, k=1, row_order="unsorted",
-                                 column_order=None, materialize=False)
-    slex = BitmapIndex.build(cols, k=1, row_order="lex",
-                             column_order=None, materialize=False)
+    unsorted = BitmapIndex.build(
+        cols, IndexSpec(k=1, row_order="unsorted", column_order="given"),
+        materialize=False)
+    slex = BitmapIndex.build(
+        cols, IndexSpec(k=1, row_order="lex", column_order="given"),
+        materialize=False)
     assert slex.size_words() < unsorted.size_words() / 2
 
 
@@ -96,7 +98,8 @@ def test_equality_query_correct():
     n = 3000
     cols = [r.integers(0, 9, n), r.integers(0, 57, n)]
     for k in (1, 2):
-        idx = BitmapIndex.build(cols, k=k, row_order="lex", column_order=None)
+        idx = BitmapIndex.build(
+            cols, IndexSpec(k=k, row_order="lex", column_order="given"))
         reordered = [cols[idx.original_column(i)] for i in range(2)]
         perm = idx.row_perm
         for ci in range(2):

@@ -1,0 +1,384 @@
+"""Tests for the segmented index lifecycle (repro.core.lifecycle/segment).
+
+Covers the writer state machine (append / seal / close, word-alignment
+tail carrying), compaction (explicit spans, the size-tiered policy,
+contiguity validation), the segmented query surface (sealed segments +
+open buffer, original-row-space ids, both backends), the cache-invalidation
+contract (generation scopes, compaction evicts only retired segments'
+entries), and a hypothesis property test driving random
+append/seal/compact schedules against a monolithic rebuild.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (And, BitmapIndex, Eq, In, IndexSpec, IndexWriter,
+                        Not, Or, Range, Segment, SegmentedIndex, compact,
+                        evaluate_mask, size_tiered_pick)
+from repro.core.query import ResultCache, get_backend, invalidate_scope
+
+
+def make_table(n, cards, seed):
+    r = np.random.default_rng(seed)
+    return [r.integers(0, c, size=n) for c in cards]
+
+
+PREDICATES = [
+    Eq(0, 3),
+    In(1, [1, 5, 9]),
+    Range(1, 2, 8),
+    Range(0, 50, 40),                    # empty
+    And(Eq(0, 2), Eq(1, 4)),
+    Or(Eq(0, 1), Eq(0, 2), Eq(1, 0)),
+    Not(Eq(0, 0)),
+    And(In(0, [0, 1, 2]), Range(1, 0, 6), Not(Eq(1, 5))),
+]
+
+
+def expected_rows(pred, cols):
+    return np.flatnonzero(evaluate_mask(pred, cols))
+
+
+# -- writer state machine ----------------------------------------------------
+
+
+def test_seal_carries_unaligned_tail():
+    cols = make_table(100, [5, 7], seed=0)
+    w = IndexWriter(IndexSpec(k=1, row_order="lex"))
+    w.append(cols)
+    assert w.buffered_rows == 100
+    seg = w.seal()
+    assert seg.n_rows == 96 and seg.row_start == 0       # 100 -> 96 + 4
+    assert w.buffered_rows == 4 and w.sealed_rows == 96
+    assert w.seal() is None                              # < 32 rows buffered
+    w.append([c[:60] for c in make_table(60, [5, 7], seed=1)])
+    seg2 = w.seal()
+    assert seg2.n_rows == 64 and seg2.row_start == 96    # 4 + 60 -> 64 + 0
+    final = w.close()
+    assert final is None and w.closed                    # buffer was empty
+
+
+def test_close_seals_everything_and_locks():
+    cols = make_table(45, [4], seed=2)
+    w = IndexWriter()
+    w.append(cols)
+    seg = w.close()
+    assert seg.n_rows == 45                              # final may be ragged
+    assert w.closed
+    with pytest.raises(ValueError, match="closed"):
+        w.append(cols)
+    with pytest.raises(ValueError, match="closed"):
+        w.seal()
+    with pytest.raises(ValueError, match="closed"):
+        w.close()
+
+
+def test_append_validation():
+    w = IndexWriter()
+    with pytest.raises(ValueError, match="equal length"):
+        w.append([np.arange(5), np.arange(6)])
+    w.append([np.arange(5), np.arange(5)])
+    with pytest.raises(ValueError, match="columns"):
+        w.append([np.arange(5)])                         # column count fixed
+    with pytest.raises(ValueError, match="names"):
+        w.append({"a": np.arange(5)})                    # dict needs names
+    wn = IndexWriter(names=("a", "b"))
+    wn.append({"a": np.arange(5), "b": np.arange(5)})
+    with pytest.raises(ValueError, match="missing"):
+        wn.append({"a": np.arange(5)})
+
+
+def test_auto_seal_threshold():
+    cols = make_table(300, [4, 6], seed=3)
+    w = IndexWriter(IndexSpec(), seal_rows=100)
+    for i in range(0, 300, 50):
+        w.append([c[i : i + 50] for c in cols])
+    assert len(w.segments) >= 2
+    assert all(s.n_rows % 32 == 0 for s in w.segments)
+    assert w.n_rows == 300
+
+
+def test_generations_are_monotonic():
+    cols = make_table(128, [4], seed=4)
+    w = IndexWriter()
+    w.append(cols)
+    a = w.seal()
+    w.append(cols)
+    b = w.seal()
+    assert b.generation > a.generation
+    assert w.index.generations() == (a.generation, b.generation)
+
+
+# -- open buffer -------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_open_buffer_rows_are_queryable(backend):
+    cols = make_table(150, [5, 11], seed=5)
+    w = IndexWriter(IndexSpec(k=1, row_order="lex"))
+    w.append([c[:100] for c in cols])
+    w.seal()                                             # 96 sealed, 4 carried
+    w.append([c[100:] for c in cols])                    # 54 in open buffer
+    si = w.index
+    assert si.n_rows == 150 and si.n_sealed_rows == 96
+    for pred in PREDICATES:
+        rows, _ = si.query(pred, backend=backend)
+        np.testing.assert_array_equal(rows, expected_rows(pred, cols))
+        _, merged = si.execute_compressed(pred, backend=backend)
+        assert merged.n_rows == 150
+        assert merged.count() == len(rows)
+
+
+def test_empty_writer_queries():
+    si = IndexWriter().index
+    rows, scanned = si.query(Eq(0, 1))
+    assert len(rows) == 0 and scanned == 0
+    assert si.n_rows == 0 and si.size_words() == 0
+
+
+def test_buffer_columns_empty_after_aligned_seal():
+    """Regression: an aligned seal leaves zero chunks; buffer_columns must
+    return [] (not crash on np.concatenate over nothing)."""
+    w = IndexWriter()
+    w.append([np.arange(64) % 5])
+    w.seal()
+    assert w.buffered_rows == 0
+    assert w.buffer_columns() == []
+    rows, _ = w.index.query(Eq(0, 1))             # buffer-free query works
+    np.testing.assert_array_equal(rows, np.flatnonzero(np.arange(64) % 5 == 1))
+
+
+def test_segments_without_row_store_cannot_compact():
+    """keep_columns=False drops the raw-column row store (the fan-out
+    shard mode); such segments still query but refuse to compact."""
+    cols = make_table(64, [4], seed=13)
+    a = Segment.seal([c[:32] for c in cols], row_start=0, keep_columns=False)
+    b = Segment.seal([c[32:] for c in cols], row_start=32, keep_columns=False)
+    assert a.columns is None
+    rows, _ = SegmentedIndex([a, b]).query(Eq(0, 1))
+    np.testing.assert_array_equal(rows, expected_rows(Eq(0, 1), cols))
+    with pytest.raises(ValueError, match="keep_columns"):
+        compact([a, b])
+
+
+# -- compaction --------------------------------------------------------------
+
+
+def test_compact_requires_adjacent_segments():
+    cols = make_table(64, [4], seed=6)
+    a = Segment.seal([c[:32] for c in cols], row_start=0)
+    b = Segment.seal([c[32:] for c in cols], row_start=64)  # gap: 32..64
+    with pytest.raises(ValueError, match="adjacent"):
+        compact([a, b])
+    with pytest.raises(ValueError, match="at least 2"):
+        compact([a])
+
+
+def test_compact_merges_and_resorts():
+    cols = make_table(512, [4, 9], seed=7)
+    spec = IndexSpec(k=1, row_order="lex")
+    w = IndexWriter(spec)
+    for i in range(0, 512, 128):
+        w.append([c[i : i + 128] for c in cols])
+        w.seal()
+    assert len(w.segments) == 4
+    merged = w.compact(span=(1, 3))
+    assert [s.row_start for s in w.segments] == [0, 128, 384]
+    assert merged.n_rows == 256 and merged.row_start == 128
+    for pred in PREDICATES:
+        rows, _ = w.index.query(pred)
+        np.testing.assert_array_equal(rows, expected_rows(pred, cols))
+    # full compaction reaches the monolithic sort exactly
+    w.compact(span=(0, 3))
+    mono = BitmapIndex.build(cols, spec)
+    assert w.size_words() == mono.size_words()
+
+
+def test_size_tiered_pick():
+    class Fake:
+        def __init__(self, words):
+            self._w = words
+
+        def size_words(self):
+            return self._w
+
+    segs = [Fake(100), Fake(10), Fake(12), Fake(11), Fake(13), Fake(500)]
+    assert size_tiered_pick(segs, fanout=4, ratio=4.0) == (1, 5)
+    assert size_tiered_pick(segs[:3], fanout=4) is None  # too few
+    assert size_tiered_pick([Fake(1), Fake(100), Fake(1), Fake(100)],
+                            fanout=2, ratio=2.0) is None
+    with pytest.raises(ValueError, match="fanout"):
+        size_tiered_pick(segs, fanout=1)
+
+
+def test_writer_compact_policy_end_to_end():
+    cols = make_table(640, [4, 6], seed=8)
+    w = IndexWriter(IndexSpec(k=1, row_order="lex"), seal_rows=128)
+    for i in range(0, 640, 64):
+        w.append([c[i : i + 64] for c in cols])
+    n_before = len(w.segments)
+    assert n_before >= 4
+    merged = w.compact(fanout=4, ratio=8.0)
+    assert merged is not None and len(w.segments) < n_before
+    rows, _ = w.index.query(Eq(0, 1))
+    np.testing.assert_array_equal(rows, expected_rows(Eq(0, 1), cols))
+
+
+# -- cache invalidation ------------------------------------------------------
+
+
+def test_result_cache_scopes():
+    rc = ResultCache(maxsize=4)
+    rc.put("k1", "v1", scope="a")
+    rc.put("k2", "v2", scope="a")
+    rc.put("k3", "v3", scope="b")
+    rc.put("k4", "v4")                                   # unscoped
+    assert rc.get("k1") == "v1"
+    assert rc.invalidate("a") == 2
+    assert rc.get("k1") is None and rc.get("k2") is None
+    assert rc.get("k3") == "v3" and rc.get("k4") == "v4"
+    assert rc.invalidate("a") == 0                       # idempotent
+    assert rc.stats()["invalidated"] == 2
+    # LRU eviction cleans the scope maps too
+    rc.clear()
+    for i in range(6):
+        rc.put(f"k{i}", i, scope=("s", i))
+    assert len(rc) == 4
+    assert ("s", 0) not in rc.scopes() and ("s", 5) in rc.scopes()
+    # re-putting a key under a new scope detaches the old one
+    rc.clear()
+    rc.put("k", 1, scope="old")
+    rc.put("k", 2, scope="new")
+    assert rc.invalidate("old") == 0
+    assert rc.get("k") == 2
+    assert rc.invalidate("new") == 1
+
+
+def test_compaction_evicts_only_retired_segments():
+    cols = make_table(384, [5, 9], seed=9)
+    w = IndexWriter(IndexSpec(k=1, row_order="lex"))
+    for i in range(0, 384, 128):
+        w.append([c[i : i + 128] for c in cols])
+        w.seal()
+    gens = w.index.generations()
+    assert len(gens) == 3
+    be = get_backend("numpy", cache_size=512)
+    be.result_cache.clear()
+    preds = [Eq(0, 1), And(Eq(0, 2), In(1, [1, 3]))]
+    w.index.query_many(preds, backend="numpy", cache_size=512)
+    scopes = set(be.result_cache.scopes())
+    assert {("segment", g) for g in gens} <= scopes
+    kept_gen = gens[2]
+    kept_entries = {k for k in scopes if k == ("segment", kept_gen)}
+    assert kept_entries
+    w.compact(span=(0, 2))                               # retire gens 0 and 1
+    remaining = set(be.result_cache.scopes())
+    assert ("segment", gens[0]) not in remaining
+    assert ("segment", gens[1]) not in remaining
+    assert ("segment", kept_gen) in remaining            # untouched: kept
+    # the kept segment's entries still HIT after compaction (preds[1] is an
+    # internal-node plan; bare-leaf k=1 Eq plans are never cached)
+    hits_before = be.result_cache.hits
+    rows, _ = w.index.query(preds[1], backend="numpy", cache_size=512)
+    assert be.result_cache.hits > hits_before
+    np.testing.assert_array_equal(rows, expected_rows(preds[1], cols))
+
+
+def test_invalidate_scope_reaches_registered_backends():
+    cols = make_table(96, [4], seed=10)
+    seg = Segment.seal(cols, IndexSpec(k=1, row_order="lex"))
+    si = SegmentedIndex([seg])
+    be = get_backend("numpy", cache_size=512)
+    be.result_cache.clear()
+    si.query(Not(Eq(0, 1)), backend="numpy", cache_size=512)
+    assert seg.cache_scope in be.result_cache.scopes()
+    assert invalidate_scope(seg.cache_scope) >= 1
+    assert seg.cache_scope not in be.result_cache.scopes()
+
+
+# -- segmented surface contract ----------------------------------------------
+
+
+def test_segmented_index_checks_contiguity_and_alignment():
+    cols = make_table(64, [4], seed=11)
+    a = Segment.seal([c[:32] for c in cols], row_start=0)
+    gap = Segment.seal([c[32:] for c in cols], row_start=64)
+    with pytest.raises(ValueError, match="contiguous"):
+        SegmentedIndex([a, gap]).query(Eq(0, 1))
+    ragged = Segment.seal([c[:20] for c in cols], row_start=0)
+    tail = Segment.seal([c[20:] for c in cols], row_start=20)
+    with pytest.raises(ValueError, match="word-aligned"):
+        SegmentedIndex([ragged, tail]).query(Eq(0, 1))
+    # a ragged FINAL segment is fine (nothing concatenates after it)
+    rows, _ = SegmentedIndex([a, Segment.seal([c[32:] for c in cols],
+                                              row_start=32)]).query(Eq(0, 1))
+    np.testing.assert_array_equal(rows, expected_rows(Eq(0, 1), cols))
+
+
+# -- acceptance: >= 3 appends + 1 compaction vs monolithic -------------------
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+@pytest.mark.parametrize("k", [1, 2])
+def test_acceptance_segmented_matches_monolithic(k, backend):
+    """>= 3 appends + 1 compaction answers every predicate shape
+    bit-identically to a monolithic build, and full compaction lands
+    within 10% of the monolithic compressed size."""
+    n = 4017                                             # not 32-aligned
+    cols = make_table(n, [6, 11], seed=12 + k)
+    spec = IndexSpec(k=k, row_order="grayfreq")
+    mono = BitmapIndex.build(cols, spec)
+    w = IndexWriter(spec)
+    for i in range(0, n, 1000):                          # 5 appends
+        w.append([c[i : i + 1000] for c in cols])
+        w.seal()
+    w.close()
+    assert len(w.segments) >= 4
+    w.compact(span=(0, len(w.segments)))                 # 1 compaction
+    si = w.index
+    for pred in PREDICATES:
+        got, _ = si.query(pred, backend=backend)
+        mono_rows, _ = mono.query(pred, backend=backend)
+        np.testing.assert_array_equal(got, np.sort(mono.row_perm[mono_rows]))
+    assert si.size_words() <= mono.size_words() * 1.10
+
+
+# -- hypothesis: random append/seal/compact schedules ------------------------
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.lists(st.integers(1, 120), min_size=3, max_size=6),
+       st.integers(0, 10**6))
+def test_random_schedules_match_monolithic_rebuild(chunks, seed):
+    """Any append/seal/compact schedule answers every Eq/In/Range/And/Or/
+    Not plan bit-for-bit identically to a monolithic rebuild over the same
+    rows, on both backends (sealed segments, carried tails, open buffers,
+    and compacted runs all included)."""
+    r = np.random.default_rng(seed)
+    cols = [np.concatenate([r.integers(0, c, size=sum(chunks))])
+            for c in (4, 7)]
+    spec = IndexSpec(k=1, row_order="lex")
+    w = IndexWriter(spec)
+    pos = 0
+    for size in chunks:
+        w.append([c[pos : pos + size] for c in cols])
+        pos += size
+        if r.integers(0, 2):                             # randomly seal
+            w.seal()
+    if len(w.segments) >= 2 and r.integers(0, 2):        # randomly compact
+        lo = int(r.integers(0, len(w.segments) - 1))
+        hi = int(r.integers(lo + 2, len(w.segments) + 1))
+        w.compact(span=(lo, hi))
+    si = w.index
+    mono = BitmapIndex.build(cols, spec)
+    preds = [Eq(0, 1), In(1, [0, 2, 5]), Range(1, 1, 4),
+             And(Eq(0, 2), Not(Eq(1, 3))), Or(Eq(0, 0), Eq(1, 6)),
+             Not(In(0, [0, 3]))]
+    for backend in ("numpy", "jax"):
+        for pred, (got, _) in zip(preds,
+                                  si.query_many(preds, backend=backend)):
+            mono_rows, _ = mono.query(pred, backend=backend)
+            np.testing.assert_array_equal(
+                got, np.sort(mono.row_perm[mono_rows]))

@@ -235,32 +235,39 @@ def test_indexspec_serialization_roundtrip():
         IndexSpec(k=0)
 
 
-# -- deprecation shims -------------------------------------------------------
+# -- legacy string-kwargs API: removed ---------------------------------------
 
 
-def test_legacy_kwargs_shim_matches_spec_build():
+def test_legacy_kwargs_are_removed_with_guidance():
+    """The PR-2 deprecation shims are gone: string kwargs raise TypeError
+    pointing at IndexSpec, for both build and index_size_report."""
+    cols = make_table(100, [6, 12], seed=9)
+    with pytest.raises(TypeError, match="IndexSpec"):
+        BitmapIndex.build(cols, k=2, row_order="grayfreq")
+    with pytest.raises(TypeError, match="IndexSpec"):
+        BitmapIndex.build(cols, row_order="lex")
+    with pytest.raises(TypeError, match="IndexSpec"):
+        index_size_report(cols, k=1, row_order="lex")
+    with pytest.raises(TypeError, match="unexpected keyword"):
+        BitmapIndex.build(cols, bogus_option=3)
+    assert not hasattr(IndexSpec, "from_legacy_kwargs")
+
+
+def test_build_is_seal_once_over_writer():
+    """BitmapIndex.build == one writer append + close (a single sealed
+    segment), and the index carries a cache scope for invalidation."""
+    from repro.core import IndexWriter
+
     cols = make_table(700, [6, 12], seed=9)
-    with pytest.warns(DeprecationWarning):
-        legacy = BitmapIndex.build(cols, k=2, row_order="grayfreq",
-                                   column_order=None)
-    spec = BitmapIndex.build(
-        cols, IndexSpec(k=2, row_order="grayfreq", column_order="given"))
-    assert legacy.size_words() == spec.size_words()
-    np.testing.assert_array_equal(legacy.row_perm, spec.row_perm)
-    np.testing.assert_array_equal(legacy.col_perm, spec.col_perm)
-    # private aliases still readable
-    np.testing.assert_array_equal(legacy._row_perm, legacy.row_perm)
-    np.testing.assert_array_equal(legacy._col_perm, legacy.col_perm)
-    with pytest.raises(TypeError, match="not both"):
-        BitmapIndex.build(cols, IndexSpec(), k=1)
-
-
-def test_index_size_report_legacy_and_spec_agree():
-    cols = make_table(600, [8, 20], seed=11)
-    with pytest.warns(DeprecationWarning):
-        rep_legacy = index_size_report(cols, k=1, row_order="lex")
-    rep_spec = index_size_report(cols, IndexSpec(k=1, row_order="lex"))
-    assert rep_legacy == rep_spec
+    spec = IndexSpec(k=2, row_order="grayfreq")
+    idx = BitmapIndex.build(cols, spec)
+    w = IndexWriter(spec)
+    w.append(cols)
+    seg = w.close()
+    assert w.segments == [seg] and seg.n_rows == 700
+    assert seg.index.size_words() == idx.size_words()
+    np.testing.assert_array_equal(seg.index.row_perm, idx.row_perm)
+    assert idx.cache_scope is not None and idx.cache_scope[0] == "segment"
 
 
 # -- metadata index ----------------------------------------------------------
@@ -271,22 +278,29 @@ def test_metadata_index_query_through_planner():
 
     r = np.random.default_rng(0)
     mi = MetadataIndex()
+    raw = {c: [] for c in MetadataIndex.COLS}
     for _ in range(3):
-        mi.add_batch({
+        batch = {
             "source": r.integers(0, 4, 256),
             "domain": r.integers(0, 8, 256),
             "quality_bin": r.integers(0, 16, 256),
             "length_bin": r.integers(0, 6, 256),
-        })
-    idx = mi.index
-    cols = {c: np.concatenate(mi._rows[c])[idx.row_perm] for c in mi.COLS}
+        }
+        for c, v in batch.items():
+            raw[c].append(v)
+        mi.add_batch(batch)
+    assert mi.index.n_segments >= 3      # one sealed segment per batch
+    assert mi.n_rows == 768
+    cols = {c: np.concatenate(raw[c]) for c in mi.COLS}
 
-    rows, scanned = mi.query(domain=3, quality_bin=8)
+    # segmented queries answer in original ingest row space
+    rows, scanned = mi.query(where={"domain": 3, "quality_bin": 8})
     expect = np.flatnonzero((cols["domain"] == 3) & (cols["quality_bin"] == 8))
     np.testing.assert_array_equal(rows, expect)
     assert scanned >= 1
 
-    rows_jax, _ = mi.query(_backend="jax", domain=3, quality_bin=8)
+    rows_jax, _ = mi.query(where={"domain": 3, "quality_bin": 8},
+                           backend="jax")
     np.testing.assert_array_equal(rows_jax, expect)
 
     # quality_bin >= 8 as a Range predicate by column name
@@ -296,6 +310,38 @@ def test_metadata_index_query_through_planner():
 
     empty, scanned = mi.query()
     assert len(empty) == 0 and scanned == 0
+
+    with pytest.raises(ValueError, match="unknown columns"):
+        mi.query(where={"bogus": 1})
+
+    # compaction keeps answers identical and shrinks the segment count
+    before = mi.index.n_segments
+    mi.compact(span=(0, before))
+    assert mi.index.n_segments < before
+    rows2, _ = mi.query(where={"domain": 3, "quality_bin": 8})
+    np.testing.assert_array_equal(
+        rows2,
+        np.flatnonzero((cols["domain"] == 3) & (cols["quality_bin"] == 8)))
+
+
+def test_metadata_index_query_legacy_shims():
+    """One-release shims: conditions as bare kwargs and _backend= still
+    work, with a DeprecationWarning."""
+    from repro.data.metadata_index import MetadataIndex
+
+    r = np.random.default_rng(3)
+    mi = MetadataIndex()
+    mi.add_batch({c: r.integers(0, 4, 96) for c in MetadataIndex.COLS})
+    expect, _ = mi.query(where={"domain": 2})
+    with pytest.warns(DeprecationWarning, match="where"):
+        rows, _ = mi.query(domain=2)
+    np.testing.assert_array_equal(rows, expect)
+    with pytest.warns(DeprecationWarning, match="backend"):
+        rows, _ = mi.query(where={"domain": 2}, _backend="numpy")
+    np.testing.assert_array_equal(rows, expect)
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(ValueError, match="unknown columns"):
+            mi.query(not_a_column=1)
 
 
 # -- serving plane -----------------------------------------------------------
@@ -314,6 +360,15 @@ def test_pack_batches_query_plane():
     packed_jax = pack_batches(lengths, 8, histogram_aware=True, backend="jax")
     for a, b in zip(packed, packed_jax):
         np.testing.assert_array_equal(a, b)
+    # streaming admission (writer lifecycle) packs identically to rebuild
+    packed_seg = pack_batches(lengths, 8, histogram_aware=True,
+                              admission="segmented")
+    for a, b in zip(packed, packed_seg):
+        np.testing.assert_array_equal(a, b)
+    with pytest.raises(ValueError, match="admission"):
+        pack_batches(lengths, 8, admission="bogus")
+    with pytest.raises(ValueError, match="pick one"):
+        pack_batches(lengths, 8, admission="segmented", query_fanout=2)
 
 
 # -- kernels -----------------------------------------------------------------
