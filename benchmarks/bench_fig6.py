@@ -21,6 +21,14 @@ The segmented scenario measures the append/seal/compact lifecycle
 plus the cache-invalidation contract — after an append (new segment) or a
 compaction, only touched segments' cached results miss; the steady-state
 and post-mutation hit rates are reported and validated.
+
+The range-sweep scenario measures the pluggable encoding layer
+(``repro.core.encodings``): ``Range`` cost across range width x column
+cardinality x encoding (equality k-of-N vs bit-sliced planes vs
+histogram-equalized bins), on both backends, with per-plan merge counts —
+the equality encoding's OR fan-in grows with width while bit-sliced stays
+at <= 2 * ceil(log2 card) merges; every cell validates bit-identical rows
+against the equality encoding.
 """
 
 from __future__ import annotations
@@ -30,7 +38,8 @@ import time
 import numpy as np
 
 from repro.core import And, BitmapIndex, Eq, In, IndexSpec, IndexWriter
-from repro.core.query import NumpyBackend, compile_plan, get_backend
+from repro.core.query import (NumpyBackend, compile_plan, count_merges,
+                              get_backend)
 from repro.data.tables import make_census_like
 
 
@@ -97,6 +106,56 @@ def run(n=60_000, queries=40, quick=False):
                             "agrees_with_numpy": agrees})
     out.extend(run_cascaded(cols, queries=queries))
     out.extend(run_segmented(cols, queries=queries))
+    out.extend(run_range_sweep(n=n // 3, queries=queries))
+    return out
+
+
+def run_range_sweep(n=20_000, queries=24):
+    """Encoding scenario: Range cost vs (width x cardinality x encoding),
+    both backends.  Every (encoding, backend) cell must return row ids
+    bit-identical to the equality encoding."""
+    from repro.core import Range
+
+    rng = np.random.default_rng(11)
+    out = []
+    for card in (64, 256, 1024):
+        col = rng.integers(0, card, size=n)
+        indexes = {
+            enc: BitmapIndex.build([col], IndexSpec(
+                k=1, row_order="lex", column_order="given", encoding=enc))
+            for enc in ("equality", "bitsliced", "binned")
+        }
+        for wname, frac in (("narrow", 0.1), ("wide", 0.5)):
+            width = max(1, int(card * frac))
+            los = rng.integers(0, card - width + 1, size=queries)
+            preds = [Range(0, int(lo), int(lo) + width - 1) for lo in los]
+            reference = None  # equality runs first: the agreement oracle
+            for enc, idx in indexes.items():
+                merges = float(np.mean([count_merges(
+                    compile_plan(idx, p).root) for p in preds]))
+                np_results, best = _best_of(
+                    lambda: idx.query_many(preds, backend="numpy"))
+                rows = [np.sort(idx.row_perm[r]) for r, _ in np_results]
+                if reference is None:
+                    reference = rows
+                agrees = all(np.array_equal(a, b)
+                             for a, b in zip(reference, rows))
+                out.append({"scenario": "range-sweep", "cardinality": card,
+                            "encoding": enc, "width": wname,
+                            "backend": "numpy", "merges": merges,
+                            "us_per_query": best / queries * 1e6,
+                            "agrees_with_equality": agrees})
+                idx.query_many(preds, backend="jax")   # jit warmup untimed
+                jax_results, best = _best_of(
+                    lambda: idx.query_many(preds, backend="jax"))
+                rows_j = [np.sort(idx.row_perm[r]) for r, _ in jax_results]
+                agrees = all(np.array_equal(a, b)
+                             for a, b in zip(reference, rows_j))
+                out.append({"scenario": "range-sweep", "cardinality": card,
+                            "encoding": enc, "width": wname,
+                            "backend": "jax", "merges": merges,
+                            "us_per_query": best / queries * 1e6,
+                            "agrees_with_equality": agrees})
     return out
 
 
@@ -269,7 +328,8 @@ def validate(rows):
                   f"({s2['words_scanned']:.0f} vs {s1['words_scanned']:.0f}): "
                   f"{'PASS' if ok else 'FAIL'}")
     # numpy and jax backends return identical row ids everywhere
-    jax_rows = [r for r in rows if r.get("backend") == "jax"]
+    jax_rows = [r for r in rows
+                if r.get("backend") == "jax" and "agrees_with_numpy" in r]
     ok = bool(jax_rows) and all(r["agrees_with_numpy"] for r in jax_rows)
     checks.append(f"jax backend row ids match numpy on "
                   f"{len(jax_rows)} configs: {'PASS' if ok else 'FAIL'}")
@@ -323,4 +383,31 @@ def validate(rows):
         f"compaction evicts only touched entries "
         f"({pc['entries_evicted']}/{pc['entries_before']}, post-compact "
         f"hit rate {pc['cache_hit_rate']:.0%}): {'PASS' if ok else 'FAIL'}")
+    # range-sweep: every encoding/backend cell answers bit-identically to
+    # the equality encoding
+    sweep = [r for r in rows if r.get("scenario") == "range-sweep"]
+    ok = bool(sweep) and all(r["agrees_with_equality"] for r in sweep)
+    checks.append(f"range-sweep: rows bit-identical to equality encoding "
+                  f"across {len(sweep)} cells: {'PASS' if ok else 'FAIL'}")
+
+    def sweep_cell(card, enc, width, backend="numpy"):
+        return [r for r in sweep if r["cardinality"] == card
+                and r["encoding"] == enc and r["width"] == width
+                and r["backend"] == backend][0]
+
+    # bit-sliced ranges stay within the 2*ceil(log2 card) merge budget
+    bs = sweep_cell(1024, "bitsliced", "wide")
+    checks.append(
+        f"range-sweep: card-1024 bit-sliced wide range merges "
+        f"{bs['merges']:.0f} <= 20 (vs "
+        f"{sweep_cell(1024, 'equality', 'wide')['merges']:.0f} equality): "
+        f"{'PASS' if bs['merges'] <= 20 else 'FAIL'}")
+    # acceptance: bit-sliced beats equality on wide ranges at card >= 256
+    for card in (256, 1024):
+        e = sweep_cell(card, "equality", "wide")["us_per_query"]
+        b = sweep_cell(card, "bitsliced", "wide")["us_per_query"]
+        checks.append(
+            f"range-sweep: card-{card} wide-range bit-sliced "
+            f"{b:.0f}us < equality {e:.0f}us: "
+            f"{'PASS' if b < e else 'FAIL'}")
     return checks

@@ -47,7 +47,8 @@ import os
 import sys
 
 VOLATILE = {"us_per_query", "words_scanned", "cache_hit_rate",
-            "agrees_with_numpy", "agrees_with_dense"}
+            "agrees_with_numpy", "agrees_with_dense",
+            "agrees_with_equality"}
 
 
 def row_identity(suite: str, row: dict):

@@ -5,8 +5,8 @@ seal / compact lifecycle) -> Segment / SegmentedIndex -> predicate algebra
 (query.Eq/In/Range/And/Or/Not) -> pluggable backends.  BitmapIndex.build is
 the seal-once convenience over the writer."""
 
-from . import (column_order, encoding, ewah, ewah_stream, histogram,
-               index_size, query, sorting, strategies)
+from . import (column_order, encoding, encodings, ewah, ewah_stream,
+               histogram, index_size, query, sorting, strategies)
 from .bitmap_index import BitmapIndex, assign_codes, index_size_report
 from .ewah_stream import EwahStream
 from .lifecycle import IndexWriter, compact, size_tiered_pick
@@ -34,6 +34,7 @@ __all__ = [
     "Range",
     "column_order",
     "encoding",
+    "encodings",
     "ewah",
     "ewah_stream",
     "histogram",

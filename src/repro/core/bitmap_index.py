@@ -30,12 +30,11 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from . import ewah
-from .encoding import choose_N, clamp_k
+from .encodings import (ColumnEncoding, assign_codes,  # noqa: F401 (re-export)
+                        build_encoding, _materialize_streams)
 from .histogram import column_histogram
-from .index_size import column_bitmap_sizes
 from .query import compile_plan, get_backend
-from .strategies import IndexSpec, get_strategy
+from .strategies import IndexSpec
 
 _LEGACY_KWARGS = ("k", "row_order", "code_order", "value_policy",
                   "column_order")
@@ -53,35 +52,42 @@ def _reject_legacy(kwargs: dict) -> None:
         raise TypeError(f"unexpected keyword arguments: {sorted(kwargs)}")
 
 
-def assign_codes(
-    n_values: int, k: int, code_order: str = "gray", value_policy: str = "alpha",
-    hist: np.ndarray | None = None,
-) -> tuple[np.ndarray, int, int]:
-    """Build the (n_values, k) bitmap-position code table for one column.
-
-    code_order / value_policy are registry strategy names (built-ins:
-    'gray'/'lex' enumeration, 'alpha'/'freq' value policy); unknown names
-    raise ValueError listing what is registered.
-    Returns (codes, N, k_effective).
-    """
-    k_eff = clamp_k(n_values, k)
-    N = choose_N(n_values, k_eff)
-    enum = get_strategy("code_order", code_order)
-    policy = get_strategy("value_policy", value_policy)
-    ordered_codes = enum(N, k_eff, n_values)
-    order = np.arange(n_values) if hist is None else np.asarray(policy(hist))
-    codes = np.empty((n_values, k_eff), dtype=np.int32)
-    codes[order] = ordered_codes
-    return codes, N, k_eff
-
-
 @dataclass
 class ColumnIndex:
-    codes: np.ndarray          # (n_values, k) bitmap positions
-    N: int                     # bitmaps in this column
-    k: int
-    streams: list | None = None    # per-bitmap EWAH uint32 arrays (dense path)
-    sizes: np.ndarray | None = None
+    """One indexed column: a :class:`~repro.core.encodings.ColumnEncoding`
+    (value bitmaps / slice planes / bins + its predicate compiler) behind
+    the attribute surface the rest of the stack reads.
+
+    ``codes`` and ``k`` exist only on the equality encoding (the k-of-N
+    code table); other encodings raise AttributeError for them.
+    """
+
+    encoding: ColumnEncoding
+
+    @property
+    def card(self) -> int:
+        return self.encoding.card
+
+    @property
+    def N(self) -> int:
+        """Bitmap/stream count (value bitmaps, slice planes, or bins)."""
+        return self.encoding.n_streams
+
+    @property
+    def streams(self):
+        return self.encoding.streams
+
+    @property
+    def sizes(self) -> np.ndarray:
+        return self.encoding.sizes
+
+    @property
+    def codes(self) -> np.ndarray:
+        return self.encoding.codes  # equality encoding only
+
+    @property
+    def k(self) -> int:
+        return self.encoding.k      # equality encoding only
 
 
 @dataclass
@@ -184,6 +190,11 @@ class BitmapIndex:
     def original_column(self, reordered_idx: int) -> int:
         return int(self.col_perm[reordered_idx])
 
+    def encodings(self) -> tuple:
+        """Per-column encoding kinds, in reordered column order (what the
+        spec's encoding chooser picked per histogram)."""
+        return tuple(c.encoding.kind for c in self.columns)
+
 
 def _construct(table_cols: list, spec: IndexSpec | None,
                materialize: bool = True) -> "BitmapIndex":
@@ -191,8 +202,10 @@ def _construct(table_cols: list, spec: IndexSpec | None,
 
     This is what :meth:`IndexWriter.seal` runs per segment (and what
     ``BitmapIndex.build`` reaches through its one-segment writer): column
-    histograms -> column permutation -> row sort -> per-column k-of-N code
-    assignment -> EWAH streams.
+    histograms -> column permutation -> row sort -> per-column encoding
+    choice (the spec's ``encoding`` strategy reads each histogram) ->
+    per-encoding EWAH streams (k-of-N value bitmaps, bit-slice planes, or
+    histogram-equalized bins; see :mod:`repro.core.encodings`).
     """
     spec = (spec or IndexSpec()).validate()
     strategies = spec.strategies()
@@ -209,47 +222,20 @@ def _construct(table_cols: list, spec: IndexSpec | None,
     cards = [cards[i] for i in perm_cols]
 
     # histograms are row-permutation invariant: compute once, share with
-    # the row-order strategy and the value policy
+    # the row-order strategy, the value policy, and the encoding chooser
     hists = [column_histogram(c, card) for c, card in zip(cols, cards)]
     row_perm = strategies["row_order"](cols, hists)
     cols = [c[row_perm] for c in cols]
 
     idx = BitmapIndex(n_rows=n, spec=spec, row_perm=np.asarray(row_perm),
                       col_perm=perm_cols)
-    value_policy_name = spec.resolved_value_policy()
+    chooser = strategies["encoding"]
     for col, card, hist in zip(cols, cards, hists):
-        codes, N, k_eff = assign_codes(
-            card, spec.k, spec.code_order, value_policy_name, hist)
-        ci = ColumnIndex(codes=codes, N=N, k=k_eff)
-        ci.sizes, _, _ = column_bitmap_sizes(col, codes, N)
-        if materialize:
-            ci.streams = _materialize_streams(col, codes, N, n)
-        idx.columns.append(ci)
+        kind = chooser(hist, spec.k)
+        enc = build_encoding(kind, col, card, hist, spec,
+                             materialize=materialize)
+        idx.columns.append(ColumnIndex(encoding=enc))
     return idx
-
-
-def _materialize_streams(col, codes, N, n_rows):
-    """Per-bitmap compressed streams in O(n*k + sum of stream sizes)."""
-    order = np.argsort(col, kind="stable")
-    sorted_vals = col[order]
-    # row positions per value, grouped
-    boundaries = np.flatnonzero(np.diff(sorted_vals)) + 1
-    groups = np.split(order, boundaries)
-    vals = sorted_vals[np.concatenate(([0], boundaries))] if len(col) else []
-    pos_per_value = {int(v): g for v, g in zip(vals, groups)}
-    per_bitmap_positions = [[] for _ in range(N)]
-    for v, pos in pos_per_value.items():
-        for b in codes[v]:
-            per_bitmap_positions[int(b)].append(pos)
-    streams = []
-    for plist in per_bitmap_positions:
-        if plist:
-            pos = np.sort(np.concatenate(plist))
-            words = ewah.positions_to_words(pos, n_rows)
-        else:
-            words = np.zeros((n_rows + 31) // 32, dtype=np.uint32)
-        streams.append(ewah.compress(words))
-    return streams
 
 
 def index_size_report(table_cols, spec: IndexSpec | None = None,
@@ -261,6 +247,7 @@ def index_size_report(table_cols, spec: IndexSpec | None = None,
         "total_words": idx.size_words(),
         "per_column_words": idx.per_column_words(),
         "column_order": [int(i) for i in idx.col_perm],
-        "k_effective": [c.k for c in idx.columns],
+        "encodings": list(idx.encodings()),
+        "k_effective": [getattr(c.encoding, "k", None) for c in idx.columns],
         "bitmaps": [c.N for c in idx.columns],
     }

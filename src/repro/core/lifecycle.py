@@ -19,7 +19,10 @@ LSM-style:
   rejects further appends;
 * :func:`compact` merges adjacent segments into one re-sorted segment
   (rows re-sort globally across the merged range, recovering the
-  single-sort compression the per-segment splits gave up);
+  single-sort compression the per-segment splits gave up); the full
+  pipeline re-runs, including the spec's per-column encoding chooser over
+  the *merged* histograms — compacting mixed-encoding segments is just a
+  re-choice, since per-bitmap/per-plane data never crosses segments;
   ``writer.compact()`` applies the size-tiered policy, swaps the merged
   segment in, and evicts exactly the retired segments' result-cache
   entries (:func:`repro.core.query.invalidate_scope`).

@@ -156,6 +156,11 @@ class Not(Predicate):
 #   ("leaf", i)                 -> plan.streams[i]
 #   ("not", child)              -> complement (XOR with all-ones)
 #   ("and"|"or", (children...)) -> fan-in, children cost-ordered
+#   ("fold", ops, (children...))-> sequential left fold with a per-step op
+#                                  (ops[i] combines the running result with
+#                                  children[i + 1]); child order is
+#                                  SEMANTIC — the bit-sliced comparison
+#                                  circuit — so it is never cost-reordered
 
 
 @dataclass
@@ -195,7 +200,24 @@ def _sig(node):
         return ("L",)
     if kind == "not":
         return ("not", _sig(node[1]))
+    if kind == "fold":
+        return ("fold", node[1], tuple(_sig(c) for c in node[2]))
     return (kind, tuple(_sig(c) for c in node[1]))
+
+
+def count_merges(node) -> int:
+    """Binary stream merges (including ``not`` marker flips) a plan node
+    executes — the machine-independent cost the encoding benchmarks and
+    the bit-sliced merge-bound acceptance tests gate on.  Walks every node
+    kind, so it is the one place to extend when a new kind lands."""
+    kind = node[0]
+    if kind == "leaf":
+        return 0
+    if kind == "not":
+        return 1 + count_merges(node[1])
+    if kind == "fold":
+        return len(node[2]) - 1 + sum(count_merges(c) for c in node[2])
+    return len(node[1]) - 1 + sum(count_merges(c) for c in node[1])
 
 
 @lru_cache(maxsize=32)
@@ -210,6 +232,29 @@ def _zero_stream(n_rows: int) -> np.ndarray:
     return ewah.compress(np.zeros(n_words, dtype=np.uint32))
 
 
+class PlanContext:
+    """What a :class:`~repro.core.encodings.ColumnEncoding` compiles
+    against: leaf registration plus the constant-result streams."""
+
+    __slots__ = ("streams", "n_rows")
+
+    def __init__(self, n_rows: int):
+        self.streams: list = []
+        self.n_rows = n_rows
+
+    def leaf(self, stream) -> tuple:
+        self.streams.append(stream)
+        return ("leaf", len(self.streams) - 1)
+
+    def zero(self) -> tuple:
+        """Constant-empty leaf (out-of-domain value, empty range)."""
+        return self.leaf(_zero_stream(self.n_rows))
+
+    def ones(self) -> tuple:
+        """Constant-full leaf (whole-domain range)."""
+        return self.leaf(_ones_stream(self.n_rows))
+
+
 def compile_plan(index, pred: Predicate, names=None) -> Plan:
     """Compile ``pred`` against a materialized ``BitmapIndex``.
 
@@ -217,17 +262,20 @@ def compile_plan(index, pred: Predicate, names=None) -> Plan:
     ``names`` optionally maps string column names to those positions.
     Returned row ids live in the index's reordered row space — map back with
     ``index.row_perm[row_ids]``.
+
+    The planner owns the generic steps — name resolution, domain clamping
+    (out-of-domain ``Eq``/empty ``Range`` compile to a constant-empty leaf,
+    whole-domain to constant-full), fan-in flattening and cost ordering —
+    and delegates ``Eq``/``In``/``Range`` on each column to that column's
+    :class:`~repro.core.encodings.ColumnEncoding` (equality k-of-N fan-ins,
+    bit-sliced comparison folds, or binned coarse-plus-refinement).
     """
     col_perm = np.asarray(index.col_perm)
     inv = np.empty(len(col_perm), dtype=np.int64)
     inv[col_perm] = np.arange(len(col_perm))
-    streams: list = []
+    ctx = PlanContext(index.n_rows)
 
-    def leaf(stream) -> tuple:
-        streams.append(stream)
-        return ("leaf", len(streams) - 1)
-
-    def resolve(col) -> int:
+    def resolve(col):
         if isinstance(col, str):
             if names is None:
                 raise ValueError(
@@ -242,50 +290,35 @@ def compile_plan(index, pred: Predicate, names=None) -> Plan:
         col = int(col)
         if not 0 <= col < len(col_perm):
             raise ValueError(f"column {col} out of range (0..{len(col_perm) - 1})")
-        return int(inv[col])
-
-    def eq_node(pos: int, value: int) -> tuple:
-        ci = index.columns[pos]
+        ci = index.columns[int(inv[col])]
         if ci.streams is None:
             raise ValueError("index built with materialize=False cannot be queried")
-        if not 0 <= value < ci.codes.shape[0]:
-            return leaf(_zero_stream(index.n_rows))  # out-of-domain: no rows
-        nodes = tuple(leaf(ci.streams[int(b)]) for b in ci.codes[value])
-        return nodes[0] if len(nodes) == 1 else ("and", nodes)
-
-    def values_node(pos: int, values) -> tuple:
-        card = index.columns[pos].codes.shape[0]
-        values = sorted({v for v in values if 0 <= v < card})
-        if not values:
-            return leaf(_zero_stream(index.n_rows))
-        nodes = tuple(eq_node(pos, v) for v in values)
-        return nodes[0] if len(nodes) == 1 else ("or", nodes)
+        return ci.encoding
 
     def build(p) -> tuple:
         if isinstance(p, Eq):
-            return eq_node(resolve(p.col), p.value)
+            enc = resolve(p.col)
+            if not 0 <= p.value < enc.card:
+                return ctx.zero()  # out-of-domain: no rows
+            return enc.compile_eq(ctx, p.value)
         if isinstance(p, In):
-            return values_node(resolve(p.col), p.values)
+            enc = resolve(p.col)
+            values = sorted({v for v in p.values if 0 <= v < enc.card})
+            if not values:
+                return ctx.zero()
+            if len(values) == enc.card:
+                return ctx.ones()  # every row holds some in-domain value
+            return enc.compile_in(ctx, values)
         if isinstance(p, Range):
-            # clamp to the column domain before materializing the range —
+            # clamp to the column domain before any value materializes —
             # Range(col, 0, 10**9) must not iterate a billion values
-            pos = resolve(p.col)
-            card = index.columns[pos].codes.shape[0]
-            lo, hi = max(p.lo, 0), min(p.hi, card - 1)
+            enc = resolve(p.col)
+            lo, hi = max(p.lo, 0), min(p.hi, enc.card - 1)
             if lo > hi:
-                return leaf(_zero_stream(index.n_rows))
-            width = hi - lo + 1
-            # a range spanning more than half the domain compiles through
-            # the compressed-domain complement: Not(In(complement)) halves
-            # the OR fan-in (rows hold exactly one dense value id, so the
-            # complement-In is exact), and Not is a marker-type flip — same
-            # compressed size as its child, no densification
-            if width > card - width:
-                if width == card:
-                    return leaf(_ones_stream(index.n_rows))
-                return ("not",
-                        values_node(pos, [*range(0, lo), *range(hi + 1, card)]))
-            return values_node(pos, range(lo, hi + 1))
+                return ctx.zero()
+            if lo == 0 and hi == enc.card - 1:
+                return ctx.ones()
+            return enc.compile_range(ctx, lo, hi)
         if isinstance(p, And):
             return _fanin("and", [build(c) for c in p.children])
         if isinstance(p, Or):
@@ -294,9 +327,9 @@ def compile_plan(index, pred: Predicate, names=None) -> Plan:
             return ("not", build(p.child))
         raise TypeError(f"not a Predicate: {p!r}")
 
-    plan = Plan(streams=streams, root=build(pred), n_rows=index.n_rows,
+    plan = Plan(streams=ctx.streams, root=build(pred), n_rows=index.n_rows,
                 scope=getattr(index, "cache_scope", None))
-    plan.root = _cost_order(plan.root, streams, plan.n_words)
+    plan.root = _cost_order(plan.root, plan.streams, plan.n_words)
     _renumber_leaves(plan)
     return plan
 
@@ -370,6 +403,8 @@ def _renumber_leaves(plan: Plan) -> None:
             return ("leaf", len(order) - 1)
         if nd[0] == "not":
             return ("not", rec(nd[1]))
+        if nd[0] == "fold":
+            return ("fold", nd[1], tuple(rec(c) for c in nd[2]))
         return (nd[0], tuple(rec(c) for c in nd[1]))
 
     plan.root = rec(plan.root)
@@ -388,7 +423,10 @@ def _fanin(op: str, children: list) -> tuple:
 
 
 def _cost_order(node, streams, n_words: int):
-    """Order every fan-in smallest-estimated-stream-first (stable)."""
+    """Order every and/or fan-in smallest-estimated-stream-first (stable).
+
+    ``fold`` children are a comparison circuit whose order carries the bit
+    position — they are recursed into but never reordered."""
 
     def est(nd) -> int:
         if nd[0] == "leaf":
@@ -397,6 +435,8 @@ def _cost_order(node, streams, n_words: int):
             # marker-type flipping preserves run structure: the complement
             # has exactly the child's compressed size
             return est(nd[1]) + 1
+        if nd[0] == "fold":
+            return sum(est(c) for c in nd[2])
         return sum(est(c) for c in nd[1])
 
     def rec(nd):
@@ -404,6 +444,8 @@ def _cost_order(node, streams, n_words: int):
             return nd
         if nd[0] == "not":
             return ("not", rec(nd[1]))
+        if nd[0] == "fold":
+            return ("fold", nd[1], tuple(rec(c) for c in nd[2]))
         children = sorted((rec(c) for c in nd[1]), key=est)
         return (nd[0], tuple(children))
 
@@ -454,6 +496,8 @@ def _node_key(node, digests, n_rows: int):
             return ("L", digests[nd[1]])
         if nd[0] == "not":
             return ("not", rec(nd[1]))
+        if nd[0] == "fold":
+            return ("fold", nd[1], tuple(rec(c) for c in nd[2]))
         return (nd[0], tuple(rec(c) for c in nd[1]))
 
     return (n_rows, rec(node))
@@ -655,6 +699,17 @@ class NumpyBackend:
             s, scanned = eval_child(node[1])
             r, sc = ewah_stream.logical_not(s, plan.n_words)
             return r, scanned + sc
+        if node[0] == "fold":
+            # the slice-plane comparison circuit: sequential left fold with
+            # a per-step op — child order is the bit order, never reordered
+            _, fops, children = node
+            parts = [eval_child(c) for c in children]
+            scanned = sum(sc for _, sc in parts)
+            r = parts[0][0]
+            for op, (s, _) in zip(fops, parts[1:]):
+                r, sc = ewah_stream.logical_op(r, s, op)
+                scanned += sc
+            return r, scanned
         op, children = node
         parts = [eval_child(c) for c in children]
         scanned = sum(sc for _, sc in parts)
@@ -804,6 +859,15 @@ class JaxBackend:
                     return dec[:, node[1]]
                 if node[0] == "not":
                     return ev(node[1]) ^ jnp.uint32(0xFFFFFFFF)
+                if node[0] == "fold":
+                    # all planes of a slice comparison dispatch in ONE
+                    # padded Pallas call (kernels.ops.slice_fold)
+                    _, fops, children = node
+                    parts = jnp.stack([ev(c) for c in children])  # (p, B, W)
+                    folded = kops.slice_fold(
+                        parts.reshape(parts.shape[0], -1), fops,
+                        use_kernel=use_kernel, interpret=interpret)
+                    return folded.reshape(parts.shape[1:])
                 op, children = node
                 parts = jnp.stack([ev(c) for c in children])  # (p, B, W)
                 folded = kops.wordops_fold(

@@ -20,7 +20,16 @@ open (not yet sealed) row buffer — into one query surface:
   appends are queryable before any seal;
 * row ids come back in **original ingest order** (each segment's local ids
   map through its ``row_perm`` plus row offset) — there is no global
-  reordered space across independently sorted segments.
+  reordered space across independently sorted segments;
+* encodings are **per segment, per column**: each seal re-runs the spec's
+  encoding chooser on that segment's own histograms, so an ``'auto'`` spec
+  can give the same column different encodings in different segments
+  (mixed-encoding segments).  Nothing downstream cares — predicates
+  compile per segment against whatever encoding that segment has, and the
+  per-plane/per-bitmap representations never cross a segment boundary:
+  only *result* streams concatenate.  Compaction concatenates the retired
+  segments' raw columns and re-runs the whole pipeline, so the merged
+  segment re-chooses its encodings from the merged histograms.
 
 Each segment carries a monotonically increasing ``generation``; its index's
 ``cache_scope`` tags every compressed result the backends cache, so
@@ -132,6 +141,12 @@ class SegmentedIndex:
 
     def generations(self) -> tuple:
         return tuple(s.generation for s in self._segments)
+
+    def encodings(self) -> tuple:
+        """Per-segment tuple of per-column encoding kinds (the chooser runs
+        on each segment's own histograms, so these may differ — mixed-
+        encoding segments are a supported steady state)."""
+        return tuple(s.index.encodings() for s in self._segments)
 
     def _buffer(self):
         """(columns, row_start, n_rows) of the open buffer, or None."""

@@ -25,7 +25,17 @@ row_order   fn(columns, hists=None)                        (n,) row permutation
 code_order  fn(N, k, count)                                (count, k) bit codes
 value_policy fn(hist)                                      order[rank] = value
 column_order fn(cardinalities, k)                          column permutation
+encoding    fn(hist, k)                                    encoding kind name
 ========== ============================================== =====================
+
+The ``encoding`` axis is the *chooser*: called once per column with that
+column's attribute-value histogram, it returns the name of a concrete
+:mod:`repro.core.encodings` kind ('equality', 'bitsliced',
+'bitsliced-gray', 'binned').  The built-in choosers are the four constant
+functions plus ``'auto'``, the histogram-aware policy (high cardinality ->
+bit-sliced, skewed low-cardinality -> equality, mid -> binned); because the
+choice is per column (and, under the segment lifecycle, per segment), one
+index can mix encodings.
 """
 
 from __future__ import annotations
@@ -39,7 +49,8 @@ from . import encoding as _encoding
 from . import histogram as _histogram
 from . import sorting as _sorting
 
-KINDS = ("row_order", "code_order", "value_policy", "column_order")
+KINDS = ("row_order", "code_order", "value_policy", "column_order",
+         "encoding")
 
 _REGISTRY: dict[str, dict[str, object]] = {kind: {} for kind in KINDS}
 
@@ -70,6 +81,10 @@ def register_value_policy(name: str):
 
 def register_column_order(name: str):
     return register_strategy("column_order", name)
+
+
+def register_encoding(name: str):
+    return register_strategy("encoding", name)
 
 
 def unregister_strategy(kind: str, name: str) -> None:
@@ -142,6 +157,35 @@ def _cols_given(cardinalities, k):
     return np.arange(len(cardinalities))
 
 
+# -- encoding choosers (see repro.core.encodings) ---------------------------
+
+for _kind in ("equality", "bitsliced", "bitsliced-gray", "binned"):
+    register_strategy("encoding", _kind)(
+        lambda hist, k, _kind=_kind: _kind)
+
+
+@register_encoding("auto")
+def _encoding_auto(hist, k):
+    """Histogram-aware per-column encoding choice.
+
+    * high cardinality (>= 256 values): bit-sliced — any range costs
+      O(log card) merges where equality pays O(card) ORs;
+    * skewed columns (top value holds >= half the rows) and small domains
+      (< 32 values): equality — few bitmaps, each long-run compressible,
+      and narrow fan-ins stay cheap;
+    * mid-cardinality, flat-ish distributions: binned — histogram-equalized
+      bins keep range fan-ins ~sqrt(card) with an exact refinement leaf.
+    """
+    hist = np.asarray(hist, dtype=np.int64)
+    card = len(hist)
+    n = int(hist.sum())
+    if card >= 256:
+        return "bitsliced"
+    if card < 32 or (n and int(hist.max()) * 2 >= n):
+        return "equality"
+    return "binned"
+
+
 # ---------------------------------------------------------------------------
 # IndexSpec
 # ---------------------------------------------------------------------------
@@ -157,6 +201,12 @@ class IndexSpec:
     column_order may be a strategy name ('heuristic', 'given') or an explicit
     permutation of column indices (stored as a tuple).  ``None`` normalizes
     to 'given' (legacy spelling for "index columns in table order").
+
+    encoding names the per-column encoding *chooser* ('equality' — the
+    paper's k-of-N value bitmaps and the default — 'bitsliced',
+    'bitsliced-gray', 'binned', or 'auto', the histogram-aware policy); the
+    chooser runs once per column with that column's histogram, so 'auto'
+    specs can mix encodings within one index.
     """
 
     k: int = 1
@@ -164,6 +214,7 @@ class IndexSpec:
     code_order: str = "gray"
     value_policy: str | None = None
     column_order: str | tuple | None = "heuristic"
+    encoding: str = "equality"
 
     def __post_init__(self):
         co = self.column_order
@@ -195,6 +246,7 @@ class IndexSpec:
                 if isinstance(self.column_order, str)
                 else None
             ),
+            "encoding": get_strategy("encoding", self.encoding),
         }
 
     def validate(self) -> "IndexSpec":

@@ -27,8 +27,6 @@ answer identically.
 
 from __future__ import annotations
 
-import warnings
-
 import numpy as np
 
 from ..core import And, Eq, IndexSpec, IndexWriter
@@ -38,9 +36,11 @@ class MetadataIndex:
     COLS = ("source", "domain", "quality_bin", "length_bin")
 
     def __init__(self, k: int = 1, row_order: str = "grayfreq",
-                 spec: IndexSpec | None = None, query_fanout: int = 0):
+                 spec: IndexSpec | None = None, query_fanout: int = 0,
+                 encoding: str = "equality"):
         self.spec = spec or IndexSpec(k=k, row_order=row_order,
-                                      column_order="heuristic")
+                                      column_order="heuristic",
+                                      encoding=encoding)
         self.k = self.spec.k
         self.row_order = self.spec.row_order
         self.query_fanout = query_fanout
@@ -107,8 +107,7 @@ class MetadataIndex:
             return self.sharded.query(pred, backend=backend, names=self.COLS)
         return self.index.query(pred, backend=backend)
 
-    def query(self, where: dict | None = None, *, backend: str = "numpy",
-              **legacy_conditions):
+    def query(self, where: dict | None = None, *, backend: str = "numpy"):
         """Equality query: rows matching all ``where={column: value}``
         conditions (compiled to one And(Eq, ...) plan — a single
         smallest-streams-first AND fan-in).  Returns
@@ -116,23 +115,10 @@ class MetadataIndex:
 
         ``backend`` is a normal keyword-only option; conditions travel in
         the explicit ``where=`` dict so column names can never collide with
-        option names.  The old spellings — conditions as bare kwargs, the
-        backend as ``_backend=`` — still work for one release with a
-        DeprecationWarning.
+        option names.  The PR-4 one-release shims (conditions as bare
+        kwargs, the backend as ``_backend=``) are **removed** — those
+        spellings now raise TypeError.
         """
-        if "_backend" in legacy_conditions:
-            warnings.warn(
-                "MetadataIndex.query(_backend=...) is deprecated; backend "
-                "is a normal keyword-only argument now: query(where, "
-                "backend=...)", DeprecationWarning, stacklevel=2)
-            backend = legacy_conditions.pop("_backend")
-        if legacy_conditions:
-            warnings.warn(
-                "passing conditions as bare keyword arguments is "
-                "deprecated (column names could collide with option "
-                "names); use query(where={...})",
-                DeprecationWarning, stacklevel=2)
-            where = {**(where or {}), **legacy_conditions}
         if not where:
             return np.asarray([], dtype=np.int64), 0
         unknown = sorted(set(where) - set(self.COLS))

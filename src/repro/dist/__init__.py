@@ -3,12 +3,13 @@ and query fan-out over row-range index shards (query_fanout)."""
 
 from . import checkpoint, query_fanout, sharding
 from .query_fanout import IndexShard, ShardedIndex, shard_ranges
-from .sharding import (batch_shardings, cache_shardings, opt_shardings,
-                       param_shardings, replicated)
+from .sharding import (batch_shardings, cache_shardings, grad_shardings_zero,
+                       opt_shardings, param_shardings, replicated,
+                       zero_pad_for)
 
 __all__ = [
     "checkpoint", "query_fanout", "sharding",
     "IndexShard", "ShardedIndex", "shard_ranges",
-    "batch_shardings", "cache_shardings", "opt_shardings",
-    "param_shardings", "replicated",
+    "batch_shardings", "cache_shardings", "grad_shardings_zero",
+    "opt_shardings", "param_shardings", "replicated", "zero_pad_for",
 ]

@@ -175,11 +175,15 @@ def _load_step(path: str, n_leaves: int):
 def restore(directory: str, tree_like, shardings=None):
     """Load the newest valid checkpoint.
 
-    ``tree_like`` supplies the pytree structure (its leaf *values* are
-    ignored).  ``shardings`` is an optional matching pytree of
-    ``NamedSharding`` used to place each restored leaf.  Returns
-    ``(tree, step, extra)``; raises FileNotFoundError when no step exists
-    or none validates.
+    ``tree_like`` supplies the pytree structure and the expected leaf
+    *shapes* (leaf values are ignored, but a saved leaf whose shape
+    disagrees with its ``tree_like`` counterpart is rejected with a clear
+    error — e.g. a checkpoint written before a state-layout change, like
+    the param-shaped-moments era before flat ZeRO-1, must not be silently
+    placed under the new shardings).  ``shardings`` is an optional
+    matching pytree of ``NamedSharding`` used to place each restored leaf.
+    Returns ``(tree, step, extra)``; raises FileNotFoundError when no
+    step exists or none validates.
     """
     steps = available_steps(directory)
     if not steps:
@@ -195,6 +199,17 @@ def restore(directory: str, tree_like, shardings=None):
         except CorruptCheckpoint as e:
             failures.append(str(e))
             continue
+        for i, (x, like) in enumerate(zip(raw, leaves_like)):
+            x_shape = tuple(np.asarray(x).shape)
+            want = tuple(getattr(like, "shape", np.asarray(like).shape))
+            if x_shape != want:
+                raise ValueError(
+                    f"checkpoint step {saved_step} leaf {i} has shape "
+                    f"{x_shape} but the current state expects {want} — "
+                    "the saved state layout predates the running code "
+                    "(e.g. param-shaped optimizer moments from before "
+                    "flat ZeRO-1); restart fresh or migrate the "
+                    "checkpoint")
         leaves = [jax.device_put(x) if sh is None else jax.device_put(x, sh)
                   for x, sh in zip(raw, shard_leaves)]
         return jax.tree.unflatten(treedef, leaves), saved_step, extra

@@ -11,7 +11,11 @@ into up to N equal word-aligned ranges) and the fan-out framing:
   1. the predicate compiles *per shard* against that shard's index (value
      domains are shard-local: a value a shard never saw compiles to a
      constant-empty leaf, and ``Not`` complements only the shard's row
-     range);
+     range); the spec's per-column *encoding* choice travels with the spec
+     too — under ``encoding='auto'`` each shard's chooser reads its own
+     histograms, so shards of one fan-out may answer the same ``Range``
+     through different encodings and still merge bit-identically (only
+     result streams cross the wire, never slice planes or bins);
   2. every shard executes the plan through ``execute_compressed`` — the
      result that crosses the (logical) wire is the compressed EWAH stream,
      not row ids, typically orders of magnitude smaller;

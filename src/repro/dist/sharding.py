@@ -7,10 +7,14 @@ launchers hand to ``jax.jit`` as in/out shardings:
   * ``param_shardings`` — tensor parallelism: FFN ("ff"), attention heads
     ("heads"), vocab/embedding ("vocab") and expert ("experts") dims land on
     the "model" axis; everything else is replicated.
-  * ``opt_shardings``   — ZeRO-1: AdamW moments inherit the parameter
-    sharding and are additionally sharded over the "data" axis along the
-    first replicated dimension it divides, so optimizer memory scales down
-    with data parallelism.
+  * ``opt_shardings``   — ZeRO-1: AdamW moments are stored **1-D flattened
+    and zero-padded** to a multiple of the "data"-axis size
+    (``init_opt_state(params, zero_pad=zero_pad_for(mesh))``) and sharded
+    over that axis, so *every* leaf shards regardless of its dimension
+    divisibility and optimizer memory scales down with data parallelism.
+    ``grad_shardings_zero`` keeps the old param-shaped dim-based placement
+    for gradient constraints (grads stay param-shaped; the constraint
+    drives the reduce-scatter dataflow).
   * ``batch_shardings`` — train / prefill / decode batches split on the
     data axes (("pod", "data") when a pod axis exists).
   * ``cache_shardings`` — decode KV cache / SSM state placement per
@@ -72,7 +76,9 @@ def _zero_axis(mesh, rules):
 
 def _zero1_sharding(sharding, shape, mesh, zero):
     """Extend a param sharding with the ZeRO axis on the first replicated
-    dimension it divides (moments stay addressable without padding)."""
+    dimension it divides (the legacy dim-based placement; leaves with no
+    divisible replicated dim stay unsharded — still used for *gradient*
+    constraints, which must keep the parameter shape)."""
     spec = list(sharding.spec) + [None] * (len(shape) - len(sharding.spec))
     dsize = _mesh_axes_size(mesh, zero)
     if dsize > 1:
@@ -83,21 +89,52 @@ def _zero1_sharding(sharding, shape, mesh, zero):
     return NamedSharding(mesh, P(*spec))
 
 
+def zero_pad_for(mesh, rules=None) -> int:
+    """The ZeRO-1 flatten multiple: size of the mesh's ZeRO axis (1 when
+    the mesh has no such axis — moments then keep the parameter shape).
+    Pass this as ``init_opt_state(params, zero_pad=...)`` so the stored
+    moment shapes match :func:`opt_shardings`."""
+    zero = _zero_axis(mesh, rules)
+    return _mesh_axes_size(mesh, zero) if zero is not None else 1
+
+
 def opt_shardings(mesh, cfg, rules=None):
-    """NamedSharding tree mirroring ``init_opt_state(params)``: ZeRO-1
-    moments ("m"/"v"), replicated step counter."""
+    """NamedSharding tree mirroring
+    ``init_opt_state(params, zero_pad=zero_pad_for(mesh))``: ZeRO-1
+    moments ("m"/"v"), replicated step counter.
+
+    Moments are stored 1-D flattened, zero-padded to a multiple of the
+    ZeRO-axis size, and sharded ``P(zero)`` — flatten + pad + reshape means
+    every leaf shards evenly whatever its dimensions (a (4097, 3) leaf on
+    an 8-way data axis shards as 8 x 1537 flat words), where the old
+    dim-based placement left any leaf with no divisible replicated dim
+    fully replicated."""
+    p_sh = param_shardings(mesh, cfg, rules)
+    zero = _zero_axis(mesh, rules)
+    if zero is None or _mesh_axes_size(mesh, zero) <= 1:
+        m_sh = p_sh
+    else:
+        flat = NamedSharding(mesh, P(zero))
+        m_sh = jax.tree.map(lambda _: flat, p_sh)
+    return {"m": m_sh, "v": m_sh, "step": replicated(mesh)}
+
+
+def grad_shardings_zero(mesh, cfg, rules=None):
+    """Param-shaped ZeRO placements for *gradient* sharding constraints
+    (``train_step(grad_shardings=...)``): grads must keep the parameter
+    shape, so this is the dim-based placement — the ZeRO axis lands on the
+    first replicated dimension it divides, and non-divisible leaves stay
+    replicated (their moment storage still shards via the flat path)."""
     p_sh = param_shardings(mesh, cfg, rules)
     zero = _zero_axis(mesh, rules)
     if zero is None:
-        m_sh = p_sh
-    else:
-        shapes = jax.eval_shape(
-            lambda k: transformer.init_params(k, cfg),
-            jax.ShapeDtypeStruct((2,), jnp.uint32))
-        m_sh = jax.tree.map(
-            lambda sh, s: _zero1_sharding(sh, s.shape, mesh, zero),
-            p_sh, shapes)
-    return {"m": m_sh, "v": m_sh, "step": replicated(mesh)}
+        return p_sh
+    shapes = jax.eval_shape(
+        lambda k: transformer.init_params(k, cfg),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+    return jax.tree.map(
+        lambda sh, s: _zero1_sharding(sh, s.shape, mesh, zero),
+        p_sh, shapes)
 
 
 def batch_shardings(mesh, cfg, kind: str, rules=None):

@@ -19,6 +19,7 @@ from .gray import gray_kernel
 from .histmm import TOK_TILE, VAL_TILE, histmm_kernel
 from .moe_route import moe_route_kernel
 from .recompress import recompress_kernel
+from .slicefold import slicefold_kernel
 from .wordops import wordops_kernel
 
 
@@ -86,6 +87,43 @@ def wordops_fold(stacked, op="and", use_kernel=True, interpret=None):
         stacked = merged
         m = stacked.shape[0]
     return stacked[0]
+
+
+@partial(jax.jit, static_argnames=("ops", "use_kernel", "interpret"))
+def slice_fold(stacked, ops, use_kernel=True, interpret=None):
+    """Left-fold (m, n) word vectors with a per-step op -> (n,).
+
+    The batched slice-fold entry point of the bit-sliced encoding: ``ops``
+    is a static tuple of m-1 names from {'and', 'or', 'xor'}, applied
+    sequentially (``r = (stacked[0] ops[0] stacked[1]) ops[1] ...``) —
+    the slice-plane comparison circuit, where the op sequence encodes the
+    comparison constant's bits.  The jax query backend flattens a whole
+    batch of queries into n = B * words-per-query, so all planes of every
+    comparison in the batch dispatch in ONE padded Pallas call
+    (``kernels.slicefold``) instead of m - 1 two-operand launches.
+    """
+    m, n = stacked.shape
+    if len(ops) != m - 1:
+        raise ValueError(f"slice_fold got {m} planes but {len(ops)} ops "
+                         "(need exactly m - 1)")
+    if m == 1:
+        return stacked[0]
+    if not use_kernel:
+        fns = {"and": jnp.bitwise_and, "or": jnp.bitwise_or,
+               "xor": jnp.bitwise_xor}
+        r = stacked[0]
+        for i, op in enumerate(ops):
+            r = fns[op](r, stacked[i + 1])
+        return r
+    interpret = not _on_tpu() if interpret is None else interpret
+    lanes = 128
+    from .slicefold import ROW_TILE as RT
+    rows = -(-n // lanes)
+    rows_p = -(-rows // RT) * RT
+    x = (jnp.zeros((m, rows_p * lanes), jnp.uint32)
+         .at[:, :n].set(stacked).reshape(m, rows_p, lanes))
+    out = slicefold_kernel(x, tuple(ops), interpret=interpret)
+    return out.reshape(-1)[:n]
 
 
 @partial(jax.jit, static_argnames=("capacity", "use_kernel", "interpret"))

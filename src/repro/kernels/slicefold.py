@@ -1,0 +1,60 @@
+"""Pallas TPU kernel: sequential slice-plane fold with a per-step op.
+
+The bit-sliced range circuit (core/encodings.py) is a *left fold* over the
+column's slice planes — ``R = ((P_j op_1 P_{j+1}) op_2 P_{j+2}) ...`` with
+each step's op fixed by a bit of the comparison constant (AND where the bit
+is 1, OR where 0, XOR for Gray-plane decode).  Unlike ``wordops_fold`` the
+op varies per level and the order is semantic, so a tree reduction does not
+apply; instead all m planes stream through one kernel launch: each grid
+tile loads its (m, ROW_TILE, LANE_TILE) plane block once and runs the whole
+statically-unrolled fold in registers — one VMEM round trip for the entire
+comparison instead of m - 1 separate two-operand launches.
+
+  in : x (m, N, 128) uint32 — the m word-aligned slice planes
+  out: r (N, 128) uint32    — the folded result
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROW_TILE = 64
+LANE_TILE = 128
+
+_OPS = {"and": 0, "or": 1, "xor": 2}
+
+
+def _kernel(x_ref, o_ref, *, ops: tuple):
+    r = x_ref[0]
+    for step, op in enumerate(ops):
+        p = x_ref[step + 1]
+        if op == 0:
+            r = r & p
+        elif op == 1:
+            r = r | p
+        else:
+            r = r ^ p
+    o_ref[...] = r
+
+
+def slicefold_kernel(x: jax.Array, ops: tuple, *, interpret: bool = True):
+    """x (m, N, C) uint32, ops — m-1 names from {'and','or','xor'}."""
+    m, N, C = x.shape
+    assert len(ops) == m - 1, (len(ops), m)
+    assert N % ROW_TILE == 0 and C % LANE_TILE == 0
+    op_ids = tuple(_OPS[o] for o in ops)
+    grid = (N // ROW_TILE, C // LANE_TILE)
+    in_spec = pl.BlockSpec((m, ROW_TILE, LANE_TILE), lambda i, j: (0, i, j))
+    out_spec = pl.BlockSpec((ROW_TILE, LANE_TILE), lambda i, j: (i, j))
+    return pl.pallas_call(
+        partial(_kernel, ops=op_ids),
+        grid=grid,
+        in_specs=[in_spec],
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((N, C), jnp.uint32),
+        interpret=interpret,
+    )(x)

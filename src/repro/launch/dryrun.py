@@ -27,7 +27,8 @@ import jax.numpy as jnp
 
 from repro.configs import list_archs
 from repro.dist.sharding import (batch_shardings, cache_shardings,
-                                 opt_shardings, param_shardings, replicated)
+                                 grad_shardings_zero, opt_shardings,
+                                 param_shardings, replicated, zero_pad_for)
 from repro.launch.mesh import make_production_mesh
 from repro.launch.shapes import SHAPES, input_specs, runnable
 from repro.models import transformer
@@ -157,11 +158,13 @@ def build_step(cfg, kind, specs, mesh, microbatches: int = 1,
         b_sh = batch_shardings(mesh, cfg, "train")
         params_s = jax.eval_shape(
             lambda k: transformer.init_params(k, cfg), SDS((2,), jnp.uint32))
-        opt_s = jax.eval_shape(init_opt_state, params_s)
+        opt_s = jax.eval_shape(
+            partial(init_opt_state, zero_pad=zero_pad_for(mesh)), params_s)
 
         fn = partial(train_step, cfg=cfg, opt_cfg=opt_cfg,
                      microbatches=microbatches,
-                     grad_shardings=o_sh["m"] if grad_zero else None)
+                     grad_shardings=(grad_shardings_zero(mesh, cfg)
+                                     if grad_zero else None))
         jitted = jax.jit(
             fn, in_shardings=(p_sh, o_sh, b_sh),
             out_shardings=(p_sh, o_sh, None),

@@ -27,7 +27,7 @@ from repro.data.metadata_index import MetadataIndex
 from repro.data.tokens import TokenPipeline
 from repro.dist import checkpoint as ckpt
 from repro.dist.sharding import (batch_shardings, opt_shardings,
-                                 param_shardings)
+                                 param_shardings, zero_pad_for)
 from repro.launch.mesh import make_cli_mesh
 from repro.models import transformer
 from repro.models.common import ShardingCtx
@@ -118,7 +118,11 @@ def main(argv=None):
         params = jax.jit(
             lambda k: transformer.init_params(k, cfg),
             out_shardings=p_sh)(jax.random.PRNGKey(0))
-        opt_state = jax.jit(init_opt_state, out_shardings=o_sh)(params)
+        # ZeRO-1 flat moments: pad to the data-axis size so every leaf
+        # shards (dist/sharding.py opt_shardings)
+        opt_state = jax.jit(
+            partial(init_opt_state, zero_pad=zero_pad_for(mesh)),
+            out_shardings=o_sh)(params)
 
         step_fn = jax.jit(
             partial(train_step, cfg=cfg, opt_cfg=opt_cfg,

@@ -1,8 +1,13 @@
 """AdamW + cosine schedule + global-norm clipping (pure functional).
 
-Optimizer moments inherit each parameter's sharding and are additionally
-ZeRO-1 sharded over the "data" axis where divisible (applied via the
-train-step's sharding constraints, see dist/sharding.py).
+ZeRO-1 moment storage: ``init_opt_state(params, zero_pad=d)`` with d > 1
+stores "m"/"v" leaves **1-D flattened and zero-padded** to a multiple of d
+(the data-axis size, ``dist.sharding.zero_pad_for``), so the moment tree
+shards evenly over the data axis whatever the parameter dimensions are.
+``apply_updates`` detects flat leaves by shape, reshapes them back to the
+parameter shape for the update math, and re-pads on the way out — the
+padding lanes stay exactly zero, so flat and param-shaped states compute
+identical updates.
 """
 
 from __future__ import annotations
@@ -26,11 +31,24 @@ class OptConfig:
     min_lr_frac: float = 0.1
 
 
-def init_opt_state(params, error_feedback: bool = False):
+def _flat_size(n: int, mult: int) -> int:
+    return -(-n // mult) * mult
+
+
+def init_opt_state(params, error_feedback: bool = False, zero_pad: int = 1):
+    """Fresh AdamW state.  ``zero_pad > 1`` stores the moments 1-D
+    flattened and zero-padded to a multiple of ``zero_pad`` (ZeRO-1 flat
+    sharding — see dist/sharding.py); the "ef" residual stays param-shaped
+    (it feeds the gradient compressor, which works in parameter space)."""
     zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    if zero_pad > 1:
+        moment = lambda p: jnp.zeros((_flat_size(p.size, zero_pad),),
+                                     jnp.float32)
+    else:
+        moment = zeros
     state = {
-        "m": jax.tree.map(zeros, params),
-        "v": jax.tree.map(zeros, params),
+        "m": jax.tree.map(moment, params),
+        "v": jax.tree.map(moment, params),
         "step": jnp.zeros((), jnp.int32),
     }
     if error_feedback:
@@ -64,13 +82,27 @@ def apply_updates(cfg: OptConfig, params, grads, state):
     bc2 = 1 - b2 ** step.astype(jnp.float32)
 
     def upd(p, g, m, v):
+        # ZeRO-1 flat storage: moments whose shape differs from the param
+        # are the flattened+padded form — unpad for the math, re-pad after
+        # (1-D leaves of divisible size need no pad, so equal shapes always
+        # mean the values coincide too)
+        flat = m.shape != p.shape
+        if flat:
+            stored = m.shape[0]
+            m = m[: p.size].reshape(p.shape)
+            v = v[: p.size].reshape(p.shape)
         g = g.astype(jnp.float32) * scale
         m = b1 * m + (1 - b1) * g
         v = b2 * v + (1 - b2) * g * g
         mh = m / bc1
         vh = v / bc2
         delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
-        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+        new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        if flat:
+            pad = (0, stored - p.size)
+            m = jnp.pad(m.reshape(-1), pad)
+            v = jnp.pad(v.reshape(-1), pad)
+        return new_p, m, v
 
     flat_p, tdef = jax.tree.flatten(params)
     flat_g = jax.tree.leaves(grads)

@@ -69,6 +69,17 @@ def test_async_save(tmp_path):
     trees_equal(tree, restored)
 
 
+def test_restore_rejects_layout_mismatch(tmp_path):
+    """A saved leaf whose shape disagrees with tree_like fails loudly —
+    e.g. param-shaped optimizer moments written before the flat-ZeRO-1
+    layout must not be silently placed under the new shardings."""
+    tree = make_tree()
+    ckpt.save(str(tmp_path), 3, tree)
+    new_layout = dict(tree, a=jnp.zeros((130,), jnp.float32))  # 16*8 -> flat+pad
+    with pytest.raises(ValueError, match="layout"):
+        ckpt.restore(str(tmp_path), new_layout)
+
+
 def test_restore_missing_raises(tmp_path):
     with pytest.raises(FileNotFoundError):
         ckpt.restore(str(tmp_path / "nope"), make_tree())

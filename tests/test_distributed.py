@@ -22,7 +22,8 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config
 from repro.dist.sharding import (batch_shardings, cache_shardings,
-                                 opt_shardings, param_shardings)
+                                 opt_shardings, param_shardings,
+                                 zero_pad_for)
 from repro.models import transformer
 from repro.models.common import ShardingCtx
 from repro.optim import OptConfig, init_opt_state
@@ -36,15 +37,26 @@ cfg = get_config("tinyllama-1.1b").smoke()
 with ShardingCtx(mesh):
     p_sh = param_shardings(mesh, cfg)
     o_sh = opt_shardings(mesh, cfg)
+    zp = zero_pad_for(mesh)
     params = jax.jit(lambda k: transformer.init_params(k, cfg),
                      out_shardings=p_sh)(jax.random.PRNGKey(0))
-    opt = jax.jit(init_opt_state, out_shardings=o_sh)(params)
+    opt = jax.jit(partial(init_opt_state, zero_pad=zp),
+                  out_shardings=o_sh)(params)
     # param sharding places ff dim on model axis
     wg = params["layers"]["ffn"]["w_gate"]
     results["ffn_sharded"] = "model" in str(wg.sharding.spec)
     # ZeRO: moments pick up the data axis somewhere
     mm = opt["m"]["layers"]["ffn"]["w_gate"]
     results["zero1"] = "data" in str(mm.sharding.spec)
+    # flat ZeRO-1: EVERY moment leaf is 1-D, padded to the data-axis
+    # size, and actually sharded over "data" — dimension divisibility
+    # no longer decides which leaves shard
+    results["zero1_pad"] = zp
+    m_leaves = jax.tree.leaves(opt["m"])
+    results["zero1_all_flat"] = all(
+        l.ndim == 1 and l.shape[0] % zp == 0 for l in m_leaves)
+    results["zero1_all_sharded"] = all(
+        "data" in str(l.sharding.spec) for l in m_leaves)
 
     b_sh = batch_shardings(mesh, cfg, "train")
     batch = {
@@ -91,6 +103,54 @@ def test_param_tp_sharding(dist_results):
 
 def test_zero1_moment_sharding(dist_results):
     assert dist_results["zero1"]
+
+
+def test_zero1_flat_shards_every_leaf(dist_results):
+    """Regression (ROADMAP): flat ZeRO-1 — moments store 1-D, padded to
+    the data-axis size, and every leaf shards over "data", including
+    leaves whose dims the old placement could not divide."""
+    assert dist_results["zero1_pad"] == 4
+    assert dist_results["zero1_all_flat"]
+    assert dist_results["zero1_all_sharded"]
+
+
+def test_zero1_flat_apply_updates_matches_param_shaped():
+    """The flat+padded moment storage computes bit-for-bit the same update
+    as param-shaped moments (padding lanes stay exactly zero), including
+    leaves whose sizes do not divide the pad multiple."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.optim import OptConfig, apply_updates, init_opt_state
+
+    r = np.random.default_rng(0)
+    # 15, 7, 1: none divisible by 4 — the shapes the old placement skipped
+    params = {"a": jnp.asarray(r.normal(size=(5, 3)), jnp.float32),
+              "b": jnp.asarray(r.normal(size=(7,)), jnp.float32),
+              "c": jnp.asarray(r.normal(size=(1,)), jnp.float32),
+              "d": jnp.asarray(r.normal(size=(4, 2)), jnp.float32)}
+    grads = jax.tree.map(
+        lambda p: jnp.asarray(r.normal(size=p.shape), jnp.float32), params)
+    cfg = OptConfig(total_steps=10, warmup_steps=1)
+
+    s_ref = init_opt_state(params)
+    s_flat = init_opt_state(params, zero_pad=4)
+    assert all(l.ndim == 1 and l.shape[0] % 4 == 0
+               for l in jax.tree.leaves(s_flat["m"]))
+
+    for _ in range(3):  # a few steps so moments are non-trivial
+        p_ref, s_ref, _ = apply_updates(cfg, params, grads, s_ref)
+        p_flat, s_flat, _ = apply_updates(cfg, params, grads, s_flat)
+        jax.tree.map(np.testing.assert_array_equal, p_ref, p_flat)
+    # moments agree after unflattening, and the padding stays zero
+    for key in ("m", "v"):
+        for name, ref_leaf in s_ref[key].items():
+            flat_leaf = s_flat[key][name]
+            np.testing.assert_array_equal(
+                np.asarray(flat_leaf)[: ref_leaf.size].reshape(ref_leaf.shape),
+                np.asarray(ref_leaf))
+            np.testing.assert_array_equal(
+                np.asarray(flat_leaf)[ref_leaf.size:], 0.0)
 
 
 def test_sharded_step_runs(dist_results):

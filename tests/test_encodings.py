@@ -1,0 +1,352 @@
+"""The pluggable encoding layer (repro.core.encodings).
+
+Core contract: every encoding answers every predicate **bit-identically**
+— equality k-of-N bitmaps, bit-sliced planes (binary and Gray), and
+histogram-equalized bins must be indistinguishable through the query
+surface, on both backends.  Checked against the dense oracle and each
+other, with hypothesis property tests over random tables and ranges
+(domain edges and empty ranges included), plus the acceptance bound: a
+range over a cardinality-1024 bit-sliced column costs at most
+2 * ceil(log2 1024) stream merges.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import And, BitmapIndex, Eq, In, IndexSpec, Not, Or, Range
+from repro.core import IndexWriter, index_size_report
+from repro.core.encodings import (BinnedEncoding, BitSlicedEncoding,
+                                  build_encoding, encoding_kinds)
+from repro.core.query import compile_plan, count_merges, evaluate_mask
+from repro.core.strategies import get_strategy
+
+ENCODINGS = ("equality", "bitsliced", "bitsliced-gray", "binned")
+
+
+def spec_for(enc, k=1, row_order="lex"):
+    return IndexSpec(k=k, row_order=row_order, column_order="given",
+                     encoding=enc)
+
+
+def make_cols(n, cards, seed):
+    r = np.random.default_rng(seed)
+    return [r.integers(0, c, size=n) for c in cards]
+
+
+def original_rows(idx, pred, backend):
+    rows, _ = idx.query(pred, backend=backend)
+    return np.sort(idx.row_perm[rows])
+
+
+PREDICATES = [
+    Eq(0, 3), Eq(0, 10**6),                      # in / out of domain
+    In(0, [1, 5, 9]), In(1, [0]), In(1, range(200)),
+    Range(0, 4, 25), Range(0, 25, 4),            # empty range
+    Range(1, 0, 10**9),                          # whole domain, clamped
+    Range(1, 1, 1), Range(0, 0, 0),              # single-value ranges
+    And(Range(0, 2, 27), Not(Eq(1, 3))),
+    Or(Eq(0, 1), Range(1, 10, 60)),
+]
+
+
+@pytest.mark.parametrize("encoding", ENCODINGS)
+def test_encoding_matches_dense_oracle(encoding):
+    cols = make_cols(1237, [29, 101], seed=7)   # n deliberately % 32 != 0
+    idx = BitmapIndex.build(cols, spec_for(encoding))
+    for pred in PREDICATES:
+        got = original_rows(idx, pred, "numpy")
+        expect = np.flatnonzero(evaluate_mask(pred, cols))
+        np.testing.assert_array_equal(got, expect, err_msg=f"{encoding} {pred}")
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_encodings_bit_identical_across_backends(backend):
+    """Every encoding returns the same original-space rows for every
+    predicate shape, on both backends."""
+    cols = make_cols(900, [13, 300], seed=3)
+    results = {}
+    for enc in ENCODINGS:
+        idx = BitmapIndex.build(cols, spec_for(enc))
+        results[enc] = [original_rows(idx, p, backend) for p in PREDICATES]
+    for enc in ENCODINGS[1:]:
+        for p, a, b in zip(PREDICATES, results["equality"], results[enc]):
+            np.testing.assert_array_equal(a, b, err_msg=f"{enc} {p}")
+
+
+def test_bitsliced_range_merge_bound_acceptance():
+    """Acceptance: a Range over a cardinality-1024 bit-sliced column
+    executes with <= 2 * ceil(log2 1024) stream merges — vs ~card/2 OR
+    merges for the equality encoding — and both give identical rows on
+    both backends."""
+    card = 1024
+    cols = [np.random.default_rng(0).integers(0, card, size=4000)]
+    bs = BitmapIndex.build(cols, spec_for("bitsliced"))
+    eq = BitmapIndex.build(cols, spec_for("equality"))
+    pred = Range(0, 100, 800)
+
+    plan = compile_plan(bs, pred)
+    assert count_merges(plan.root) <= 2 * 10      # 2 * ceil(log2 1024)
+    eq_plan = compile_plan(eq, pred)
+    assert count_merges(eq_plan.root) > 100       # the OR fan-in it replaces
+
+    expect = np.flatnonzero(evaluate_mask(pred, cols))
+    for backend in ("numpy", "jax"):
+        np.testing.assert_array_equal(original_rows(bs, pred, backend), expect)
+        np.testing.assert_array_equal(original_rows(eq, pred, backend), expect)
+
+
+def test_bitsliced_plane_count_and_sizes():
+    cols = [np.arange(1000) % 37]
+    idx = BitmapIndex.build(cols, spec_for("bitsliced"))
+    enc = idx.columns[0].encoding
+    assert isinstance(enc, BitSlicedEncoding)
+    assert enc.n_bits == 6                        # ceil(log2 37)
+    assert idx.columns[0].N == 6
+    assert idx.size_words() == int(enc.sizes.sum()) > 0
+
+
+def test_bitsliced_gray_planes_use_gray_codes():
+    """Gray planes hold to_gray(value) bits — the same transform the
+    kernels/gray.py Pallas kernel computes — and adjacent values differ in
+    exactly one plane."""
+    from repro.core.encoding import to_gray
+    from repro.kernels import ops as kops
+
+    card = 16
+    col = np.repeat(np.arange(card), 4)           # sorted runs of each value
+    idx = BitmapIndex.build([col], spec_for("bitsliced-gray",
+                                            row_order="unsorted"))
+    enc = idx.columns[0].encoding
+    assert enc.gray
+    # the on-device Gray kernel and the host transform agree on the codes
+    import jax.numpy as jnp
+    keys = np.asarray(kops.gray(jnp.arange(card, dtype=jnp.uint32)))
+    np.testing.assert_array_equal(keys, to_gray(np.arange(card)))
+    # decode plane membership back per value: bit i of gray(v)
+    from repro.core import ewah
+    for i, stream in enumerate(enc.streams):
+        bits = ewah.unpack_bits(ewah.decompress(stream), len(col))
+        per_value = bits.reshape(card, 4)[:, 0]
+        np.testing.assert_array_equal(
+            per_value, (keys >> np.uint32(i)) & 1, err_msg=f"plane {i}")
+
+
+def test_binned_histogram_equalized_bins():
+    """Bin boundaries follow the cumulative histogram: a heavily skewed
+    column still gets ~equal rows per bin, and every bin bitmap counts
+    exactly its rows."""
+    from repro.core import ewah
+
+    r = np.random.default_rng(5)
+    col = r.choice(100, size=4000, p=np.arange(1, 101) / np.arange(1, 101).sum())
+    idx = BitmapIndex.build([col], spec_for("binned"))
+    enc = idx.columns[0].encoding
+    assert isinstance(enc, BinnedEncoding)
+    counts = []
+    for b, stream in enumerate(enc.streams):
+        bits = ewah.unpack_bits(ewah.decompress(stream), len(col))
+        lo, hi = enc.edges[b], enc.edges[b + 1] - 1
+        sorted_col = col[idx.row_perm]
+        np.testing.assert_array_equal(
+            bits, (sorted_col >= lo) & (sorted_col <= hi))
+        counts.append(int(bits.sum()))
+    assert sum(counts) == len(col)
+    # equalization: no bin holds more than ~3x the even share
+    assert max(counts) <= 3 * len(col) / enc.n_bins
+
+
+def test_auto_chooser_reads_histogram():
+    chooser = get_strategy("encoding", "auto")
+    n = 10_000
+    flat_mid = np.full(60, n // 60)
+    assert chooser(flat_mid, 1) == "binned"
+    high_card = np.full(512, n // 512)
+    assert chooser(high_card, 1) == "bitsliced"
+    small = np.full(8, n // 8)
+    assert chooser(small, 1) == "equality"
+    skewed = np.asarray([n - 59] + [1] * 59)      # 60 values, one dominates
+    assert chooser(skewed, 1) == "equality"
+
+
+def test_auto_spec_mixes_encodings_per_column():
+    cols = make_cols(3000, [512, 8, 60], seed=1)
+    idx = BitmapIndex.build(cols, spec_for("auto"))
+    assert idx.encodings() == ("bitsliced", "equality", "binned")
+    # and the mixed index still answers correctly
+    pred = And(Range(0, 50, 400), Range(2, 10, 40), Not(Eq(1, 2)))
+    np.testing.assert_array_equal(
+        original_rows(idx, pred, "numpy"),
+        np.flatnonzero(evaluate_mask(pred, cols)))
+
+
+def test_unknown_encoding_errors_list_names():
+    cols = make_cols(100, [10], seed=0)
+    with pytest.raises(ValueError, match="auto"):
+        BitmapIndex.build(cols, spec_for("bogus"))
+    with pytest.raises(ValueError, match="bitsliced"):
+        build_encoding("bogus", cols[0], 10, np.bincount(cols[0]),
+                       IndexSpec())
+    assert "equality" in encoding_kinds()
+
+
+def test_indexspec_encoding_serialization():
+    spec = IndexSpec(k=2, row_order="grayfreq", encoding="auto")
+    assert IndexSpec.from_dict(spec.to_dict()) == spec
+    assert IndexSpec().encoding == "equality"     # default preserves paper
+    # old serialized specs (no encoding key) load as equality
+    d = IndexSpec(k=2).to_dict()
+    d.pop("encoding")
+    assert IndexSpec.from_dict(d).encoding == "equality"
+
+
+def test_index_size_report_carries_encodings():
+    cols = make_cols(2000, [512, 8], seed=2)
+    rep = index_size_report(cols, spec_for("auto"))
+    assert rep["encodings"] == ["bitsliced", "equality"]
+    assert rep["k_effective"][0] is None          # k is an equality concept
+    assert rep["k_effective"][1] == 1
+    assert rep["total_words"] > 0
+
+
+def test_unmaterialized_nonequality_rejects_queries():
+    cols = make_cols(500, [300], seed=0)
+    for enc in ("bitsliced", "bitsliced-gray", "binned"):
+        idx = BitmapIndex.build(cols, spec_for(enc), materialize=False)
+        # the size-only path is exact: no streams, same word counts
+        full = BitmapIndex.build(cols, spec_for(enc))
+        np.testing.assert_array_equal(idx.columns[0].sizes,
+                                      full.columns[0].sizes)
+        assert idx.columns[0].streams is None
+        assert idx.size_words() == full.size_words() > 0
+        with pytest.raises(ValueError, match="materialize"):
+            idx.query(Eq(0, 1))
+
+
+# -- segments / lifecycle: mixed encodings ----------------------------------
+
+
+def test_mixed_encoding_segments_query_and_compact():
+    """Different segments of one auto-spec writer may choose different
+    encodings for the same column (segment-local histograms); queries
+    stitch bit-identically and compaction re-chooses over the merged
+    histogram."""
+    r = np.random.default_rng(9)
+    spec = spec_for("auto")
+    w = IndexWriter(spec)
+    lo = r.integers(0, 8, size=640)               # low-card batch: equality
+    hi = r.integers(0, 900, size=640)             # high-card batch: bitsliced
+    w.append([lo])
+    w.seal()
+    w.append([hi])
+    w.seal()
+    view = w.index
+    (enc_a,), (enc_b,) = view.encodings()
+    assert enc_a == "equality" and enc_b == "bitsliced"
+
+    full = np.concatenate([lo, hi])
+    for pred in (Range(0, 2, 500), Eq(0, 3), Not(In(0, [0, 1, 700]))):
+        for backend in ("numpy", "jax"):
+            rows, _ = view.query(pred, backend=backend)
+            np.testing.assert_array_equal(
+                rows, np.flatnonzero(evaluate_mask(pred, [full])))
+
+    w.compact(span=(0, 2))
+    assert view.n_segments == 1
+    assert view.encodings() == (("bitsliced",),)  # merged card is high
+    rows, _ = view.query(Range(0, 2, 500))
+    np.testing.assert_array_equal(
+        rows, np.flatnonzero(evaluate_mask(Range(0, 2, 500), [full])))
+
+
+def test_fanout_carries_encoding_choice():
+    """The spec's encoding travels through dist.query_fanout: a bit-sliced
+    fan-out answers ranges identically to a single bit-sliced index."""
+    from repro.dist.query_fanout import ShardedIndex
+
+    cols = make_cols(2017, [400], seed=4)
+    spec = spec_for("bitsliced")
+    single = BitmapIndex.build(cols, spec)
+    sharded = ShardedIndex.build(cols, spec, n_shards=4)
+    assert all(sh.index.encodings() == ("bitsliced",)
+               for sh in sharded.shards)
+    for pred in (Range(0, 17, 350), Not(Range(0, 100, 399))):
+        got, _ = sharded.query(pred)
+        np.testing.assert_array_equal(
+            got, np.flatnonzero(evaluate_mask(pred, cols)))
+
+
+# -- kernels: the batched slice-fold entry point ----------------------------
+
+
+@pytest.mark.parametrize("ops", [("and",), ("or", "and"),
+                                 ("xor", "or", "and", "or"),
+                                 ("xor", "xor", "xor")])
+def test_slice_fold_matches_sequential(ops):
+    import jax.numpy as jnp
+
+    from repro.kernels import ops as kops
+
+    m = len(ops) + 1
+    r = np.random.default_rng(m)
+    stacked = r.integers(0, 2**32, size=(m, 333), dtype=np.uint32)
+    fns = {"and": np.bitwise_and, "or": np.bitwise_or, "xor": np.bitwise_xor}
+    expect = stacked[0]
+    for i, op in enumerate(ops):
+        expect = fns[op](expect, stacked[i + 1])
+    got = np.asarray(kops.slice_fold(jnp.asarray(stacked), ops))
+    np.testing.assert_array_equal(got, expect)
+    ref = np.asarray(kops.slice_fold(jnp.asarray(stacked), ops,
+                                     use_kernel=False))
+    np.testing.assert_array_equal(ref, expect)
+
+
+def test_slice_fold_rejects_bad_op_count():
+    import jax.numpy as jnp
+
+    from repro.kernels import ops as kops
+
+    with pytest.raises(ValueError, match="planes"):
+        kops.slice_fold(jnp.zeros((3, 8), jnp.uint32), ("and",))
+
+
+# -- property tests ---------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 600), st.integers(0, 10**6), st.integers(33, 400),
+       st.integers(-5, 605), st.integers(-5, 605))
+def test_property_range_bit_identical_across_encodings(card, seed, n, lo, hi):
+    """Eq/In/Range agree bit-for-bit across all encodings (numpy backend),
+    including domain edges (lo/hi outside [0, card)) and empty ranges."""
+    cols = make_cols(n, [card], seed % 2**31)
+    preds = [Range(0, lo, hi), Eq(0, lo), In(0, [v % card for v in
+                                                 (lo, hi, seed)])]
+    expect = [np.flatnonzero(evaluate_mask(p, cols)) for p in preds]
+    for enc in ENCODINGS:
+        idx = BitmapIndex.build(cols, spec_for(enc))
+        for p, e in zip(preds, expect):
+            np.testing.assert_array_equal(
+                original_rows(idx, p, "numpy"), e,
+                err_msg=f"{enc} card={card} n={n} {p}")
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(200, 1100), st.integers(0, 10**6))
+def test_property_backends_agree_on_bitsliced_ranges(card, seed):
+    """Both backends return identical rows for random ranges over random
+    bit-sliced columns (the jax slice_fold path vs streaming merges)."""
+    r = np.random.default_rng(seed % 2**31)
+    cols = [r.integers(0, card, size=500)]
+    idx = BitmapIndex.build(cols, spec_for("bitsliced"))
+    lo = int(r.integers(0, card))
+    hi = int(r.integers(0, card))
+    preds = [Range(0, min(lo, hi), max(lo, hi)), Range(0, hi, hi),
+             Not(Range(0, min(lo, hi), max(lo, hi)))]
+    for p in preds:
+        np.testing.assert_array_equal(original_rows(idx, p, "numpy"),
+                                      original_rows(idx, p, "jax"))
+        np.testing.assert_array_equal(
+            original_rows(idx, p, "numpy"),
+            np.flatnonzero(evaluate_mask(p, cols)))

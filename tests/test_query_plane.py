@@ -324,24 +324,25 @@ def test_metadata_index_query_through_planner():
         np.flatnonzero((cols["domain"] == 3) & (cols["quality_bin"] == 8)))
 
 
-def test_metadata_index_query_legacy_shims():
-    """One-release shims: conditions as bare kwargs and _backend= still
-    work, with a DeprecationWarning."""
+def test_metadata_index_query_legacy_shims_removed():
+    """The PR-4 one-release shims are gone: conditions as bare kwargs and
+    the backend as _backend= raise TypeError (plain unexpected-keyword),
+    and nothing in the call emits a DeprecationWarning anymore."""
+    import warnings
+
     from repro.data.metadata_index import MetadataIndex
 
     r = np.random.default_rng(3)
     mi = MetadataIndex()
     mi.add_batch({c: r.integers(0, 4, 96) for c in MetadataIndex.COLS})
-    expect, _ = mi.query(where={"domain": 2})
-    with pytest.warns(DeprecationWarning, match="where"):
-        rows, _ = mi.query(domain=2)
-    np.testing.assert_array_equal(rows, expect)
-    with pytest.warns(DeprecationWarning, match="backend"):
-        rows, _ = mi.query(where={"domain": 2}, _backend="numpy")
-    np.testing.assert_array_equal(rows, expect)
-    with pytest.warns(DeprecationWarning):
-        with pytest.raises(ValueError, match="unknown columns"):
-            mi.query(not_a_column=1)
+    with pytest.raises(TypeError):
+        mi.query(domain=2)
+    with pytest.raises(TypeError):
+        mi.query(where={"domain": 2}, _backend="numpy")
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # the supported spelling is silent
+        rows, _ = mi.query(where={"domain": 2}, backend="numpy")
+    assert len(rows) > 0
 
 
 # -- serving plane -----------------------------------------------------------
