@@ -22,6 +22,13 @@ plus the cache-invalidation contract — after an append (new segment) or a
 compaction, only touched segments' cached results miss; the steady-state
 and post-mutation hit rates are reported and validated.
 
+The LSM scenario measures the delete/TTL/compaction surface on the same
+lifecycle: query latency and per-segment plan merges before any delete,
+after tombstoning (the live mask must add exactly one merge per touched
+segment — the acceptance bound), and after a purging compaction (zero
+extra merges: tombstones are physically gone), with every phase validated
+against a dense alive-mask oracle.
+
 The range-sweep scenario measures the pluggable encoding layer
 (``repro.core.encodings``): ``Range`` cost across range width x column
 cardinality x encoding (equality k-of-N vs bit-sliced planes vs
@@ -106,6 +113,7 @@ def run(n=60_000, queries=40, quick=False):
                             "agrees_with_numpy": agrees})
     out.extend(run_cascaded(cols, queries=queries))
     out.extend(run_segmented(cols, queries=queries))
+    out.extend(run_lsm(cols, queries=queries))
     out.extend(run_range_sweep(n=n // 3, queries=queries))
     return out
 
@@ -307,6 +315,68 @@ def run_segmented(cols, queries=40):
     return out
 
 
+def run_lsm(cols, queries=40):
+    """Delete/TTL/compaction scenario: the cost of a delete is one
+    compressed-domain merge per segment at query time (the cached live
+    mask ANDed into the plan root), and a purging compaction removes even
+    that.  Phases: pre-delete, post-delete (tombstones live), post-compact
+    (tombstoned rows physically purged, aligned so no fillers remain)."""
+    from repro.core.query import with_live_mask
+    from repro.core import evaluate_mask
+
+    spec = IndexSpec(k=1, row_order="lex", column_order="given")
+    n = len(cols[0])
+    cards = [int(c.max()) + 1 for c in cols]
+    preds = [And(In(2, range(cards[2] // 2)), Eq(0, v % cards[0]))
+             for v in range(queries)]
+    w = IndexWriter(spec)
+    for i in range(0, n, -(-n // 4)):
+        w.append([c[i : i + -(-n // 4)] for c in cols])
+        w.seal()
+    w.close()
+    view = w.index
+    alive = np.ones(n, dtype=bool)
+    out = []
+
+    def extra_merges():
+        """Max over segments of (merges with live mask - base merges)."""
+        worst = 0
+        for seg in w.segments:
+            if not seg.n_rows:
+                continue
+            base = count_merges(compile_plan(seg.index, preds[0]).root)
+            wrapped = with_live_mask(compile_plan(seg.index, preds[0]),
+                                     seg.live_stream())
+            worst = max(worst, count_merges(wrapped.root) - base)
+        return worst
+
+    def phase(name):
+        want = [np.flatnonzero(evaluate_mask(p, cols) & alive)
+                for p in preds]
+        got, best = _best_of(
+            lambda: view.query_many(preds, backend="numpy"))
+        agrees = all(np.array_equal(r, e) for (r, _), e in zip(got, want))
+        out.append({"scenario": "lsm", "phase": name,
+                    "us_per_query": best / queries * 1e6,
+                    "extra_merges_per_segment": extra_merges(),
+                    "segments": len(w.segments),
+                    "size_words": w.size_words(),
+                    "live_rows": int(alive.sum()),
+                    "agrees_with_oracle": agrees})
+
+    phase("pre-delete")
+    # tombstone a word-aligned slab from every segment (aligned so the
+    # final compaction purges cleanly, no fillers left behind)
+    dead = np.concatenate([np.arange(s.row_start, s.row_start + 64)
+                           for s in w.segments])
+    w.delete(row_ids=dead)
+    alive[dead] = False
+    phase("post-delete")
+    w.compact(span=(0, len(w.segments)))
+    phase("post-compact")
+    return out
+
+
 def validate(rows):
     checks = []
 
@@ -383,6 +453,29 @@ def validate(rows):
         f"compaction evicts only touched entries "
         f"({pc['entries_evicted']}/{pc['entries_before']}, post-compact "
         f"hit rate {pc['cache_hit_rate']:.0%}): {'PASS' if ok else 'FAIL'}")
+    # LSM scenario: a delete costs at most ONE extra merge per segment at
+    # query time, a purging compaction costs ZERO, and every phase answers
+    # like the dense alive-mask oracle
+    lsm = {r["phase"]: r for r in rows if r.get("scenario") == "lsm"}
+    ok = all(r["agrees_with_oracle"] for r in lsm.values())
+    checks.append(f"lsm: all phases match dense alive-mask oracle: "
+                  f"{'PASS' if ok else 'FAIL'}")
+    pre, post, comp = (lsm["pre-delete"], lsm["post-delete"],
+                       lsm["post-compact"])
+    checks.append(
+        f"lsm: delete adds <= 1 merge/segment "
+        f"({pre['extra_merges_per_segment']} -> "
+        f"{post['extra_merges_per_segment']}): "
+        f"{'PASS' if pre['extra_merges_per_segment'] == 0 and post['extra_merges_per_segment'] <= 1 else 'FAIL'}")
+    checks.append(
+        f"lsm: compaction purges the merge back to zero "
+        f"({comp['extra_merges_per_segment']} extra, "
+        f"{comp['live_rows']} live rows): "
+        f"{'PASS' if comp['extra_merges_per_segment'] == 0 else 'FAIL'}")
+    ok = comp["live_rows"] == post["live_rows"] < pre["live_rows"]
+    checks.append(
+        f"lsm: live rows {pre['live_rows']} -> {post['live_rows']} stable "
+        f"through compaction: {'PASS' if ok else 'FAIL'}")
     # range-sweep: every encoding/backend cell answers bit-identically to
     # the equality encoding
     sweep = [r for r in rows if r.get("scenario") == "range-sweep"]

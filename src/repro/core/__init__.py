@@ -9,12 +9,14 @@ from . import (column_order, encoding, encodings, ewah, ewah_stream,
                histogram, index_size, query, sorting, strategies)
 from .bitmap_index import BitmapIndex, assign_codes, index_size_report
 from .ewah_stream import EwahStream
-from .lifecycle import IndexWriter, compact, size_tiered_pick
+from .lifecycle import (BackgroundCompactor, IndexWriter, compact,
+                        size_tiered_pick)
 from .query import And, Eq, In, Not, Or, Range, evaluate_mask
 from .segment import Segment, SegmentedIndex
 from .strategies import IndexSpec
 
 __all__ = [
+    "BackgroundCompactor",
     "BitmapIndex",
     "EwahStream",
     "IndexSpec",

@@ -23,12 +23,13 @@ Three encodings implement the protocol:
   exactly one plane, which compresses sorted runs better; the comparison
   circuit decodes binary bits in-plan as XOR fan-ins over the Gray planes.
 * :class:`BinnedEncoding` — histogram-equalized contiguous value bins (one
-  EWAH bitmap per bin, ~equal rows each) plus a candidate-check refinement
-  store (the value->rows CSR the build already materializes).  A range is
-  the OR of its fully-covered bins' bitmaps plus one exact leaf for the
-  partial boundary values — the classic binned "coarse plan + refinement",
-  with the refinement resolved densely at compile time so both backends
-  execute the result unchanged.
+  EWAH bitmap per bin, ~equal rows each) plus a lazy candidate-check
+  refinement over the per-row value surface (one int32 per row, kept in
+  sorted-row order).  A range is the OR of its fully-covered bins' bitmaps
+  plus one exact leaf for the partial boundary values — the classic binned
+  "coarse plan + refinement", with the refinement resolved densely at
+  compile time so both backends execute the result unchanged, and without
+  ever reading the segment's raw columns (``keep_columns=False`` safe).
 
 Which encoding a column gets is decided by an ``encoding`` *strategy*
 (:mod:`repro.core.strategies`) reading the column histogram — the built-in
@@ -92,14 +93,6 @@ def _one_bitmap_size(indicator: np.ndarray, n_rows: int) -> int:
     sizes, _, _ = column_bitmap_sizes(
         indicator, np.asarray([[0], [1]], dtype=np.int64), 2)
     return int(sizes[1])
-
-
-def _value_csr(col: np.ndarray, card: int):
-    """(row_order, offsets): rows holding value v are
-    ``row_order[offsets[v]:offsets[v + 1]]`` (ascending within a value)."""
-    order = np.argsort(col, kind="stable").astype(np.int64)
-    offsets = np.searchsorted(col[order], np.arange(card + 1))
-    return order, offsets
 
 
 class ColumnEncoding:
@@ -327,34 +320,42 @@ class BitSlicedGrayEncoding(BitSlicedEncoding):
 
 
 class BinnedEncoding(ColumnEncoding):
-    """Histogram-equalized value bins + candidate-check refinement.
+    """Histogram-equalized value bins + lazy candidate-check refinement.
 
     The value domain partitions into ``n_bins`` contiguous bins holding
     ~equal row counts (boundaries read off the cumulative histogram — the
     histogram-aware part), one EWAH bitmap per bin.  A range is the OR of
     its fully-covered bins plus one *exact* leaf for the partial boundary
-    values, resolved from the value->rows CSR kept from the build (the
-    binned literature's candidate check, done densely at compile time so
-    the emitted plan is ordinary streams on every backend).  ``Eq``/``In``
-    always resolve through the CSR — exact, no post-filtering step.
+    values (the binned literature's candidate check); ``Eq``/``In`` always
+    refine — exact results on every backend.
+
+    Refinement is a **lazy post-filter on the row-value surface**: the
+    build keeps each row's value in sorted-row order (``_values``, one
+    narrow integer per row — the row-id surface an exact candidate check
+    needs, since bins merge values and the coarse bitmaps alone cannot
+    tell boundary values apart) and each query materializes only its own
+    boundary spans from it.  Nothing here reaches back into the segment's
+    raw-column row store, so binned columns work unchanged on
+    ``Segment.seal(keep_columns=False)`` segments (dist fan-out shards);
+    the former value->rows CSR resolved the same spans from 2 int64 words
+    per row of retained base data — 4x the memory — and silently pinned
+    that base data to supposedly raw-column-free segments.
 
     ``sizes``/``size_words`` count only the compressed EWAH bin words, so
     binned sizes compare like-for-like against the other encodings'
-    compressed footprints; the CSR (~2 int64 words per row) is *base-data
-    access*, the same role as a segment's retained ingest-order columns,
-    and like those it is deliberately outside the compressed-size
-    accounting (docs/encodings.md lists it as the encoding's extra state).
+    compressed footprints; the value surface is *base-data access*, the
+    same role as a segment's retained ingest-order columns, and like those
+    it is deliberately outside the compressed-size accounting
+    (docs/encodings.md lists it as the encoding's extra state).
     """
 
     kind = "binned"
 
-    def __init__(self, edges, sizes, streams, row_order, offsets, card,
-                 n_rows):
+    def __init__(self, edges, sizes, streams, values, card, n_rows):
         self.edges = edges        # (n_bins + 1,) value boundaries
         self.sizes = sizes
         self.streams = streams
-        self._row_order = row_order
-        self._offsets = offsets
+        self._values = values     # per-row values, sorted-row order
         self.card = card
         self.n_rows = n_rows
 
@@ -383,31 +384,32 @@ class BinnedEncoding(ColumnEncoding):
                 bin_of[col], np.arange(len(edges) - 1,
                                        dtype=np.int64)[:, None],
                 len(edges) - 1)
-            return cls(edges, sizes, None, None, None, card, len(col))
-        row_order, offsets = _value_csr(col, card)
+            return cls(edges, sizes, None, None, card, len(col))
+        values = col.astype(np.int32 if card <= np.iinfo(np.int32).max
+                            else np.int64)
         streams = []
         for b in range(len(edges) - 1):
-            pos = np.sort(row_order[offsets[edges[b]]:offsets[edges[b + 1]]])
-            streams.append(_positions_to_stream(pos, len(col)))
+            mask = (values >= edges[b]) & (values < edges[b + 1])
+            streams.append(_positions_to_stream(np.flatnonzero(mask),
+                                                len(col)))
         sizes = np.asarray([len(s) for s in streams], dtype=np.int64)
-        return cls(edges, sizes, streams, row_order, offsets, card, len(col))
+        return cls(edges, sizes, streams, values, card, len(col))
 
-    def _exact_leaf(self, ctx, spans):
-        """One leaf holding exactly the rows whose value falls in any of
-        the [lo, hi] ``spans`` — the dense candidate-check refinement."""
-        parts = [self._row_order[self._offsets[lo]:self._offsets[hi + 1]]
-                 for lo, hi in spans]
-        pos = np.sort(np.concatenate(parts)) if parts else \
-            np.empty(0, np.int64)
+    def _exact_leaf(self, ctx, mask):
+        """One leaf holding exactly the rows whose value-surface ``mask``
+        is set — the lazy candidate-check refinement."""
+        pos = np.flatnonzero(mask)
         if not len(pos):
             return ctx.zero()
         return ctx.leaf(_positions_to_stream(pos, self.n_rows))
 
     def compile_eq(self, ctx, value: int):
-        return self._exact_leaf(ctx, [(value, value)])
+        return self._exact_leaf(ctx, self._values == value)
 
     def compile_in(self, ctx, values):
-        return self._exact_leaf(ctx, [(v, v) for v in values])
+        return self._exact_leaf(
+            ctx, np.isin(self._values,
+                         np.asarray(values, dtype=self._values.dtype)))
 
     def compile_range(self, ctx, lo: int, hi: int):
         if lo == 0 and hi == self.card - 1:
@@ -415,15 +417,17 @@ class BinnedEncoding(ColumnEncoding):
         # fully-covered bins ship their coarse bitmaps as-is
         b_lo = int(np.searchsorted(self.edges, lo, side="right")) - 1
         b_hi = int(np.searchsorted(self.edges, hi, side="right")) - 1
-        nodes, spans = [], []
+        nodes, refine = [], None
         for b in range(b_lo, b_hi + 1):
             v0, v1 = int(self.edges[b]), int(self.edges[b + 1]) - 1
             if lo <= v0 and v1 <= hi:
                 nodes.append(ctx.leaf(self.streams[b]))
             else:  # partial boundary bin -> candidate-check refinement
-                spans.append((max(lo, v0), min(hi, v1)))
-        if spans:
-            nodes.append(self._exact_leaf(ctx, spans))
+                s_lo, s_hi = max(lo, v0), min(hi, v1)
+                span = (self._values >= s_lo) & (self._values <= s_hi)
+                refine = span if refine is None else refine | span
+        if refine is not None:
+            nodes.append(self._exact_leaf(ctx, refine))
         return _or_node(nodes)
 
 

@@ -1,31 +1,50 @@
-"""Index lifecycle: the append / seal / compact writer API.
+"""Index lifecycle: the append / delete / seal / compact writer API.
 
 The one-shot ``BitmapIndex.build`` freezes the paper's whole pipeline behind
 a single static call — every new batch of rows would force a full re-sort
 and re-encode.  :class:`IndexWriter` makes the lifecycle incremental,
 LSM-style:
 
-* ``writer.append(rows)`` buffers rows in the **open segment** (queryable
-  immediately through the live :class:`~repro.core.segment.SegmentedIndex`
-  view — dense evaluation, no index build);
+* ``writer.append(rows, ttl=...)`` buffers rows in the **open segment**
+  (queryable immediately through the live
+  :class:`~repro.core.segment.SegmentedIndex` view — dense evaluation, no
+  index build); ``ttl`` stamps per-row absolute expiry deadlines;
+* ``writer.delete(pred | row_ids)`` tombstones rows wherever they live:
+  sealed segments OR the delete into their compressed tombstone bitmap
+  (one merge, no rebuild — every later query ANDs the cached live mask
+  into its plan root), buffered rows flip a dense mask;
 * ``writer.seal()`` runs the full histogram-aware pipeline (histogram
   refresh, column/value reordering, row sort per the ``IndexSpec``) on the
   word-aligned prefix of the buffer and emits an immutable
   :class:`~repro.core.segment.Segment`; the ``len(buffer) % 32`` tail rows
   carry over into the next open segment, preserving the word-alignment
-  contract that lets segment results concatenate in word space;
+  contract that lets segment results concatenate in word space.  Buffered
+  deletes and TTLs travel into the new segment's tombstones/expiry — an
+  all-deleted buffer seals into a valid fully-tombstoned segment;
 * ``writer.close()`` seals *everything* left (the final segment may be
   non-word-aligned — it is last, so nothing concatenates after it) and
-  rejects further appends;
-* :func:`compact` merges adjacent segments into one re-sorted segment
-  (rows re-sort globally across the merged range, recovering the
-  single-sort compression the per-segment splits gave up); the full
-  pipeline re-runs, including the spec's per-column encoding chooser over
-  the *merged* histograms — compacting mixed-encoding segments is just a
-  re-choice, since per-bitmap/per-plane data never crosses segments;
-  ``writer.compact()`` applies the size-tiered policy, swaps the merged
-  segment in, and evicts exactly the retired segments' result-cache
-  entries (:func:`repro.core.query.invalidate_scope`).
+  rejects further appends (deletes and compaction stay legal: an LSM keeps
+  maintaining closed data);
+* :func:`compact` merges adjacent segments into one re-sorted segment and
+  **purges** tombstoned/expired rows (up to 31 dead rows survive as
+  tombstoned fillers so the merged segment stays word-aligned; a
+  fully-dead span yields a valid zero-row segment).  The full pipeline
+  re-runs, including the spec's per-column encoding chooser over the
+  *merged* histograms; the merged segment's ``row_ids`` keep surviving
+  ingest ids stable across purges.  ``writer.compact()`` applies the
+  size-tiered policy, swaps the merged segment in **atomically** (the
+  segment list is a copy-on-write tuple: concurrent queries see the old or
+  the new list, never a mix), replays deletes that raced the merge, and
+  evicts exactly the retired segments' result-cache entries
+  (:func:`repro.core.query.invalidate_scope`);
+* :class:`BackgroundCompactor` runs that policy on a scheduler thread —
+  compaction leaves the serving path entirely — with exponential backoff
+  on transient failures and a drain-on-close that finishes pending tiers.
+
+Thread-safety contract: any number of query threads (and one background
+compactor) may run against one writer concurrently with its owner calling
+``append``/``delete``/``seal``/``close``; the mutating calls themselves are
+serialized by the writer (single-writer discipline, enforced by an RLock).
 
 ``BitmapIndex.build`` is now a seal-once convenience over this writer.
 See docs/lifecycle.md for semantics and the cache-invalidation contract.
@@ -33,18 +52,23 @@ See docs/lifecycle.md for semantics and the cache-invalidation contract.
 
 from __future__ import annotations
 
+import threading
+import time
+
 import numpy as np
 
 from . import ewah
-from .query import invalidate_scope
+from .query import compile_plan, evaluate_mask, get_backend, invalidate_scope
 from .segment import Segment, SegmentedIndex
 from .strategies import IndexSpec
 
-__all__ = ["IndexWriter", "compact", "size_tiered_pick"]
+__all__ = ["BackgroundCompactor", "IndexWriter", "compact",
+           "size_tiered_pick"]
 
 
 class IndexWriter:
-    """Incremental builder: append rows, seal immutable segments, compact.
+    """Incremental builder: append rows, tombstone deletes, seal immutable
+    segments, compact (foreground or via :class:`BackgroundCompactor`).
 
     Parameters
     ----------
@@ -58,19 +82,32 @@ class IndexWriter:
         reaches this many rows (None = manual sealing only).
     materialize:
         Forwarded to the per-segment index build (False = sizes only).
+    clock:
+        TTL time source (absolute seconds; default ``time.time``).
+        Injectable so tests can expire rows deterministically.
     """
 
     def __init__(self, spec: IndexSpec | None = None, *, names=None,
-                 seal_rows: int | None = None, materialize: bool = True):
+                 seal_rows: int | None = None, materialize: bool = True,
+                 clock=time.time):
         self.spec = (spec or IndexSpec()).validate()
         self.names = tuple(names) if names is not None else None
         self.seal_rows = seal_rows
         self.materialize = materialize
-        self.segments: list[Segment] = []
+        self.clock = clock
+        self._segments: tuple[Segment, ...] = ()
         self._chunks: list[list[np.ndarray]] = []   # buffered per-append chunks
+        self._chunk_deleted: list[np.ndarray] = []  # parallel bool masks
+        self._chunk_expiry: list[np.ndarray] = []   # parallel float deadlines
         self._buffered = 0
         self._n_cols: int | None = None
         self._closed = False
+        # _lock serializes mutations and makes (segments, buffer) snapshots
+        # atomic; _compact_lock keeps compactions single-file so the
+        # background compactor and a foreground compact() can't both retire
+        # the same run
+        self._lock = threading.RLock()
+        self._compact_lock = threading.Lock()
 
     # -- state -------------------------------------------------------------
 
@@ -84,37 +121,80 @@ class IndexWriter:
 
     @property
     def n_rows(self) -> int:
+        """Ingest ids issued so far (sealed span + buffer); purged rows do
+        not shrink this — ids are stable forever."""
         return self.sealed_rows + self._buffered
 
     @property
     def sealed_rows(self) -> int:
-        return self.segments[-1].row_stop if self.segments else 0
+        """End of the sealed ingest-id span (the buffer's first id)."""
+        segs = self._segments
+        return segs[-1].row_stop if segs else 0
+
+    @property
+    def segments(self) -> list:
+        """Snapshot of the sealed segments (copy-on-write: compaction swaps
+        the underlying tuple by reference, it never mutates this list)."""
+        return list(self._segments)
+
+    def snapshot(self):
+        """Atomic (segments, buffer) view for the query surface; ``buffer``
+        is ``(columns, deleted_mask, expiry)`` or None."""
+        with self._lock:
+            segs = self._segments
+            if not self._buffered:
+                return segs, None
+            cols = [np.concatenate([chunk[c] for chunk in self._chunks])
+                    for c in range(self._n_cols)]
+            deleted = np.concatenate(self._chunk_deleted)
+            expiry = np.concatenate(self._chunk_expiry)
+        return segs, (cols, deleted, expiry)
 
     def buffer_columns(self) -> list:
         """The open buffer as per-column arrays (ingest order); [] when
         nothing is buffered."""
-        if not self._chunks:
-            return []
-        return [np.concatenate([chunk[c] for chunk in self._chunks])
-                for c in range(self._n_cols)]
+        with self._lock:
+            if not self._chunks:
+                return []
+            return [np.concatenate([chunk[c] for chunk in self._chunks])
+                    for c in range(self._n_cols)]
 
     @property
     def index(self) -> SegmentedIndex:
         """The live query surface: sealed segments + the open buffer."""
-        return SegmentedIndex(self.segments, names=self.names, writer=self)
+        return SegmentedIndex(self._segments, names=self.names, writer=self)
 
     def size_words(self) -> int:
-        return sum(s.size_words() for s in self.segments)
+        return sum(s.size_words() for s in self._segments)
+
+    def live_rows(self, now=None) -> int:
+        """Rows a whole-domain query would return right now."""
+        now = self.clock() if now is None else float(now)
+        with self._lock:
+            segs = self._segments
+            buf_live = 0
+            for dmask, emask in zip(self._chunk_deleted, self._chunk_expiry):
+                buf_live += int((~dmask & (emask > now)).sum())
+        sealed = 0
+        for s in segs:
+            s.fold_expired(now)
+            sealed += s.n_rows - s.deleted_count()
+        return sealed + buf_live
 
     # -- append ------------------------------------------------------------
 
-    def append(self, rows) -> None:
+    def append(self, rows, *, ttl=None) -> None:
         """Buffer a batch of rows in the open segment.
 
         ``rows`` is a list of per-column integer value-id arrays (the
         ``BitmapIndex.build`` table convention) or, when the writer carries
         ``names``, a dict mapping those names to arrays.  All columns must
         be equal length; column count is fixed by the first append.
+
+        ``ttl`` (seconds; scalar or per-row array) stamps the rows with
+        absolute expiry deadlines ``clock() + ttl``; expired rows vanish
+        from queries lazily (folded into tombstones at query time) and are
+        physically dropped at compaction.
         """
         if self._closed:
             raise ValueError("writer is closed; no further appends")
@@ -139,10 +219,87 @@ class IndexWriter:
                 f"append has {len(chunk)} columns, writer has {self._n_cols}")
         if n == 0:
             return
-        self._chunks.append(chunk)
-        self._buffered += n
+        expiry = np.full(n, np.inf)
+        if ttl is not None:
+            t = np.asarray(ttl, dtype=np.float64)
+            if t.ndim == 0:
+                t = np.full(n, float(t))
+            elif len(t) != n:
+                raise ValueError(
+                    f"ttl has {len(t)} entries for {n} rows")
+            expiry = self.clock() + t
+        with self._lock:
+            self._chunks.append(chunk)
+            self._chunk_deleted.append(np.zeros(n, dtype=bool))
+            self._chunk_expiry.append(expiry)
+            self._buffered += n
         if self.seal_rows is not None and self._buffered >= self.seal_rows:
             self.seal()
+
+    # -- delete ------------------------------------------------------------
+
+    def delete(self, pred=None, *, row_ids=None, backend: str = "numpy",
+               now=None) -> int:
+        """Tombstone rows by predicate or by global ingest id.
+
+        Sealed segments take the delete as a compressed-domain OR into
+        their tombstone bitmap (the live-mask complement recomputes once,
+        off the query path); buffered rows flip a dense mask that seals
+        into the next segment's tombstones.  Ids already dead — or already
+        purged by compaction — are ignored.  Legal after ``close()``.
+        Returns the count of newly-dead rows.
+        """
+        if (pred is None) == (row_ids is None):
+            raise ValueError("delete needs exactly one of pred= or row_ids=")
+        now = self.clock() if now is None else float(now)
+        deleted = 0
+        # the whole delete holds _lock so it serializes against compaction's
+        # late-replay + swap (also under _lock): a delete either lands fully
+        # before the swap — its tombstones show up in the replay diff — or
+        # starts after and sees the merged segment.  Unlocked, a delete that
+        # read the old tuple could tombstone a retired segment after the
+        # replay diff ran, and the rows would resurface in the merged
+        # generation.  Queries only take _lock for their snapshot, so they
+        # are never blocked for long.
+        with self._lock:
+            if row_ids is not None:
+                ids = np.unique(np.asarray(row_ids, dtype=np.int64))
+                for seg in self._segments:
+                    deleted += seg.delete_ids(ids)
+                start = self.sealed_rows
+                local = ids[(ids >= start) & (ids < start + self._buffered)]
+                deleted += self._mark_buffer_deleted(local - start)
+                return deleted
+            be = get_backend(backend)
+            for seg in self._segments:
+                if not seg.n_rows:
+                    continue
+                seg.fold_expired(now)
+                plan = compile_plan(seg.index, pred, names=self.names)
+                rows, _ = be.execute(plan)
+                deleted += seg.delete_reordered(rows)
+            if self._buffered:
+                mask = evaluate_mask(pred, self.buffer_columns(),
+                                     names=self.names)
+                deleted += self._mark_buffer_deleted(np.flatnonzero(mask))
+        return deleted
+
+    def _mark_buffer_deleted(self, positions) -> int:
+        """Flip buffer-local positions dead; returns newly-dead count.
+        Caller holds ``_lock``."""
+        positions = np.asarray(positions, dtype=np.int64)
+        if not len(positions):
+            return 0
+        newly = 0
+        off = 0
+        for dmask in self._chunk_deleted:
+            n = len(dmask)
+            sel = positions[(positions >= off) & (positions < off + n)] - off
+            if len(sel):
+                newly += int((~dmask[sel]).sum())
+                dmask[sel] = True
+            off += n
+        return newly
 
     # -- seal --------------------------------------------------------------
 
@@ -159,7 +316,8 @@ class IndexWriter:
     def close(self) -> Segment | None:
         """Seal everything left in the buffer — the final segment may be
         non-word-aligned because nothing concatenates after it — and close
-        the writer.  Returns the final segment (None if nothing buffered)."""
+        the writer for appends.  Deletes and compaction remain legal.
+        Returns the final segment (None if nothing buffered)."""
         if self._closed:
             raise ValueError("writer is already closed")
         seg = self._seal_rows(self._buffered) if self._buffered else None
@@ -167,57 +325,101 @@ class IndexWriter:
         return seg
 
     def _seal_rows(self, n_seal: int) -> Segment:
-        cols = self.buffer_columns()
-        head = [c[:n_seal] for c in cols]
-        tail = [c[n_seal:] for c in cols]
-        seg = Segment.seal(head, self.spec, row_start=self.sealed_rows,
-                           materialize=self.materialize)
-        self.segments.append(seg)
-        remaining = self._buffered - n_seal
-        self._chunks = [tail] if remaining else []
-        self._buffered = remaining
+        with self._lock:
+            cols = [np.concatenate([chunk[c] for chunk in self._chunks])
+                    for c in range(self._n_cols)]
+            deleted = np.concatenate(self._chunk_deleted)
+            expiry = np.concatenate(self._chunk_expiry)
+            head = [c[:n_seal] for c in cols]
+            # an all-deleted buffer still seals physically: the rows are
+            # born tombstoned and the next compaction purges them
+            seg = Segment.seal(
+                head, self.spec, row_start=self.sealed_rows,
+                materialize=self.materialize, expiry=expiry[:n_seal],
+                tombstone_rows=np.flatnonzero(deleted[:n_seal]))
+            remaining = self._buffered - n_seal
+            self._segments = self._segments + (seg,)
+            self._chunks = [[c[n_seal:] for c in cols]] if remaining else []
+            self._chunk_deleted = [deleted[n_seal:]] if remaining else []
+            self._chunk_expiry = [expiry[n_seal:]] if remaining else []
+            self._buffered = remaining
         return seg
 
     # -- compaction --------------------------------------------------------
 
     def compact(self, span: tuple | None = None, *, fanout: int = 4,
-                ratio: float = 4.0) -> Segment | None:
-        """Merge a run of adjacent segments into one re-sorted segment.
+                ratio: float = 4.0, now=None) -> Segment | None:
+        """Merge a run of adjacent segments into one re-sorted segment,
+        purging tombstoned/expired rows.
 
         ``span=(i, j)`` compacts ``segments[i:j]`` explicitly; without it
         the size-tiered policy (:func:`size_tiered_pick`) picks the first
         run of >= ``fanout`` adjacent segments whose compressed sizes are
         within ``ratio`` of each other (LSM size tiering, restricted to
-        adjacent runs because segments must stay contiguous).  Retired
-        segments' result-cache entries are evicted from every registered
-        backend by generation scope; untouched segments keep theirs.
-        Returns the merged segment, or None when no run qualifies.
+        adjacent runs because segments must stay contiguous).
+
+        Safe to run from a background thread while queries and appends
+        continue: the heavy merge runs off-lock against an immutable
+        snapshot, the swap is a single copy-on-write tuple replacement
+        (readers see old or new, never a mix), deletes that landed on the
+        retired segments during the merge are replayed onto the merged
+        segment before it becomes visible, and retired segments' result-
+        cache entries are evicted by generation scope — untouched segments
+        keep theirs.  Returns the merged segment, or None when no run
+        qualifies.
         """
-        if span is None:
-            span = size_tiered_pick(self.segments, fanout=fanout, ratio=ratio)
+        now = self.clock() if now is None else float(now)
+        with self._compact_lock:
+            snapshot = self._segments
             if span is None:
-                return None
-        i, j = span
-        if not 0 <= i < j <= len(self.segments) or j - i < 2:
-            raise ValueError(f"compaction span {span} must cover >= 2 "
-                             f"segments of {len(self.segments)}")
-        retired = self.segments[i:j]
-        merged = compact(retired, self.spec, materialize=self.materialize)
-        self.segments[i:j] = [merged]
+                span = size_tiered_pick(snapshot, fanout=fanout, ratio=ratio)
+                if span is None:
+                    return None
+            i, j = span
+            if not 0 <= i < j <= len(snapshot) or j - i < 2:
+                raise ValueError(f"compaction span {span} must cover >= 2 "
+                                 f"segments of {len(snapshot)}")
+            retired = snapshot[i:j]
+            # dead-set snapshot: deletes racing the off-lock merge are
+            # found by diffing against this and replayed onto the merged
+            # segment before the swap publishes it
+            pre_dead = [frozenset(s.dead_ids(now).tolist()) for s in retired]
+            merged = compact(retired, self.spec,
+                             materialize=self.materialize, now=now)
+            with self._lock:
+                cur = self._segments
+                # seals only append and compactions are single-file, so the
+                # retired run still sits at one spot — locate by identity
+                k = next(idx for idx in range(len(cur))
+                         if cur[idx] is retired[0])
+                late = set()
+                now2 = self.clock()
+                for s, pre in zip(retired, pre_dead):
+                    late.update(set(s.dead_ids(now2).tolist()) - pre)
+                if late:
+                    merged.delete_ids(np.fromiter(late, dtype=np.int64))
+                self._segments = cur[:k] + (merged,) + cur[k + len(retired):]
         for seg in retired:
             invalidate_scope(seg.cache_scope)
         return merged
 
 
 def compact(segments, spec: IndexSpec | None = None, *,
-            materialize: bool = True) -> Segment:
-    """Merge adjacent sealed segments into one re-sorted segment.
+            materialize: bool = True, now=None) -> Segment:
+    """Merge adjacent sealed segments into one re-sorted segment, dropping
+    tombstoned rows (and rows expired at ``now``).
 
-    Rows concatenate in original ingest order and the full pipeline
-    (histogram refresh over the merged distribution, reordering, row sort)
-    re-runs across the whole range — the merged segment compresses like a
-    monolithic build over those rows.  Segments must cover contiguous row
-    ranges (the writer's invariant); violations raise ValueError.
+    Surviving rows concatenate in original ingest order and the full
+    pipeline (histogram refresh over the merged distribution, reordering,
+    row sort) re-runs across the whole range — the merged segment
+    compresses like a monolithic build over those rows, and its ``row_ids``
+    keep their global ingest ids so ids stay stable across purges.  Up to
+    31 dead rows are retained as *fillers* — still tombstoned, purged by
+    the next compaction — whenever that keeps the merged physical row count
+    word-aligned (always possible when the retired span was aligned).  A
+    fully-dead span returns a valid zero-row segment covering the same id
+    span.  Segments must cover contiguous id spans (the writer's
+    invariant); violations raise ValueError.
     """
     segments = list(segments)
     if len(segments) < 2:
@@ -227,17 +429,129 @@ def compact(segments, spec: IndexSpec | None = None, *,
             raise ValueError(
                 f"segments are not adjacent: [{a.row_start}, {a.row_stop}) "
                 f"then [{b.row_start}, {b.row_stop})")
-    if any(s.columns is None for s in segments):
+    live_segs = [s for s in segments if s.n_rows]
+    if any(s.columns is None for s in live_segs):
         raise ValueError(
             "cannot compact segments sealed with keep_columns=False: their "
             "row store was dropped (dist fan-out shards are never compacted)")
-    n_cols = len(segments[0].columns)
-    if any(len(s.columns) != n_cols for s in segments):
+    row_start = segments[0].row_start
+    span_stop = segments[-1].row_stop
+    if not live_segs:
+        return Segment.empty(row_start, span_stop)
+    n_cols = len(live_segs[0].columns)
+    if any(len(s.columns) != n_cols for s in live_segs):
         raise ValueError("segments disagree on column count")
-    cols = [np.concatenate([s.columns[c] for s in segments])
-            for c in range(n_cols)]
-    return Segment.seal(cols, spec, row_start=segments[0].row_start,
-                        materialize=materialize)
+    cat_cols = [np.concatenate([s.columns[c] for s in live_segs])
+                for c in range(n_cols)]
+    cat_ids = np.concatenate([s.ingest_ids() for s in live_segs])
+    cat_exp = np.concatenate(
+        [s.expiry if s.expiry is not None
+         else np.full(s.n_rows, np.inf) for s in live_segs])
+    keep = ~np.concatenate([s.dead_ingest_mask(now) for s in live_segs])
+    # retain dead fillers to keep the merged segment word-aligned (mid-
+    # sequence segments must stay %32); if the span is too dead-poor to
+    # reach alignment it must be the unaligned final segment — leave it
+    need = int(-keep.sum() % ewah.WORD_BITS)
+    dead_pos = np.flatnonzero(~keep)
+    fillers = dead_pos[:need] if need and len(dead_pos) >= need \
+        else dead_pos[:0]
+    keep[fillers] = True
+    kept = np.flatnonzero(keep)
+    if not len(kept):
+        return Segment.empty(row_start, span_stop)
+    return Segment.seal(
+        [c[kept] for c in cat_cols], spec, row_start=row_start,
+        span_stop=span_stop, row_ids=cat_ids[kept], expiry=cat_exp[kept],
+        tombstone_rows=np.searchsorted(kept, fillers),
+        materialize=materialize)
+
+
+class BackgroundCompactor:
+    """Scheduler thread running :func:`size_tiered_pick` compaction off the
+    serving path.
+
+    Every ``interval`` seconds it asks the writer for one size-tiered
+    compaction (``writer.compact()`` — snapshot, off-lock merge, atomic
+    swap).  Transient failures back off exponentially (``backoff`` doubling
+    up to ``max_backoff``) and are counted in ``stats`` rather than killing
+    the thread; the next success resets the cadence.  ``close()`` drains
+    gracefully: it stops the scheduler, joins (an in-flight compaction
+    finishes — the swap is never torn), then runs remaining qualifying
+    tiers to quiescence.
+
+    Usable as a context manager::
+
+        with BackgroundCompactor(writer, interval=0.01):
+            ...ingest/serve...
+    """
+
+    def __init__(self, writer: IndexWriter, *, interval: float = 0.05,
+                 fanout: int = 4, ratio: float = 4.0,
+                 backoff: float = 0.05, max_backoff: float = 2.0,
+                 on_error=None):
+        self.writer = writer
+        self.interval = float(interval)
+        self.fanout = fanout
+        self.ratio = ratio
+        self.backoff = float(backoff)
+        self.max_backoff = float(max_backoff)
+        self.on_error = on_error
+        self.stats = {"cycles": 0, "compactions": 0, "failures": 0}
+        self._stop = threading.Event()
+        self._closed = False
+        self._thread = threading.Thread(
+            target=self._run, name="index-compactor", daemon=True)
+        self._thread.start()
+
+    def _run(self) -> None:
+        delay = self.interval
+        while not self._stop.wait(delay):
+            self.stats["cycles"] += 1
+            try:
+                merged = self.writer.compact(fanout=self.fanout,
+                                             ratio=self.ratio)
+            except Exception as exc:  # transient: back off, keep serving
+                self.stats["failures"] += 1
+                if self.on_error is not None:
+                    self.on_error(exc)
+                delay = min(max(delay * 2, self.backoff), self.max_backoff)
+                continue
+            if merged is not None:
+                self.stats["compactions"] += 1
+            delay = self.interval
+
+    @property
+    def running(self) -> bool:
+        return self._thread.is_alive()
+
+    def close(self, drain: bool = True) -> None:
+        """Stop the scheduler and join; with ``drain`` (default) finish any
+        still-qualifying tiers so the writer closes quiescent.  Idempotent."""
+        if self._closed:
+            return
+        self._stop.set()
+        self._thread.join()
+        self._closed = True
+        if not drain:
+            return
+        while True:
+            try:
+                merged = self.writer.compact(fanout=self.fanout,
+                                             ratio=self.ratio)
+            except Exception as exc:
+                self.stats["failures"] += 1
+                if self.on_error is not None:
+                    self.on_error(exc)
+                return
+            if merged is None:
+                return
+            self.stats["compactions"] += 1
+
+    def __enter__(self) -> "BackgroundCompactor":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
 
 def size_tiered_pick(segments, fanout: int = 4, ratio: float = 4.0):

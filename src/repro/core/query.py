@@ -411,6 +411,31 @@ def _renumber_leaves(plan: Plan) -> None:
     plan.streams = [plan.streams[i] for i in order]
 
 
+def with_live_mask(plan: Plan, live) -> Plan:
+    """AND a segment's live-row stream into a compiled plan root, in place.
+
+    This is the implicit AND-NOT-tombstones rule (docs/query_api.md): a
+    segment with tombstones hands the planner the *complement* of its
+    tombstone bitmap — computed once at delete time via marker-flip
+    ``logical_not``, not per query — so a delete costs exactly **one**
+    extra merge per segment at query time (``count_merges`` +1; an
+    ``AND(root, NOT(tombstones))`` shape would count two).
+
+    The original root is kept as an interior node (the new AND is *not*
+    flattened into an existing root fan-in): backends that memoize interior
+    results keep their sub-plan cache hits across deletes, and only the
+    final AND recomputes when the tombstone set changes.  Leaves are
+    re-canonicalized so equal-signature plans still batch into one padded
+    jax dispatch.
+    """
+    if live is None:
+        return plan
+    plan.streams.append(np.asarray(live, dtype=np.uint32))
+    plan.root = ("and", (plan.root, ("leaf", len(plan.streams) - 1)))
+    _renumber_leaves(plan)
+    return plan
+
+
 def _fanin(op: str, children: list) -> tuple:
     """n-ary node; same-op children flatten into the parent fan-in."""
     flat: list = []

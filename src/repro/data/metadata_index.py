@@ -15,13 +15,19 @@ word-aligned prefix into an immutable segment — no monolithic rebuild per
 batch.  Queries run through the live
 :class:`~repro.core.segment.SegmentedIndex` view (sealed segments through
 the compressed engine, the open tail densely) and return row ids in
-**original ingest order**.  ``compact()`` applies the size-tiered policy
-when many small batches have accumulated.
+**original ingest order**.  The index is a full LSM surface: ``delete``
+tombstones rows (curation removals — e.g. a contaminated source — cost one
+compressed merge, not a rebuild), ``add_batch(..., ttl=)`` expires rows
+lazily (rolling data-freshness windows), and ``compact()`` — or the
+:class:`~repro.core.lifecycle.BackgroundCompactor` behind
+``start_compactor()`` — purges dead rows off the serving path while
+re-sorting with the histogram-aware pipeline.
 
 With ``query_fanout > 1`` the index instead shards over word-aligned row
 ranges (``repro.dist.query_fanout``) and every query fans out, each shard
 executing in the compressed domain and shipping its compressed result
-stream; fan-out row ids are original ingest positions too, so the two modes
+stream; fan-out row ids are original ingest positions too (stable across
+deletes and purges — the shards carry the surviving ids), so the two modes
 answer identically.
 """
 
@@ -30,6 +36,7 @@ from __future__ import annotations
 import numpy as np
 
 from ..core import And, Eq, IndexSpec, IndexWriter
+from ..core.lifecycle import BackgroundCompactor
 
 
 class MetadataIndex:
@@ -46,34 +53,104 @@ class MetadataIndex:
         self.query_fanout = query_fanout
         self.writer = IndexWriter(self.spec, names=self.COLS)
         self._sharded = None
+        self._compactor = None
 
-    def add_batch(self, meta: dict):
+    def add_batch(self, meta: dict, ttl=None):
         """Append one metadata batch and seal its word-aligned prefix into
         an immutable segment (the ``len % 32`` tail rides in the open
-        buffer and is still queryable).  In fan-out mode rows only buffer —
-        queries run through ``.sharded``, so per-batch segment indexes
-        would be wasted work."""
-        self.writer.append({c: np.asarray(meta[c]) for c in self.COLS})
+        buffer and is still queryable).  ``ttl`` (seconds, scalar or
+        per-row) expires the rows lazily — rolling freshness windows for
+        curation data.  In fan-out mode rows only buffer — queries run
+        through ``.sharded``, so per-batch segment indexes would be wasted
+        work."""
+        self.writer.append({c: np.asarray(meta[c]) for c in self.COLS},
+                           ttl=ttl)
         if self.query_fanout <= 1:
             self.writer.seal()
         self._sharded = None
 
+    def delete(self, where: dict | None = None, *, pred=None, row_ids=None,
+               backend: str = "numpy") -> int:
+        """Tombstone rows by equality conditions (``where={column: value}``,
+        compiled to one And(Eq, ...) plan), an arbitrary predicate, or
+        global ingest ids.  Sealed segments absorb the delete as one
+        compressed-domain merge; every later query ANDs the live mask in.
+        Returns the newly-dead row count."""
+        given = [x is not None for x in (where, pred, row_ids)]
+        if sum(given) != 1:
+            raise ValueError(
+                "delete needs exactly one of where=, pred=, or row_ids=")
+        if where is not None:
+            unknown = sorted(set(where) - set(self.COLS))
+            if unknown:
+                raise ValueError(f"unknown columns {unknown}; known: "
+                                 f"{', '.join(self.COLS)}")
+            pred = And(*[Eq(col, int(v)) for col, v in where.items()])
+        n = self.writer.delete(pred, row_ids=row_ids, backend=backend)
+        self._sharded = None
+        return n
+
     def compact(self, **kwargs):
         """Size-tiered compaction of accumulated small segments (see
-        ``IndexWriter.compact``); retired segments' cached query results
-        are evicted by generation scope."""
-        return self.writer.compact(**kwargs)
+        ``IndexWriter.compact``): merges re-sort with the histogram-aware
+        pipeline, tombstoned/expired rows are physically purged, and
+        retired segments' cached query results are evicted by generation
+        scope."""
+        merged = self.writer.compact(**kwargs)
+        if merged is not None:
+            self._sharded = None
+        return merged
+
+    def start_compactor(self, **kwargs) -> BackgroundCompactor:
+        """Run the size-tiered policy on a scheduler thread
+        (:class:`~repro.core.lifecycle.BackgroundCompactor`): ingest never
+        pauses for maintenance.  ``close()`` drains it."""
+        if self._compactor is not None and self._compactor.running:
+            raise ValueError("a background compactor is already running")
+        self._compactor = BackgroundCompactor(self.writer, **kwargs)
+        return self._compactor
+
+    def close(self) -> None:
+        """Drain and stop the background compactor, if one is running."""
+        if self._compactor is not None:
+            self._compactor.close()
+            self._compactor = None
 
     @property
     def n_rows(self) -> int:
         return self.writer.n_rows
 
-    def _cols(self):
-        segs = [s.columns for s in self.writer.segments]
-        buf = self.writer.buffer_columns()
-        parts = [[s[c] for s in segs] + ([buf[c]] if buf else [])
-                 for c in range(len(self.COLS))]
-        return [np.concatenate(p) for p in parts]
+    def _live_cols(self):
+        """(columns, ids, expiry) of the currently-live rows, ingest order
+        — what the fan-out view is (re)built from.  Ids are global ingest
+        positions, so fan-out results stay comparable across deletes and
+        purges; expiry travels so rows TTL-ing out after the build still
+        vanish lazily."""
+        now = self.writer.clock()
+        segs, buf = self.writer.snapshot()
+        col_parts, id_parts, exp_parts = [], [], []
+        for s in segs:
+            keep = ~s.dead_ingest_mask(now)
+            col_parts.append([c[keep] for c in s.columns])
+            id_parts.append(s.ingest_ids()[keep])
+            exp_parts.append(
+                (s.expiry if s.expiry is not None
+                 else np.full(s.n_rows, np.inf))[keep])
+        if buf is not None:
+            bcols, bdel, bexp = buf
+            keep = ~bdel & (bexp > now)
+            start = segs[-1].row_stop if segs else 0
+            col_parts.append([c[keep] for c in bcols])
+            id_parts.append(start + np.flatnonzero(keep))
+            exp_parts.append(bexp[keep])
+        n_cols = len(self.COLS)
+        cols = [np.concatenate([p[c] for p in col_parts])
+                if col_parts else np.zeros(0, dtype=np.int64)
+                for c in range(n_cols)]
+        ids = (np.concatenate(id_parts) if id_parts
+               else np.zeros(0, dtype=np.int64))
+        exp = np.concatenate(exp_parts) if exp_parts else np.zeros(0)
+        return cols, ids, exp
 
     @property
     def index(self):
@@ -93,9 +170,12 @@ class MetadataIndex:
         if self._sharded is None:
             from ..dist.query_fanout import ShardedIndex
 
+            cols, ids, exp = self._live_cols()
             self._sharded = ShardedIndex.build(
-                self._cols(), self.spec, n_shards=self.query_fanout,
-                names=self.COLS)
+                cols, self.spec, n_shards=self.query_fanout,
+                names=self.COLS, row_ids=ids,
+                expiry=exp if np.isfinite(exp).any() else None,
+                clock=self.writer.clock)
         return self._sharded
 
     def query_pred(self, pred, backend: str = "numpy"):

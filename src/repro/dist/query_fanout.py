@@ -67,32 +67,55 @@ class ShardedIndex:
     :class:`~repro.core.segment.SegmentedIndex` engine.
     """
 
-    def __init__(self, shards: list, names=None):
+    def __init__(self, shards: list, names=None, clock=None):
         if not shards:
             raise ValueError("ShardedIndex needs at least one shard")
         self.shards = shards
         self.names = names
-        self._segmented = SegmentedIndex(shards, names=names)
+        self._segmented = SegmentedIndex(shards, names=names, clock=clock)
 
     @staticmethod
-    def build(table_cols, spec=None, n_shards: int = 4,
-              names=None) -> "ShardedIndex":
+    def build(table_cols, spec=None, n_shards: int = 4, names=None,
+              row_ids=None, expiry=None, clock=None) -> "ShardedIndex":
         """Seal one :class:`Segment` per word-aligned row range.
 
         Each shard sorts its own rows (the paper's reordering applies per
         shard — sorted runs never span shard boundaries, which is also what
-        keeps shard builds embarrassingly parallel)."""
+        keeps shard builds embarrassingly parallel).
+
+        ``row_ids`` (ascending global ingest ids, one per row) builds the
+        fan-out over a *purged* row set — rows dropped by deletes/TTLs
+        before the fan-out was built keep every surviving id stable, and
+        the shard id-spans stay contiguous around the gaps.  ``expiry``
+        carries per-row absolute TTL deadlines into the shards (expired
+        rows fold into shard tombstones lazily at query time); pass the
+        ``clock`` those deadlines were issued against (e.g. the feeding
+        writer's) so lazy expiry evaluates "now" consistently."""
         import numpy as np
 
         table_cols = [np.asarray(c) for c in table_cols]
         n_rows = len(table_cols[0])
+        ranges = shard_ranges(n_rows, n_shards)
+        if row_ids is not None:
+            row_ids = np.asarray(row_ids, dtype=np.int64)
+            # span boundaries sit on the first id of each shard, so spans
+            # tile [first_id, last_id + 1) contiguously around purge gaps
+            bounds = [int(row_ids[start]) for start, _ in ranges]
+            bounds.append(int(row_ids[-1]) + 1 if len(row_ids) else 0)
+        else:
+            bounds = [start for start, _ in ranges]
+            bounds.append(ranges[-1][1] if ranges else 0)
         shards = [
             # shards are never compacted: drop the raw-column row store
-            Segment.seal([c[start:stop] for c in table_cols], spec,
-                         row_start=start, keep_columns=False)
-            for start, stop in shard_ranges(n_rows, n_shards)
+            Segment.seal(
+                [c[start:stop] for c in table_cols], spec,
+                row_start=bounds[i], span_stop=bounds[i + 1],
+                keep_columns=False,
+                row_ids=None if row_ids is None else row_ids[start:stop],
+                expiry=None if expiry is None else expiry[start:stop])
+            for i, (start, stop) in enumerate(ranges)
         ]
-        return ShardedIndex(shards, names=names)
+        return ShardedIndex(shards, names=names, clock=clock)
 
     @property
     def n_rows(self) -> int:
@@ -104,6 +127,20 @@ class ShardedIndex:
 
     def size_words(self) -> int:
         return self._segmented.size_words()
+
+    # -- deletes -----------------------------------------------------------
+
+    def delete(self, pred=None, *, row_ids=None, backend: str = "numpy",
+               now=None) -> int:
+        """Tombstone rows across the fan-out (delegated to the segmented
+        engine): each shard ORs its share of the delete into its compressed
+        tombstone bitmap and recomputes its live mask; every later fan-out
+        query ANDs that mask into the shard's plan root — one extra merge
+        per shard, no rebuild, and only result streams still cross the
+        wire.  Returns the newly-dead row count."""
+        return self._segmented.delete(pred, row_ids=row_ids,
+                                      backend=backend, names=self.names,
+                                      now=now)
 
     # -- execution (delegated to the segmented engine) ---------------------
 

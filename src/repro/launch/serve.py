@@ -20,6 +20,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core import BitmapIndex, Eq, IndexSpec, IndexWriter
+from repro.core.lifecycle import BackgroundCompactor
 from repro.dist.sharding import (batch_shardings, cache_shardings,
                                  param_shardings, replicated)
 from repro.launch.mesh import make_cli_mesh
@@ -54,13 +55,24 @@ class SegmentedAdmission:
     serving), so a length class that becomes popular mid-stream promotes
     earlier requests too: admission order is re-derived in flight, never
     frozen at arrival.
+
+    With ``compactor=True`` a
+    :class:`~repro.core.lifecycle.BackgroundCompactor` merges the sealed
+    admission segments off-thread (size-tiered), so sustained ingest never
+    pauses for index maintenance; ``retire(row_ids)`` tombstones served
+    requests (one compressed merge — the compactor purges them later), so
+    the queue drains without rebuilds.  ``close()`` drains the compactor.
     """
 
-    def __init__(self, backend: str = "numpy", seal_rows: int = 256):
+    def __init__(self, backend: str = "numpy", seal_rows: int = 256,
+                 compactor: bool = False, compact_interval: float = 0.02):
         self.spec = IndexSpec(row_order="unsorted", column_order="given")
         self.writer = IndexWriter(self.spec, seal_rows=seal_rows)
         self.backend = backend
         self._lengths: list = []
+        self._compactor = (BackgroundCompactor(self.writer,
+                                               interval=compact_interval)
+                           if compactor else None)
 
     def admit(self, lengths) -> None:
         """Append arriving request lengths to the open segment."""
@@ -68,6 +80,18 @@ class SegmentedAdmission:
         if len(lengths):
             self._lengths.append(lengths)
             self.writer.append([lengths // BIN_WIDTH])
+
+    def retire(self, row_ids) -> int:
+        """Tombstone served requests so later packs skip them; returns the
+        newly-retired count."""
+        return self.writer.delete(row_ids=np.asarray(row_ids,
+                                                     dtype=np.int64))
+
+    def close(self) -> None:
+        """Drain and stop the background compactor, if one is running."""
+        if self._compactor is not None:
+            self._compactor.close()
+            self._compactor = None
 
     @property
     def lengths(self) -> np.ndarray:
@@ -98,7 +122,7 @@ class SegmentedAdmission:
 
 
 def pack_batches(lengths, batch_size, histogram_aware=True, backend="numpy",
-                 query_fanout=0, admission="rebuild"):
+                 query_fanout=0, admission="rebuild", compactor=False):
     """Return list of index-batches; histogram-aware = Gray-Frequency order.
 
     The histogram-aware path runs through the bitmap query plane: a bitmap
@@ -115,11 +139,18 @@ def pack_batches(lengths, batch_size, histogram_aware=True, backend="numpy",
     one-shot rebuild: lengths arrive in waves through
     :class:`SegmentedAdmission` (appends to the open segment, auto-seals,
     sealed segments serve concurrently) and the final ``pack`` re-bins
-    everything in flight.  Batches are identical to the rebuild path — the
-    lifecycle changes *when* index work happens, not the answer.
+    everything in flight.  ``compactor=True`` (segmented mode only) runs a
+    :class:`~repro.core.lifecycle.BackgroundCompactor` during the waves, so
+    packing also exercises concurrent off-thread compaction.  Batches are
+    identical to the rebuild path — the lifecycle changes *when* index work
+    happens, not the answer.
     """
     lengths = np.asarray(lengths)
     n = len(lengths)
+    if compactor and admission != "segmented":
+        raise ValueError(
+            "compactor=True requires admission='segmented' (the rebuild "
+            "path has no writer to compact)")
     if not histogram_aware:
         order = np.arange(n)
         return [order[i : i + batch_size] for i in range(0, n, batch_size)]
@@ -128,11 +159,14 @@ def pack_batches(lengths, batch_size, histogram_aware=True, backend="numpy",
             raise ValueError(
                 "segmented admission and query_fanout are separate "
                 "topologies; pick one")
-        q = SegmentedAdmission(backend=backend)
-        waves = max(1, min(4, n // max(batch_size, 1)))
-        for chunk in np.array_split(lengths, waves):
-            q.admit(chunk)
-        return q.pack(batch_size)
+        q = SegmentedAdmission(backend=backend, compactor=compactor)
+        try:
+            waves = max(1, min(4, n // max(batch_size, 1)))
+            for chunk in np.array_split(lengths, waves):
+                q.admit(chunk)
+            return q.pack(batch_size)
+        finally:
+            q.close()
     if admission != "rebuild":
         raise ValueError(f"unknown admission mode {admission!r}; "
                          "known: rebuild, segmented")
@@ -194,6 +228,10 @@ def main(argv=None):
                          "the open segment, sealed segments serve "
                          "concurrently) instead of rebuilding the "
                          "admission index per pack")
+    ap.add_argument("--compactor", action="store_true",
+                    help="run a background compactor thread over the "
+                         "segmented admission writer while requests stream "
+                         "in (requires --admission segmented)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -218,7 +256,8 @@ def main(argv=None):
             batches = pack_batches(lengths, args.batch, histogram_aware=mode,
                                    backend=args.query_backend,
                                    query_fanout=args.query_fanout,
-                                   admission=args.admission)
+                                   admission=args.admission,
+                                   compactor=args.compactor)
             waste = padding_waste(lengths, batches)
             print(f"packing histogram_aware={mode} "
                   f"(query backend {args.query_backend}, "
@@ -229,7 +268,8 @@ def main(argv=None):
         batches = pack_batches(lengths, args.batch, histogram_aware=True,
                                backend=args.query_backend,
                                query_fanout=args.query_fanout,
-                               admission=args.admission)
+                               admission=args.admission,
+                               compactor=args.compactor)
         step = jax.jit(partial(serve_step, cfg=cfg),
                        in_shardings=(p_sh, tok_sh, c_sh, replicated(mesh)),
                        out_shardings=(tok_sh, c_sh), donate_argnums=(2,))

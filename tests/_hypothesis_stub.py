@@ -4,7 +4,8 @@ conftest.py aliases this module into sys.modules *only* when the real
 package is missing, so environments with hypothesis keep full shrinking /
 database behaviour.  The stub covers exactly the subset this suite uses —
 ``@settings(max_examples=, deadline=)`` over ``@given`` with
-``st.integers(lo, hi)`` and ``st.lists(elem, min_size=, max_size=)`` —
+``st.integers(lo, hi)``, ``st.sampled_from(seq)``, and
+``st.lists(elem, min_size=, max_size=)`` —
 drawing examples from a per-test fixed-seed RNG (seeded by the test name)
 so failures reproduce across runs.  Boundary values (all-lo / all-hi) are
 always tried first, standing in for hypothesis's shrinking toward simple
@@ -35,6 +36,13 @@ def _integers(min_value, max_value):
         lo=min_value, hi=max_value)
 
 
+def _sampled_from(elements):
+    elements = list(elements)
+    return _Strategy(
+        lambda rng: elements[int(rng.integers(0, len(elements)))],
+        lo=elements[0], hi=elements[-1])
+
+
 def _lists(elements, min_size=0, max_size=10):
     def draw(rng):
         n = int(rng.integers(min_size, max_size + 1))
@@ -47,6 +55,7 @@ def _lists(elements, min_size=0, max_size=10):
 strategies = types.ModuleType("hypothesis.strategies")
 strategies.integers = _integers
 strategies.lists = _lists
+strategies.sampled_from = _sampled_from
 
 
 def settings(max_examples: int = 100, deadline=None, **_ignored):

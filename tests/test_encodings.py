@@ -350,3 +350,28 @@ def test_property_backends_agree_on_bitsliced_ranges(card, seed):
         np.testing.assert_array_equal(
             original_rows(idx, p, "numpy"),
             np.flatnonzero(evaluate_mask(p, cols)))
+
+
+def test_binned_refines_without_raw_columns():
+    """Regression for the raw-column-free binned-segment bug: the binned
+    encoding's exact boundary-bin refinement must be self-contained.  The
+    old CSR refinement silently retained 2 x int64/row of base data, which
+    pinned raw values into segments sealed with ``keep_columns=False`` (the
+    fan-out shard mode); the row-value surface is part of the encoding
+    (int32 for int32-range cardinalities) and refines lazily per query."""
+    from repro.core import Segment, SegmentedIndex
+
+    cols = make_cols(1000, [64], seed=11)
+    seg = Segment.seal(cols, spec_for("binned"), keep_columns=False)
+    assert seg.columns is None                  # no raw row store survives
+    enc = seg.index.columns[0].encoding
+    assert isinstance(enc, BinnedEncoding)
+    assert enc._values.dtype == np.int32        # 4x smaller than the CSR
+    si = SegmentedIndex([seg])
+    for pred in [Range(0, 5, 40), Range(0, 7, 7), Eq(0, 13),
+                 In(0, [2, 9, 63]), Range(0, 0, 10**9),
+                 And(Range(0, 2, 50), Not(Eq(0, 30)))]:
+        for backend in ("numpy", "jax"):
+            rows, _ = si.query(pred, backend=backend)
+            np.testing.assert_array_equal(
+                rows, np.flatnonzero(evaluate_mask(pred, cols)))

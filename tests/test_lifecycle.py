@@ -9,15 +9,20 @@ entries), and a hypothesis property test driving random
 append/seal/compact schedules against a monolithic rebuild.
 """
 
+import threading
+import time
+
 import numpy as np
 import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
-from repro.core import (And, BitmapIndex, Eq, In, IndexSpec, IndexWriter,
-                        Not, Or, Range, Segment, SegmentedIndex, compact,
-                        evaluate_mask, size_tiered_pick)
-from repro.core.query import ResultCache, get_backend, invalidate_scope
+from repro.core import (And, BackgroundCompactor, BitmapIndex, Eq, In,
+                        IndexSpec, IndexWriter, Not, Or, Range, Segment,
+                        SegmentedIndex, compact, evaluate_mask,
+                        size_tiered_pick)
+from repro.core.query import (ResultCache, compile_plan, count_merges,
+                              get_backend, invalidate_scope, with_live_mask)
 
 
 def make_table(n, cards, seed):
@@ -382,3 +387,387 @@ def test_random_schedules_match_monolithic_rebuild(chunks, seed):
             mono_rows, _ = mono.query(pred, backend=backend)
             np.testing.assert_array_equal(
                 got, np.sort(mono.row_perm[mono_rows]))
+
+# -- deletes (tombstones) ----------------------------------------------------
+
+
+ALL_ROWS = In(0, [0, 1, 2, 3, 4, 5])                     # whole-domain query
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_delete_matches_dense_oracle(backend):
+    """Deletes by ids and by predicate — over sealed segments and the open
+    buffer — answer every predicate shape like a dense mask oracle."""
+    cols = make_table(300, [5, 9], seed=20)
+    w = IndexWriter(IndexSpec(k=1, row_order="grayfreq"), seal_rows=128)
+    w.append(cols)                                       # 288 sealed + 12 buf
+    alive = np.ones(300, dtype=bool)
+    assert w.delete(row_ids=np.arange(10, 70)) == 60     # sealed
+    assert w.delete(row_ids=np.arange(280, 295)) == 15   # buffered
+    alive[10:70] = alive[280:295] = False
+    assert w.delete(row_ids=np.arange(10, 70)) == 0      # idempotent
+    kill = Eq(0, 3)
+    expect_new = int((evaluate_mask(kill, cols) & alive).sum())
+    assert w.delete(kill, backend=backend) == expect_new
+    alive &= ~evaluate_mask(kill, cols)
+    assert w.live_rows() == alive.sum()
+    for pred in PREDICATES:
+        rows, _ = w.index.query(pred, backend=backend)
+        np.testing.assert_array_equal(
+            rows, np.flatnonzero(evaluate_mask(pred, cols) & alive))
+    assert w.index.count(kill, backend=backend) == 0
+
+
+def test_delete_validation():
+    w = IndexWriter()
+    w.append([np.arange(40) % 4])
+    with pytest.raises(ValueError, match="exactly one"):
+        w.delete()
+    with pytest.raises(ValueError, match="exactly one"):
+        w.delete(Eq(0, 1), row_ids=[1])
+    # deletes stay legal after close (an LSM keeps maintaining closed data)
+    w.close()
+    assert w.delete(row_ids=[0, 1]) == 2
+
+
+def test_delete_costs_one_merge_pre_and_zero_post_compaction():
+    """The acceptance bound: a delete adds exactly ONE merge per segment to
+    every plan (the cached live mask ANDs into the root — an AND(root,
+    NOT(tomb)) shape would count two), and an aligned purge removes even
+    that (no tombstones left -> no live mask -> base cost)."""
+    cols = make_table(256, [4, 6], seed=21)
+    w = IndexWriter(IndexSpec(k=1, row_order="lex"))
+    w.append([c[:128] for c in cols])
+    w.seal()
+    w.append([c[128:] for c in cols])
+    w.seal()
+    pred = And(Eq(0, 1), Eq(1, 2))
+    seg = w.segments[0]
+    base = count_merges(compile_plan(seg.index, pred).root)
+    assert seg.live_stream() is None                     # no deletes yet
+    w.delete(row_ids=np.arange(32))                      # 32 = word-aligned
+    plan = with_live_mask(compile_plan(seg.index, pred), seg.live_stream())
+    assert count_merges(plan.root) == base + 1
+    w.compact(span=(0, 2))
+    merged = w.segments[0]
+    assert merged.tombstones is None                     # aligned: no fillers
+    assert merged.live_stream() is None
+    plan2 = compile_plan(merged.index, pred)
+    assert count_merges(with_live_mask(plan2,
+                                       merged.live_stream()).root) == base
+
+
+# -- TTLs --------------------------------------------------------------------
+
+
+def test_ttl_rows_expire_lazily_and_purge_at_compaction():
+    fake = [1000.0]
+    w = IndexWriter(IndexSpec(k=1, row_order="lex"), clock=lambda: fake[0])
+    cols = make_table(256, [4, 6], seed=22)
+    w.append([c[:128] for c in cols], ttl=50.0)          # deadline 1050
+    w.seal()
+    w.append([c[128:] for c in cols])
+    w.seal()
+    assert w.live_rows() == 256
+    rows, _ = w.index.query(ALL_ROWS)
+    assert len(rows) == 256
+    fake[0] = 1100.0                                     # cross the deadline
+    rows, _ = w.index.query(ALL_ROWS)
+    np.testing.assert_array_equal(rows, np.arange(128, 256))
+    assert w.live_rows() == 128
+    merged = w.compact(span=(0, 2))                      # physical drop
+    assert merged.n_rows == 128 and merged.deleted_count() == 0
+    assert (merged.row_start, merged.row_stop) == (0, 256)  # span preserved
+    rows, _ = w.index.query(ALL_ROWS)
+    np.testing.assert_array_equal(rows, np.arange(128, 256))
+
+
+def test_ttl_per_row_and_buffered_expiry():
+    fake = [0.0]
+    w = IndexWriter(clock=lambda: fake[0])
+    w.append([np.arange(40) % 4], ttl=np.arange(40) + 1.0)  # deadlines 1..40
+    fake[0] = 10.0                                       # rows 0..9 expired
+    rows, _ = w.index.query(ALL_ROWS)
+    np.testing.assert_array_equal(rows, np.arange(10, 40))
+    assert w.live_rows() == 30
+    seg = w.seal()                                       # expiry survives seal
+    assert seg.expiry is not None
+    fake[0] = 20.0
+    rows, _ = w.index.query(ALL_ROWS)
+    np.testing.assert_array_equal(rows, np.arange(20, 40))
+    with pytest.raises(ValueError, match="ttl"):
+        w.append([np.arange(5)], ttl=np.arange(3))
+
+
+# -- purge / id stability ----------------------------------------------------
+
+
+def test_purge_keeps_ids_stable_with_alignment_fillers():
+    """An unaligned purge retains up to 31 dead rows as tombstoned fillers
+    so the merged segment stays word-aligned, and every surviving ingest id
+    answers at its original position."""
+    cols = make_table(256, [5, 7], seed=23)
+    w = IndexWriter(IndexSpec(k=1, row_order="grayfreq"), seal_rows=128)
+    for i in range(0, 256, 128):
+        w.append([c[i : i + 128] for c in cols])
+    assert len(w.segments) == 2
+    dead = np.array([3, 40, 100, 130, 200])
+    w.delete(row_ids=dead)
+    merged = w.compact(span=(0, 2))
+    # 251 live + 5 fillers = 256 physical; the span still covers [0, 256)
+    assert merged.n_rows == 256 and merged.deleted_count() == 5
+    assert (merged.row_start, merged.row_stop) == (0, 256)
+    alive = np.ones(256, dtype=bool)
+    alive[dead] = False
+    for backend in ("numpy", "jax"):
+        for pred in PREDICATES:
+            rows, _ = w.index.query(pred, backend=backend)
+            np.testing.assert_array_equal(
+                rows, np.flatnonzero(evaluate_mask(pred, cols) & alive))
+    # later appends land after the span and deletes by id still resolve
+    w.append([c[:64] for c in make_table(64, [5, 7], seed=24)])
+    w.seal()
+    assert w.segments[1].row_start == 256
+    assert w.delete(row_ids=np.array([3, 40, 150])) == 1   # 3, 40 purged/dead
+
+
+def test_fully_dead_span_compacts_to_zero_row_segment():
+    cols = make_table(192, [4], seed=25)
+    w = IndexWriter(IndexSpec(), seal_rows=64)
+    for i in range(0, 192, 64):                          # 3 x 64
+        w.append([cols[0][i : i + 64]])
+    assert len(w.segments) == 3
+    w.delete(row_ids=np.arange(128))                     # kill segments 0, 1
+    merged = w.compact(span=(0, 2))
+    assert merged.n_rows == 0 and merged.size_words() == 0
+    assert (merged.row_start, merged.row_stop) == (0, 128)
+    for backend in ("numpy", "jax"):
+        rows, _ = w.index.query(ALL_ROWS, backend=backend)
+        np.testing.assert_array_equal(rows, np.arange(128, 192))
+    # the zero-row segment composes: compacting over it works too
+    merged2 = w.compact(span=(0, 2))
+    assert merged2.n_rows == 64
+    assert (merged2.row_start, merged2.row_stop) == (0, 192)
+    rows, _ = w.index.query(ALL_ROWS)
+    np.testing.assert_array_equal(rows, np.arange(128, 192))
+
+
+def test_all_deleted_buffer_seals_fully_tombstoned():
+    w = IndexWriter()
+    w.append([np.arange(40) % 4])
+    assert w.delete(row_ids=np.arange(40)) == 40
+    seg = w.seal()                                       # not None: physical
+    assert seg is not None and seg.n_rows == 32
+    assert seg.deleted_count() == 32
+    rows, _ = w.index.query(ALL_ROWS)
+    assert len(rows) == 0 and w.live_rows() == 0
+
+
+# -- concurrency -------------------------------------------------------------
+
+
+def test_queries_interleave_safely_with_compaction():
+    """Readers racing repeated compactions always see a consistent segment
+    list (old or new, never a mix) and always get exact answers."""
+    cols = make_table(1024, [5, 9], seed=26)
+    w = IndexWriter(IndexSpec(k=1, row_order="lex"), seal_rows=128)
+    for i in range(0, 1024, 128):
+        w.append([c[i : i + 128] for c in cols])
+    assert len(w.segments) == 8
+    w.delete(row_ids=np.arange(100, 150))
+    alive = np.ones(1024, dtype=bool)
+    alive[100:150] = False
+    preds = PREDICATES[:4]
+    want = [np.flatnonzero(evaluate_mask(p, cols) & alive) for p in preds]
+    errors = []
+    stop = threading.Event()
+
+    def reader():
+        while not stop.is_set():
+            for p, exp in zip(preds, want):
+                rows, _ = w.index.query(p)
+                if not np.array_equal(rows, exp):
+                    errors.append((p, rows))
+                    return
+
+    threads = [threading.Thread(target=reader) for _ in range(3)]
+    for t in threads:
+        t.start()
+    try:
+        while len(w.segments) >= 2:
+            w.compact(span=(0, 2))
+    finally:
+        stop.set()
+        for t in threads:
+            t.join()
+    assert not errors
+    assert len(w.segments) == 1
+    for p, exp in zip(preds, want):
+        rows, _ = w.index.query(p)
+        np.testing.assert_array_equal(rows, exp)
+
+
+def test_background_compactor_under_ingest_and_drain():
+    cols = make_table(2048, [4, 6], seed=27)
+    w = IndexWriter(IndexSpec(k=1, row_order="lex"), seal_rows=64)
+    with BackgroundCompactor(w, interval=0.003, fanout=4, ratio=8.0) as bc:
+        for i in range(0, 2048, 64):
+            w.append([c[i : i + 64] for c in cols])
+            if i == 1024:
+                w.delete(row_ids=np.arange(32))
+        time.sleep(0.03)
+    assert not bc.running
+    assert bc.stats["failures"] == 0
+    assert bc.stats["compactions"] >= 1
+    # drained to quiescence: no qualifying tier remains
+    assert size_tiered_pick(w.segments, fanout=4, ratio=8.0) is None
+    bc.close()                                           # idempotent
+    alive = np.ones(2048, dtype=bool)
+    alive[:32] = False
+    for pred in PREDICATES:
+        rows, _ = w.index.query(pred)
+        np.testing.assert_array_equal(
+            rows, np.flatnonzero(evaluate_mask(pred, cols) & alive))
+
+
+def test_background_compactor_retries_after_transient_failures():
+    w = IndexWriter(IndexSpec(), seal_rows=32)
+    for _ in range(8):
+        w.append([np.arange(32) % 4])
+    boom = {"left": 3}
+    real = w.compact
+
+    def flaky(**kw):
+        if boom["left"] > 0:
+            boom["left"] -= 1
+            raise RuntimeError("transient")
+        return real(**kw)
+
+    w.compact = flaky
+    seen = []
+    bc = BackgroundCompactor(w, interval=0.003, backoff=0.003,
+                             max_backoff=0.02, on_error=seen.append)
+    deadline = time.time() + 10.0
+    while bc.stats["compactions"] == 0 and time.time() < deadline:
+        time.sleep(0.003)
+    bc.close()
+    assert bc.stats["failures"] >= 3 and len(seen) >= 3
+    assert all(isinstance(e, RuntimeError) for e in seen)
+    assert bc.stats["compactions"] >= 1 and len(w.segments) < 8
+
+
+# -- acceptance: the full LSM story vs a monolithic build of survivors ------
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_acceptance_lsm_engine_matches_monolithic_survivors(backend):
+    """>= 3 appends + 2 deletes (ids + predicate) + 1 TTL expiry + background
+    compaction answers every predicate bit-identically to a fresh monolithic
+    build over the surviving rows — and the dist fan-out agrees."""
+    fake = [1000.0]
+    n = 1500
+    cols = make_table(n, [6, 11], seed=30)
+    spec = IndexSpec(k=1, row_order="grayfreq")
+    w = IndexWriter(spec, seal_rows=128, clock=lambda: fake[0])
+    alive = np.ones(n, dtype=bool)
+    with BackgroundCompactor(w, interval=0.003, fanout=3, ratio=8.0):
+        w.append([c[:500] for c in cols])                      # append 1
+        w.append([c[500:1000] for c in cols], ttl=50.0)        # append 2
+        w.append([c[1000:] for c in cols])                     # append 3
+        assert w.delete(row_ids=np.arange(40, 140)) == 100     # delete 1
+        alive[40:140] = False
+        kill = Eq(0, 2)
+        expect = int((evaluate_mask(kill, cols) & alive).sum())
+        assert w.delete(kill, backend=backend) == expect       # delete 2
+        alive &= ~evaluate_mask(kill, cols)
+        fake[0] = 1100.0                                       # TTL expiry
+        alive[500:1000] = False
+        time.sleep(0.03)
+    keep = np.flatnonzero(alive)
+    mono = BitmapIndex.build([c[keep] for c in cols], spec)
+    si = w.index
+    assert w.live_rows() == len(keep)
+    for pred in PREDICATES:
+        got, _ = si.query(pred, backend=backend)
+        mono_rows, _ = mono.query(pred, backend=backend)
+        np.testing.assert_array_equal(
+            got, keep[np.sort(mono.row_perm[mono_rows])])
+    # dist fan-out over the survivors (purged id space) answers identically
+    from repro.dist.query_fanout import ShardedIndex
+
+    sh = ShardedIndex.build([c[keep] for c in cols], spec, n_shards=3,
+                            row_ids=keep)
+    for pred in PREDICATES:
+        got, _ = sh.query(pred, backend=backend)
+        want, _ = si.query(pred, backend=backend)
+        np.testing.assert_array_equal(got, want)
+
+
+# -- hypothesis: random LSM schedules vs a dense oracle ----------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.lists(st.sampled_from(["append", "append_ttl", "delete_ids",
+                                 "delete_pred", "expire", "seal", "compact"]),
+                min_size=4, max_size=14),
+       st.integers(0, 10**6))
+def test_random_lsm_schedules_match_dense_oracle(ops, seed):
+    """Any interleaving of append / TTL append / delete / clock advance /
+    seal / compact answers every plan shape identically to a dense numpy
+    oracle over (values, alive-mask, expiry), on both backends."""
+    r = np.random.default_rng(seed)
+    fake = [0.0]
+    w = IndexWriter(IndexSpec(k=1, row_order="lex"), clock=lambda: fake[0])
+    vals: list = []                                      # per-column values
+    alive: list = []                                     # permanent deletes
+    expiry: list = []                                    # absolute deadlines
+    for op in ops:
+        if op in ("append", "append_ttl"):
+            m = int(r.integers(1, 80))
+            chunk = [r.integers(0, c, size=m) for c in (4, 7)]
+            ttl = float(r.integers(1, 20)) if op == "append_ttl" else None
+            w.append(chunk, ttl=ttl)
+            vals.append(chunk)
+            alive.append(np.ones(m, dtype=bool))
+            expiry.append(np.full(m, fake[0] + ttl if ttl else np.inf))
+        elif op == "delete_ids" and vals:
+            n = sum(len(a) for a in alive)
+            ids = np.unique(r.integers(0, n, size=int(r.integers(1, 30))))
+            w.delete(row_ids=ids)
+            flat = np.concatenate(alive)
+            flat[ids] = False
+            alive = [flat]
+            vals = [[np.concatenate([c[i] for c in vals])
+                     for i in range(2)]]
+            vals = [vals[0]]
+            expiry = [np.concatenate(expiry)]
+        elif op == "delete_pred" and vals:
+            v = int(r.integers(0, 4))
+            w.delete(Eq(0, v))
+            flat = np.concatenate(alive)
+            flat[np.concatenate([c[0] for c in vals]) == v] = False
+            alive = [flat]
+            vals = [[np.concatenate([c[i] for c in vals])
+                     for i in range(2)]]
+            expiry = [np.concatenate(expiry)]
+        elif op == "expire":
+            fake[0] += float(r.integers(1, 15))
+        elif op == "seal":
+            w.seal()
+        elif op == "compact" and len(w.segments) >= 2:
+            lo = int(r.integers(0, len(w.segments) - 1))
+            hi = int(r.integers(lo + 2, len(w.segments) + 1))
+            w.compact(span=(lo, hi))
+    if not vals:
+        return
+    cols = [np.concatenate([c[i] for c in vals]) for i in range(2)]
+    mask = np.concatenate(alive) & (np.concatenate(expiry) > fake[0])
+    preds = [Eq(0, 1), In(1, [0, 2, 5]), Range(1, 1, 4),
+             And(Eq(0, 2), Not(Eq(1, 3))), Or(Eq(0, 0), Eq(1, 6)),
+             Not(In(0, [0, 3]))]
+    assert w.live_rows() == mask.sum()
+    for backend in ("numpy", "jax"):
+        for pred, (got, _) in zip(preds,
+                                  w.index.query_many(preds, backend=backend)):
+            np.testing.assert_array_equal(
+                got, np.flatnonzero(evaluate_mask(pred, cols) & mask))

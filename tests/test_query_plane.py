@@ -372,6 +372,34 @@ def test_pack_batches_query_plane():
         pack_batches(lengths, 8, admission="segmented", query_fanout=2)
 
 
+def test_segmented_admission_compactor_and_retire():
+    """The streaming admission queue is a full LSM surface: a background
+    compactor merges sealed admission segments without changing any pack,
+    and retire() tombstones served requests so later packs skip them."""
+    from repro.launch.serve import SegmentedAdmission, pack_batches
+
+    r = np.random.default_rng(3)
+    lengths = r.integers(8, 96, size=300)
+    base = pack_batches(lengths, 16, admission="rebuild")
+    with_compactor = pack_batches(lengths, 16, admission="segmented",
+                                  compactor=True)
+    assert len(base) == len(with_compactor)
+    for a, b in zip(base, with_compactor):
+        np.testing.assert_array_equal(a, b)
+    with pytest.raises(ValueError, match="compactor"):
+        pack_batches(lengths, 16, compactor=True)     # rebuild has no writer
+    q = SegmentedAdmission(seal_rows=64, compactor=True)
+    try:
+        q.admit(lengths[:200])
+        served = np.concatenate(q.pack(16)[:3])
+        assert q.retire(served) == len(served)
+        rest = np.concatenate(q.pack(16))
+        assert not np.intersect1d(rest, served).size
+        assert len(rest) == 200 - len(served)
+    finally:
+        q.close()
+
+
 # -- kernels -----------------------------------------------------------------
 
 
