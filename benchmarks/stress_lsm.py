@@ -21,12 +21,11 @@ Exit status 0 = clean; 1 = an id was dropped/duplicated (details printed).
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
 
 import numpy as np
-
-from repro.launch.serve import SegmentedAdmission
 
 
 def check_pack(queue, batch_size, live_ids, wave):
@@ -54,6 +53,11 @@ def check_pack(queue, batch_size, live_ids, wave):
 
 
 def run(seconds=120.0, seed=0, batch_size=16, wave_rows=96):
+    # imported here so --sanitize can set REPRO_SANITIZE before the
+    # admission queue's locks are created (instrumentation is decided at
+    # lock construction)
+    from repro.launch.serve import SegmentedAdmission
+
     rng = np.random.default_rng(seed)
     queue = SegmentedAdmission(seal_rows=64, compactor=True,
                                compact_interval=0.005)
@@ -93,7 +97,13 @@ def main(argv=None) -> int:
     ap.add_argument("--seconds", type=float, default=120.0)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--sanitize", action="store_true",
+                    help="run with REPRO_SANITIZE=1: every pack result is "
+                         "structurally validated and lock acquisition "
+                         "order is checked for inversions")
     args = ap.parse_args(argv)
+    if args.sanitize:
+        os.environ["REPRO_SANITIZE"] = "1"
     problems, stats = run(seconds=args.seconds, seed=args.seed,
                           batch_size=args.batch)
     print(f"stress_lsm: {stats}")

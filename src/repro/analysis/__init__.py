@@ -1,0 +1,115 @@
+"""`repro.analysis` — invariant lint passes + runtime sanitizers.
+
+Static half (``python -m repro.analysis``): AST passes that machine-check
+the contracts the test suite can only sample — lock discipline around the
+writer/compactor/admission/checkpoint state, plan-node exhaustiveness
+across both query backends, the Pallas kernel ruleset, and API hygiene.
+Zero third-party deps; pure stdlib ``ast``/``tokenize``.
+
+Runtime half (``REPRO_SANITIZE=1``): :func:`repro.analysis.runtime.
+maybe_validate` structural EWAH checks at every ``execute_compressed``
+boundary and :func:`repro.analysis.runtime.make_lock` order-tracked locks
+that raise on acquisition-order inversion.
+
+See ``docs/analysis.md`` for the rule catalog and baseline workflow.
+"""
+
+from __future__ import annotations
+
+import os
+
+from .findings import (Finding, load_baseline, new_findings,
+                       render_findings, save_baseline)
+
+__all__ = ["Finding", "RULES", "load_baseline", "new_findings",
+           "render_findings", "run_analysis", "save_baseline"]
+
+RULES = {
+    "lock/unguarded-read":
+        "read of a `# guarded-by:` field outside its `with <lock>` scope",
+    "lock/unguarded-write":
+        "write of a `# guarded-by:` field outside its `with <lock>` scope",
+    "backend/missing-kind":
+        "a registered backend does not dispatch on a declared plan-node "
+        "kind",
+    "backend/undeclared-kind":
+        "planner code constructs a plan-node kind absent from "
+        "PLAN_NODE_KINDS",
+    "backend/missing-declaration":
+        "PLAN_NODE_KINDS declaration not found",
+    "kernel/traced-branch":
+        "Python if/while/ternary on a traced value inside a kernel body",
+    "kernel/host-callback":
+        "host callback (print/debug.print/io_callback/...) inside a "
+        "kernel body",
+    "kernel/nonstatic-grid":
+        "jnp/jax computation inside a pallas_call grid or BlockSpec shape",
+    "kernel/ceil-div":
+        "nested ceil-div one-liner instead of the two-step padding form",
+    "api/deprecated-shim":
+        "DeprecationWarning (removed compat shim) resurrected in src/",
+    "api/unseeded-random":
+        "test draws from numpy's global RNG instead of a seeded "
+        "default_rng",
+    "budget/unbudgeted-cell":
+        "nightly dryrun cell has no COLLECTIVE_budget.json entry "
+        "(report-only)",
+}
+
+# files the lock pass covers are discovered by annotation, so it is safe
+# (and cheap) to run it over the whole tree
+_BACKEND_FILES = ("src/repro/core/query.py", "src/repro/core/encodings.py")
+
+
+def _iter_py(root, rel):
+    base = os.path.join(root, rel)
+    for dirpath, _dirnames, filenames in os.walk(base):
+        for fn in sorted(filenames):
+            if fn.endswith(".py"):
+                yield os.path.join(dirpath, fn)
+
+
+def run_analysis(root: str = ".") -> list[Finding]:
+    """Run every static pass over the tree at ``root``; returns findings
+    with paths relative to ``root``."""
+    from . import apicheck, backendcheck, kernelcheck, locksafety
+
+    findings: list[Finding] = []
+
+    def rel(path):
+        return os.path.relpath(path, root)
+
+    for path in _iter_py(root, "src/repro"):
+        if os.sep + "analysis" + os.sep in path:
+            continue  # the analyzer does not lint itself
+        with open(path) as fh:
+            source = fh.read()
+        findings += [Finding(f.rule, rel(path), f.line, f.message, f.detail)
+                     for f in locksafety.check_source(path, source)]
+        findings += [Finding(f.rule, rel(path), f.line, f.message, f.detail)
+                     for f in apicheck.check_deprecated_shims(path, source)]
+
+    backend_sources = {}
+    for relpath in _BACKEND_FILES:
+        path = os.path.join(root, relpath)
+        if os.path.exists(path):
+            with open(path) as fh:
+                backend_sources[relpath] = fh.read()
+    findings += backendcheck.check_sources(backend_sources)
+
+    for path in _iter_py(root, "src/repro/kernels"):
+        with open(path) as fh:
+            source = fh.read()
+        findings += [Finding(f.rule, rel(path), f.line, f.message, f.detail)
+                     for f in kernelcheck.check_source(path, source)]
+
+    tests_dir = os.path.join(root, "tests")
+    if os.path.isdir(tests_dir):
+        for path in _iter_py(root, "tests"):
+            with open(path) as fh:
+                source = fh.read()
+            findings += [Finding(f.rule, rel(path), f.line, f.message,
+                                 f.detail)
+                         for f in apicheck.check_unseeded_random(path,
+                                                                 source)]
+    return findings

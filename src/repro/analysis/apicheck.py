@@ -1,0 +1,57 @@
+"""Deprecation / API-hygiene pass.
+
+* ``api/deprecated-shim`` — the bare-kwarg ``search(...)`` and
+  ``_backend=`` compatibility shims were removed after their one-release
+  deprecation window; any ``DeprecationWarning`` reappearing in ``src/``
+  means a shim was resurrected instead of the call sites being fixed.
+  Checked via AST (a comment merely *mentioning* the class is fine).
+* ``api/unseeded-random`` — tests must not draw from numpy's global
+  random state (``np.random.randint`` etc.); use a seeded
+  ``np.random.default_rng(seed)`` so failures replay.  This is a *text*
+  scan, not an AST scan, because some tests build subprocess scripts as
+  string literals (``tests/test_distributed.py``) and the global-state
+  call hides inside the string.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+
+from .findings import Finding
+
+# legacy global-state draws; the seeded constructors are fine
+_UNSEEDED_RE = re.compile(
+    r"np\.random\.(?!default_rng\b|seed\b|RandomState\b|Generator\b)"
+    r"([A-Za-z_]\w*)\s*\(")
+_OK_RE = re.compile(r"analysis-ok\b")
+
+
+def check_deprecated_shims(path: str, source: str) -> list[Finding]:
+    findings = []
+    try:
+        tree = ast.parse(source)
+    except SyntaxError:
+        return findings
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Name) and node.id == "DeprecationWarning":
+            findings.append(Finding(
+                "api/deprecated-shim", path, node.lineno,
+                "DeprecationWarning in src/ — compatibility shims were "
+                "removed, do not resurrect them",
+                detail="DeprecationWarning"))
+    return findings
+
+
+def check_unseeded_random(path: str, source: str) -> list[Finding]:
+    findings = []
+    for lineno, line in enumerate(source.splitlines(), start=1):
+        if _OK_RE.search(line):
+            continue
+        for m in _UNSEEDED_RE.finditer(line):
+            findings.append(Finding(
+                "api/unseeded-random", path, lineno,
+                f"np.random.{m.group(1)} draws from the global RNG; use a "
+                f"seeded np.random.default_rng",
+                detail=f"np.random.{m.group(1)}"))
+    return findings

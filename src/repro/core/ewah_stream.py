@@ -36,13 +36,18 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from .ewah import WORD_BITS, _emit_group, unpack_marker
+from .ewah import (FULL, MAX_CLEAN, MAX_DIRTY, WORD_BITS, _emit_group,
+                   unpack_marker)
 
 __all__ = [
-    "Cursor", "Appender", "EwahStream",
+    "Cursor", "Appender", "EwahStream", "EwahValidationError",
     "logical_op", "logical_many", "logical_not", "concat_streams",
     "and_popcount",
 ]
+
+
+class EwahValidationError(ValueError):
+    """An EWAH stream violated the structural/canonical-form contract."""
 
 
 class Cursor:
@@ -199,6 +204,83 @@ class EwahStream:
 
     def to_rows(self) -> np.ndarray:
         return np.flatnonzero(self.to_bits())
+
+    def validate(self, *, dense_check: bool = True, origin: str = ""):
+        """Assert the stream is well-formed *canonical* EWAH; returns self.
+
+        Structural: begins with a marker, every marker's verbatim words
+        are present, decoded word count equals ``ceil(n_rows / 32)`` (the
+        word-alignment contract).  Canonical form: verbatim words are
+        never 0x0/0xFFFFFFFF, adjacent same-type clean runs are coalesced
+        (the ``concat_streams`` seam contract), dirty runs are split
+        across markers only at MAX_DIRTY, clean runs only at MAX_CLEAN,
+        and the empty marker appears only as the sole word of a zero-row
+        stream.  With ``dense_check`` the compressed-domain :meth:`count`
+        must agree with the dense popcount.
+
+        The ``REPRO_SANITIZE=1`` backends call this on every
+        ``execute_compressed`` result; raises
+        :class:`EwahValidationError`.
+        """
+
+        def fail(i, msg):
+            where = f"{origin}: " if origin else ""
+            raise EwahValidationError(
+                f"{where}word {i}: {msg} "
+                f"(n_rows={self.n_rows}, {len(self.data)} stream words)")
+
+        data = np.asarray(self.data)
+        if data.ndim != 1 or data.dtype != np.uint32:
+            fail(0, f"stream must be 1-D uint32, got "
+                    f"{data.dtype} ndim={data.ndim}")
+        n_words = self.n_words
+        if len(data) == 0:
+            if n_words:
+                fail(0, "empty stream for a non-empty bitmap")
+            return self
+
+        total = 0
+        i = 0
+        prev = None  # (ctype, n_clean, n_dirty) of the previous marker
+        while i < len(data):
+            ctype, n_clean, n_dirty = unpack_marker(data[i])
+            if n_clean == 0 and n_dirty == 0:
+                if len(data) > 1 or n_words or int(data[i]) != 0:
+                    fail(i, "empty marker inside a stream (legal only as "
+                            "the sole word of a zero-row stream)")
+            if prev is not None:
+                p_type, p_clean, p_dirty = prev
+                if p_dirty == 0 and p_clean < MAX_CLEAN:
+                    if n_clean > 0 and p_clean > 0 and ctype == p_type:
+                        fail(i, f"uncoalesced clean runs (type {ctype}: "
+                                f"{p_clean} then {n_clean})")
+                    if n_clean == 0 and n_dirty > 0:
+                        fail(i, "dirty run split from a marker with spare "
+                                "capacity")
+                elif 0 < p_dirty < MAX_DIRTY and n_clean == 0 and n_dirty:
+                    fail(i, f"dirty continuation after a non-full dirty "
+                            f"run ({p_dirty} < {MAX_DIRTY})")
+            if i + 1 + n_dirty > len(data):
+                fail(i, f"marker claims {n_dirty} verbatim words, only "
+                        f"{len(data) - i - 1} remain")
+            seg = data[i + 1 : i + 1 + n_dirty]
+            if n_dirty and bool(((seg == 0) | (seg == FULL)).any()):
+                j = int(np.flatnonzero((seg == 0) | (seg == FULL))[0])
+                fail(i + 1 + j, "verbatim word is 0x0/0xFFFFFFFF (must be "
+                                "encoded as a clean run)")
+            total += n_clean + n_dirty
+            prev = (ctype, n_clean, n_dirty)
+            i += 1 + n_dirty
+        if total != n_words:
+            fail(len(data) - 1,
+                 f"stream decodes {total} words, bitmap needs {n_words}")
+        if dense_check and self.n_rows:
+            dense = int(self.to_bits().sum())
+            got = self.count()
+            if dense != got:
+                fail(0, f"compressed popcount {got} != dense popcount "
+                        f"{dense}")
+        return self
 
     def count(self) -> int:
         """Popcount of the valid bits (rows matching), compressed-domain:

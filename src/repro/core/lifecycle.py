@@ -58,6 +58,7 @@ import time
 import numpy as np
 
 from . import ewah
+from ..analysis.runtime import make_lock
 from .query import compile_plan, evaluate_mask, get_backend, invalidate_scope
 from .segment import Segment, SegmentedIndex
 from .strategies import IndexSpec
@@ -95,47 +96,53 @@ class IndexWriter:
         self.seal_rows = seal_rows
         self.materialize = materialize
         self.clock = clock
-        self._segments: tuple[Segment, ...] = ()
-        self._chunks: list[list[np.ndarray]] = []   # buffered per-append chunks
-        self._chunk_deleted: list[np.ndarray] = []  # parallel bool masks
-        self._chunk_expiry: list[np.ndarray] = []   # parallel float deadlines
-        self._buffered = 0
-        self._n_cols: int | None = None
-        self._closed = False
+        self._segments: tuple[Segment, ...] = ()    # guarded-by: _lock
+        self._chunks: list[list[np.ndarray]] = []   # guarded-by: _lock
+        self._chunk_deleted: list[np.ndarray] = []  # guarded-by: _lock
+        self._chunk_expiry: list[np.ndarray] = []   # guarded-by: _lock
+        self._buffered = 0                          # guarded-by: _lock
+        self._n_cols: int | None = None             # guarded-by: _lock
+        self._closed = False                        # guarded-by: _lock
         # _lock serializes mutations and makes (segments, buffer) snapshots
         # atomic; _compact_lock keeps compactions single-file so the
         # background compactor and a foreground compact() can't both retire
-        # the same run
-        self._lock = threading.RLock()
-        self._compact_lock = threading.Lock()
+        # the same run.  Acquisition order is _compact_lock before _lock,
+        # never the reverse (the REPRO_SANITIZE lock-order sanitizer
+        # enforces it at runtime).
+        self._lock = make_lock("writer._lock")
+        self._compact_lock = make_lock("writer._compact_lock",
+                                       reentrant=False)
 
     # -- state -------------------------------------------------------------
 
     @property
     def closed(self) -> bool:
-        return self._closed
+        return self._closed  # analysis-ok: lock/unguarded-read atomic flag read
 
     @property
     def buffered_rows(self) -> int:
-        return self._buffered
+        return self._buffered  # analysis-ok: lock/unguarded-read atomic int read
 
     @property
     def n_rows(self) -> int:
         """Ingest ids issued so far (sealed span + buffer); purged rows do
         not shrink this — ids are stable forever."""
-        return self.sealed_rows + self._buffered
+        # under _lock: a concurrent seal moves rows from the buffer into a
+        # segment, and an unlocked sum could count them twice or miss them
+        with self._lock:
+            return self.sealed_rows + self._buffered
 
     @property
     def sealed_rows(self) -> int:
         """End of the sealed ingest-id span (the buffer's first id)."""
-        segs = self._segments
+        segs = self._segments  # analysis-ok: lock/unguarded-read atomic tuple-reference snapshot
         return segs[-1].row_stop if segs else 0
 
     @property
     def segments(self) -> list:
         """Snapshot of the sealed segments (copy-on-write: compaction swaps
         the underlying tuple by reference, it never mutates this list)."""
-        return list(self._segments)
+        return list(self._segments)  # analysis-ok: lock/unguarded-read atomic tuple-reference snapshot
 
     def snapshot(self):
         """Atomic (segments, buffer) view for the query surface; ``buffer``
@@ -162,10 +169,11 @@ class IndexWriter:
     @property
     def index(self) -> SegmentedIndex:
         """The live query surface: sealed segments + the open buffer."""
-        return SegmentedIndex(self._segments, names=self.names, writer=self)
+        return SegmentedIndex(self._segments, names=self.names,  # analysis-ok: lock/unguarded-read atomic tuple-reference snapshot
+                              writer=self)
 
     def size_words(self) -> int:
-        return sum(s.size_words() for s in self._segments)
+        return sum(s.size_words() for s in self._segments)  # analysis-ok: lock/unguarded-read atomic tuple-reference snapshot
 
     def live_rows(self, now=None) -> int:
         """Rows a whole-domain query would return right now."""
@@ -196,7 +204,7 @@ class IndexWriter:
         from queries lazily (folded into tombstones at query time) and are
         physically dropped at compaction.
         """
-        if self._closed:
+        if self._closed:  # analysis-ok: lock/unguarded-read fast-fail; rechecked under _lock below
             raise ValueError("writer is closed; no further appends")
         if isinstance(rows, dict):
             if self.names is None:
@@ -212,13 +220,6 @@ class IndexWriter:
         n = len(chunk[0])
         if any(len(c) != n for c in chunk):
             raise ValueError("append columns must be equal length")
-        if self._n_cols is None:
-            self._n_cols = len(chunk)
-        elif len(chunk) != self._n_cols:
-            raise ValueError(
-                f"append has {len(chunk)} columns, writer has {self._n_cols}")
-        if n == 0:
-            return
         expiry = np.full(n, np.inf)
         if ttl is not None:
             t = np.asarray(ttl, dtype=np.float64)
@@ -229,11 +230,24 @@ class IndexWriter:
                     f"ttl has {len(t)} entries for {n} rows")
             expiry = self.clock() + t
         with self._lock:
+            # closed/column-count checks belong under the lock: two racing
+            # first appends could otherwise both set _n_cols, and a close
+            # racing the buffer push could seal without these rows
+            if self._closed:
+                raise ValueError("writer is closed; no further appends")
+            if self._n_cols is None:
+                self._n_cols = len(chunk)
+            elif len(chunk) != self._n_cols:
+                raise ValueError(
+                    f"append has {len(chunk)} columns, writer has "
+                    f"{self._n_cols}")
+            if n == 0:
+                return
             self._chunks.append(chunk)
             self._chunk_deleted.append(np.zeros(n, dtype=bool))
             self._chunk_expiry.append(expiry)
-            self._buffered += n
-        if self.seal_rows is not None and self._buffered >= self.seal_rows:
+            buffered = self._buffered = self._buffered + n
+        if self.seal_rows is not None and buffered >= self.seal_rows:
             self.seal()
 
     # -- delete ------------------------------------------------------------
@@ -284,7 +298,7 @@ class IndexWriter:
                 deleted += self._mark_buffer_deleted(np.flatnonzero(mask))
         return deleted
 
-    def _mark_buffer_deleted(self, positions) -> int:
+    def _mark_buffer_deleted(self, positions) -> int:  # holds-lock: _lock
         """Flip buffer-local positions dead; returns newly-dead count.
         Caller holds ``_lock``."""
         positions = np.asarray(positions, dtype=np.int64)
@@ -308,21 +322,26 @@ class IndexWriter:
         immutable segment; the ``% 32`` tail rows stay buffered (they seal
         with the next segment, or with :meth:`close`).  Returns the new
         :class:`Segment`, or None when fewer than 32 rows are buffered."""
-        if self._closed:
-            raise ValueError("writer is closed")
-        n_seal = (self._buffered // ewah.WORD_BITS) * ewah.WORD_BITS
-        return self._seal_rows(n_seal) if n_seal else None
+        # the whole seal holds _lock (reentrant with _seal_rows): computing
+        # n_seal from an unlocked read lets two concurrent seals both claim
+        # the same word-aligned prefix and drive _buffered negative
+        with self._lock:
+            if self._closed:
+                raise ValueError("writer is closed")
+            n_seal = (self._buffered // ewah.WORD_BITS) * ewah.WORD_BITS
+            return self._seal_rows(n_seal) if n_seal else None
 
     def close(self) -> Segment | None:
         """Seal everything left in the buffer — the final segment may be
         non-word-aligned because nothing concatenates after it — and close
         the writer for appends.  Deletes and compaction remain legal.
         Returns the final segment (None if nothing buffered)."""
-        if self._closed:
-            raise ValueError("writer is already closed")
-        seg = self._seal_rows(self._buffered) if self._buffered else None
-        self._closed = True
-        return seg
+        with self._lock:
+            if self._closed:
+                raise ValueError("writer is already closed")
+            seg = self._seal_rows(self._buffered) if self._buffered else None
+            self._closed = True
+            return seg
 
     def _seal_rows(self, n_seal: int) -> Segment:
         with self._lock:
@@ -370,7 +389,7 @@ class IndexWriter:
         """
         now = self.clock() if now is None else float(now)
         with self._compact_lock:
-            snapshot = self._segments
+            snapshot = self._segments  # analysis-ok: lock/unguarded-read intentional off-_lock snapshot; the swap below re-locates under _lock
             if span is None:
                 span = size_tiered_pick(snapshot, fanout=fanout, ratio=ratio)
                 if span is None:
@@ -496,28 +515,42 @@ class BackgroundCompactor:
         self.backoff = float(backoff)
         self.max_backoff = float(max_backoff)
         self.on_error = on_error
-        self.stats = {"cycles": 0, "compactions": 0, "failures": 0}
+        self._stats_lock = make_lock("compactor._stats_lock",
+                                     reentrant=False)
+        self._stats = {"cycles": 0,            # guarded-by: _stats_lock
+                       "compactions": 0, "failures": 0}
         self._stop = threading.Event()
         self._closed = False
         self._thread = threading.Thread(
             target=self._run, name="index-compactor", daemon=True)
         self._thread.start()
 
+    @property
+    def stats(self) -> dict:
+        """Point-in-time counter snapshot (the scheduler thread keeps
+        mutating the live dict; callers get a consistent copy)."""
+        with self._stats_lock:
+            return dict(self._stats)
+
+    def _bump(self, key: str) -> None:
+        with self._stats_lock:
+            self._stats[key] += 1
+
     def _run(self) -> None:
         delay = self.interval
         while not self._stop.wait(delay):
-            self.stats["cycles"] += 1
+            self._bump("cycles")
             try:
                 merged = self.writer.compact(fanout=self.fanout,
                                              ratio=self.ratio)
             except Exception as exc:  # transient: back off, keep serving
-                self.stats["failures"] += 1
+                self._bump("failures")
                 if self.on_error is not None:
                     self.on_error(exc)
                 delay = min(max(delay * 2, self.backoff), self.max_backoff)
                 continue
             if merged is not None:
-                self.stats["compactions"] += 1
+                self._bump("compactions")
             delay = self.interval
 
     @property
@@ -539,13 +572,13 @@ class BackgroundCompactor:
                 merged = self.writer.compact(fanout=self.fanout,
                                              ratio=self.ratio)
             except Exception as exc:
-                self.stats["failures"] += 1
+                self._bump("failures")
                 if self.on_error is not None:
                     self.on_error(exc)
                 return
             if merged is None:
                 return
-            self.stats["compactions"] += 1
+            self._bump("compactions")
 
     def __enter__(self) -> "BackgroundCompactor":
         return self

@@ -52,6 +52,7 @@ import numpy as np
 
 from . import ewah, ewah_stream
 from .ewah_stream import EwahStream
+from ..analysis.runtime import make_lock, maybe_validate
 
 # ---------------------------------------------------------------------------
 # Predicate algebra
@@ -162,6 +163,12 @@ class Not(Predicate):
 #                                  SEMANTIC — the bit-sliced comparison
 #                                  circuit — so it is never cost-reordered
 
+# The closed set of plan-node kinds.  Every backend must dispatch on all
+# of these (repro.analysis enforces it: `backend/missing-kind`), and any
+# new kind constructed below must be added here (`backend/undeclared-kind`)
+# *and* handled by every backend before it ships.
+PLAN_NODE_KINDS = ("leaf", "not", "and", "or", "fold")
+
 
 @dataclass
 class Plan:
@@ -217,6 +224,8 @@ def count_merges(node) -> int:
         return 1 + count_merges(node[1])
     if kind == "fold":
         return len(node[2]) - 1 + sum(count_merges(c) for c in node[2])
+    if kind not in ("and", "or"):
+        raise ValueError(f"unknown plan-node kind {kind!r}")
     return len(node[1]) - 1 + sum(count_merges(c) for c in node[1])
 
 
@@ -541,37 +550,45 @@ class ResultCache:
     ``("segment", generation)``): :meth:`invalidate` evicts exactly one
     scope's entries, the segmented-index compaction contract — appends
     never touch cached state (open-buffer rows are not cached) and
-    compaction evicts only the retired segments' entries."""
+    compaction evicts only the retired segments' entries.
+
+    Thread-safe: backend instances are shared process-wide through
+    ``get_backend``, and the serving path queries from worker threads
+    while the background compactor invalidates retired scopes.  ``_mutex``
+    is reentrant (``stats`` reads ``hit_rate`` under it)."""
 
     def __init__(self, maxsize: int = 256):
         self.maxsize = maxsize
-        self._data: OrderedDict = OrderedDict()  # key -> (value, scope)
-        self._scope_keys: dict = {}              # scope -> set of keys
-        self.hits = 0
-        self.misses = 0
-        self.invalidated = 0
+        self._mutex = make_lock("result_cache")
+        self._data: OrderedDict = OrderedDict()  # guarded-by: _mutex
+        self._scope_keys: dict = {}              # guarded-by: _mutex
+        self.hits = 0                            # guarded-by: _mutex
+        self.misses = 0                          # guarded-by: _mutex
+        self.invalidated = 0                     # guarded-by: _mutex
 
     def get(self, key):
-        hit = self._data.get(key)
-        if hit is not None:
-            self._data.move_to_end(key)
-            self.hits += 1
-            return hit[0]
-        self.misses += 1
-        return None
+        with self._mutex:
+            hit = self._data.get(key)
+            if hit is not None:
+                self._data.move_to_end(key)
+                self.hits += 1
+                return hit[0]
+            self.misses += 1
+            return None
 
     def put(self, key, value, scope=None) -> None:
-        old = self._data.pop(key, None)
-        if old is not None:
-            self._unscope(key, old[1])
-        self._data[key] = (value, scope)
-        if scope is not None:
-            self._scope_keys.setdefault(scope, set()).add(key)
-        while len(self._data) > self.maxsize:
-            k, (_, s) = self._data.popitem(last=False)
-            self._unscope(k, s)
+        with self._mutex:
+            old = self._data.pop(key, None)
+            if old is not None:
+                self._unscope(key, old[1])
+            self._data[key] = (value, scope)
+            if scope is not None:
+                self._scope_keys.setdefault(scope, set()).add(key)
+            while len(self._data) > self.maxsize:
+                k, (_, s) = self._data.popitem(last=False)
+                self._unscope(k, s)
 
-    def _unscope(self, key, scope) -> None:
+    def _unscope(self, key, scope) -> None:  # holds-lock: _mutex
         if scope is not None:
             keys = self._scope_keys.get(scope)
             if keys is not None:
@@ -581,36 +598,42 @@ class ResultCache:
 
     def invalidate(self, scope) -> int:
         """Evict every entry tagged with ``scope``; returns the count."""
-        keys = self._scope_keys.pop(scope, None)
-        if not keys:
-            return 0
-        for k in keys:
-            self._data.pop(k, None)
-        self.invalidated += len(keys)
-        return len(keys)
+        with self._mutex:
+            keys = self._scope_keys.pop(scope, None)
+            if not keys:
+                return 0
+            for k in keys:
+                self._data.pop(k, None)
+            self.invalidated += len(keys)
+            return len(keys)
 
     def scopes(self) -> tuple:
         """The scopes with live entries (diagnostics / tests)."""
-        return tuple(self._scope_keys)
+        with self._mutex:
+            return tuple(self._scope_keys)
 
     def clear(self) -> None:
-        self._data.clear()
-        self._scope_keys.clear()
-        self.hits = 0
-        self.misses = 0
-        self.invalidated = 0
+        with self._mutex:
+            self._data.clear()
+            self._scope_keys.clear()
+            self.hits = 0
+            self.misses = 0
+            self.invalidated = 0
 
     def __len__(self) -> int:
-        return len(self._data)
+        with self._mutex:
+            return len(self._data)
 
     @property
     def hit_rate(self) -> float:
-        return self.hits / max(self.hits + self.misses, 1)
+        with self._mutex:
+            return self.hits / max(self.hits + self.misses, 1)
 
     def stats(self) -> dict:
-        return {"hits": self.hits, "misses": self.misses,
-                "entries": len(self._data), "hit_rate": self.hit_rate,
-                "invalidated": self.invalidated}
+        with self._mutex:
+            return {"hits": self.hits, "misses": self.misses,
+                    "entries": len(self._data), "hit_rate": self.hit_rate,
+                    "invalidated": self.invalidated}
 
 
 # ---------------------------------------------------------------------------
@@ -713,8 +736,10 @@ class NumpyBackend:
         stream, scanned = self._eval_cached(plan, plan.root, digests)
         if plan.root[0] == "leaf":
             scanned = len(stream)
-        return EwahStream(np.asarray(stream, dtype=np.uint32), plan.n_rows,
-                          int(scanned))
+        return maybe_validate(
+            EwahStream(np.asarray(stream, dtype=np.uint32), plan.n_rows,
+                       int(scanned)),
+            origin="NumpyBackend.execute_compressed")
 
     def execute_compressed_many(self, plans):
         return [self.execute_compressed(p) for p in plans]
@@ -736,6 +761,8 @@ class NumpyBackend:
                 scanned += sc
             return r, scanned
         op, children = node
+        if op not in ("and", "or"):
+            raise ValueError(f"unknown plan-node kind {op!r}")
         parts = [eval_child(c) for c in children]
         scanned = sum(sc for _, sc in parts)
         r, sc = ewah_stream.logical_many([s for s, _ in parts], op)
@@ -816,7 +843,9 @@ class JaxBackend:
             keys[i] = _node_key(p.root, digests, p.n_rows)
             hit = self.result_cache.get(keys[i])
             if hit is not None:
-                out[i] = EwahStream(hit.data, hit.n_rows, 0)  # cache: no scan
+                out[i] = maybe_validate(
+                    EwahStream(hit.data, hit.n_rows, 0),  # cache: no scan
+                    origin="JaxBackend.execute_compressed_many[cache]")
             else:
                 todo.append(i)
         for (root, cap, n_rows), idxs in self._group(plans, todo).items():
@@ -834,7 +863,9 @@ class JaxBackend:
                 words = np.asarray(fn(jnp.asarray(batch), jnp.asarray(lengths)))
                 enc = [ewah.compress(words[b]) for b in range(len(idxs))]
             for b, i in enumerate(idxs):
-                res = EwahStream(enc[b], n_rows, plans[i].leaf_words())
+                res = maybe_validate(
+                    EwahStream(enc[b], n_rows, plans[i].leaf_words()),
+                    origin="JaxBackend.execute_compressed_many")
                 self.result_cache.put(keys[i], res, plans[i].scope)
                 out[i] = res
         return out
@@ -894,6 +925,8 @@ class JaxBackend:
                         use_kernel=use_kernel, interpret=interpret)
                     return folded.reshape(parts.shape[1:])
                 op, children = node
+                if op not in ("and", "or"):
+                    raise ValueError(f"unknown plan-node kind {op!r}")
                 parts = jnp.stack([ev(c) for c in children])  # (p, B, W)
                 folded = kops.wordops_fold(
                     parts.reshape(parts.shape[0], -1), op,

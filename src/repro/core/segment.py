@@ -67,6 +67,7 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from . import ewah, ewah_stream
+from ..analysis.runtime import maybe_validate
 from .bitmap_index import BitmapIndex
 from .ewah_stream import EwahStream, concat_streams
 from .query import compile_plan, evaluate_mask, get_backend, with_live_mask
@@ -532,6 +533,7 @@ class SegmentedIndex:
                 scanned += len(words)
             merged = (EwahStream(concat_streams(parts), total_rows, scanned)
                       if parts else EwahStream(empty, 0, 0))
+            maybe_validate(merged, origin="SegmentedIndex._execute_many")
             out.append((per_seg, buf_rows, merged))
         return segs, buf, out
 

@@ -108,7 +108,7 @@ def save(directory: str, step: int, tree, extra=None, keep: int | None = None):
     _write(directory, step, _snapshot(tree), extra, keep)
 
 
-_pending: list[threading.Thread] = []
+_pending: list[threading.Thread] = []  # guarded-by: _pending_lock
 _pending_lock = threading.Lock()
 
 

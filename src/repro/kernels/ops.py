@@ -149,7 +149,8 @@ def recompress_batch(words, capacity, use_kernel=True, interpret=None):
         lanes = 128
         from .recompress import ROW_TILE as RT
         n = B * W
-        rows_p = -(-(-(-n // lanes)) // RT) * RT
+        rows = -(-n // lanes)
+        rows_p = -(-rows // RT) * RT
         w2 = (jnp.zeros((rows_p * lanes,), jnp.uint32)
               .at[:n].set(words.reshape(-1)).reshape(rows_p, lanes))
         p2 = (jnp.zeros((rows_p * lanes,), jnp.uint32)
@@ -182,7 +183,8 @@ def gray(x, inverse=False, use_kernel=True, interpret=None):
     interpret = not _on_tpu() if interpret is None else interpret
     lanes = 128
     from .gray import ROW_TILE as RT
-    rows_p = -(-(-(-n // lanes)) // RT) * RT
+    rows = -(-n // lanes)
+    rows_p = -(-rows // RT) * RT
     x2 = jnp.zeros((rows_p * lanes,), jnp.uint32).at[:n].set(x).reshape(rows_p, lanes)
     out = gray_kernel(x2, inverse, interpret=interpret)
     return out.reshape(-1)[:n]

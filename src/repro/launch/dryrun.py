@@ -25,6 +25,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.findings import Finding, render_findings
 from repro.configs import list_archs
 from repro.dist.sharding import (batch_shardings, cache_shardings,
                                  grad_shardings_zero, opt_shardings,
@@ -346,6 +347,7 @@ def main():
 
     os.makedirs(args.out, exist_ok=True)
     results = []
+    unbudgeted = []  # report-only, rendered in repro.analysis finding format
     for mp in meshes:
         for arch in archs:
             for shape in shapes:
@@ -368,6 +370,13 @@ def main():
                                     f"(limit {rec['budget']['total_bytes_limit']:.3e}B)")
                         elif verdict == "unbudgeted":
                             note = "  (no budget entry)"
+                            unbudgeted.append(Finding(
+                                rule="budget/unbudgeted-cell",
+                                path=args.budget, line=1,
+                                message=("cell compiled but has no "
+                                         "collective-bytes ceiling; accept "
+                                         "with --update-budget"),
+                                detail=budget_key(rec)))
                     print(f"[ok]   {tag}  lower={rec['lower_s']}s "
                           f"compile={rec['compile_s']}s "
                           f"flops={rec['cost'].get('flops'):.3e} "
@@ -389,6 +398,10 @@ def main():
     n_over = sum(r.get("budget_status") == "exceeded" for r in results)
     n_unbudgeted = sum(r.get("budget_status") == "unbudgeted"
                        for r in results)
+    if unbudgeted:
+        # same file:line [rule] shape the static analyzer prints, so the
+        # nightly log is greppable with one pattern; still report-only
+        print("\n".join(render_findings(unbudgeted)), flush=True)
     msg = f"done: {len(results)} cells, {n_err} errors"
     if budget is not None:
         msg += (f", {n_over} over collective budget "

@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.runtime import make_lock
 from repro.configs import get_config
 from repro.core import BitmapIndex, Eq, IndexSpec, IndexWriter
 from repro.core.lifecycle import BackgroundCompactor
@@ -69,8 +70,13 @@ class SegmentedAdmission:
         self.spec = IndexSpec(row_order="unsorted", column_order="given")
         self.writer = IndexWriter(self.spec, seal_rows=seal_rows)
         self.backend = backend
-        self._lengths: list = []
-        self._compactor = (BackgroundCompactor(self.writer,
+        # _lock keeps the shadow length store and the writer append one
+        # atomic admission (a pack between the two would otherwise see a
+        # row the histogram doesn't, and index row ids would drift from
+        # _lengths positions); ordered before the writer's own lock
+        self._lock = make_lock("admission._lock")
+        self._lengths: list = []       # guarded-by: _lock
+        self._compactor = (BackgroundCompactor(self.writer,  # guarded-by: _lock
                                                interval=compact_interval)
                            if compactor else None)
 
@@ -78,8 +84,9 @@ class SegmentedAdmission:
         """Append arriving request lengths to the open segment."""
         lengths = np.asarray(lengths)
         if len(lengths):
-            self._lengths.append(lengths)
-            self.writer.append([lengths // BIN_WIDTH])
+            with self._lock:
+                self._lengths.append(lengths)
+                self.writer.append([lengths // BIN_WIDTH])
 
     def retire(self, row_ids) -> int:
         """Tombstone served requests so later packs skip them; returns the
@@ -89,14 +96,18 @@ class SegmentedAdmission:
 
     def close(self) -> None:
         """Drain and stop the background compactor, if one is running."""
-        if self._compactor is not None:
-            self._compactor.close()
-            self._compactor = None
+        with self._lock:
+            comp, self._compactor = self._compactor, None
+        if comp is not None:
+            # off-lock: draining joins the scheduler thread, whose
+            # compactions must not wait on an admission-held lock
+            comp.close()
 
     @property
     def lengths(self) -> np.ndarray:
-        return (np.concatenate(self._lengths) if self._lengths
-                else np.zeros(0, dtype=np.int64))
+        with self._lock:
+            return (np.concatenate(self._lengths) if self._lengths
+                    else np.zeros(0, dtype=np.int64))
 
     @property
     def n_segments(self) -> int:
@@ -106,14 +117,19 @@ class SegmentedAdmission:
         """Re-bin the whole queue and emit index-batches (one Eq(bin) plan
         per bin over sealed segments + the open buffer, bins in descending
         frequency, lengths ascending within a bin)."""
-        lengths = self.lengths
-        if not len(lengths):
-            return []
-        bins = lengths // BIN_WIDTH
-        uniq, counts = np.unique(bins, return_counts=True)
-        by_freq = uniq[np.lexsort((uniq, -counts))]
-        results = self.writer.index.query_many(
-            [Eq(0, int(b)) for b in by_freq], backend=self.backend)
+        # _lock spans the lengths snapshot AND the index query: an admit
+        # landing between the two would return row ids the snapshot does
+        # not cover yet (lengths[rows] IndexError / wrong-bin placement)
+        with self._lock:
+            lengths = (np.concatenate(self._lengths) if self._lengths
+                       else np.zeros(0, dtype=np.int64))
+            if not len(lengths):
+                return []
+            bins = lengths // BIN_WIDTH
+            uniq, counts = np.unique(bins, return_counts=True)
+            by_freq = uniq[np.lexsort((uniq, -counts))]
+            results = self.writer.index.query_many(
+                [Eq(0, int(b)) for b in by_freq], backend=self.backend)
         order = np.concatenate(
             [rows[np.argsort(lengths[rows], kind="stable")]
              for rows, _ in results])

@@ -1,0 +1,346 @@
+"""The analyzer's own tests: each rule fires exactly once on a seeded
+fixture violation, the real tree is clean, and the PR-6 bug class
+(unlocked delete loop) is re-introduced by mutation and caught."""
+
+import json
+import textwrap
+
+import pytest
+
+from repro.analysis import (Finding, load_baseline, new_findings,
+                            run_analysis, save_baseline)
+from repro.analysis import apicheck, backendcheck, kernelcheck, locksafety
+
+
+def rules_of(findings):
+    return [f.rule for f in findings]
+
+
+# ---------------------------------------------------------------------------
+# lock-discipline pass
+# ---------------------------------------------------------------------------
+
+LOCK_FIXTURE = textwrap.dedent("""
+    import threading
+
+    class Writer:
+        def __init__(self):
+            self._lock = threading.RLock()
+            self._segments = ()   # guarded-by: _lock
+            self._buffered = 0    # guarded-by: _lock
+
+        def ok(self):
+            with self._lock:
+                self._buffered += 1
+                return self._segments
+
+        def bad_write(self):
+            self._buffered += 1
+""")
+
+
+def test_lock_unguarded_write_fires_once():
+    findings = locksafety.check_source("fix.py", LOCK_FIXTURE)
+    assert rules_of(findings) == ["lock/unguarded-write"]
+    (f,) = findings
+    assert "_buffered" in f.message and f.path == "fix.py"
+
+
+def test_lock_unguarded_read_fires_once():
+    src = LOCK_FIXTURE + textwrap.dedent("""
+        def peek(self):
+            return self._segments
+    """).replace("\n", "\n    ")  # indent into the class body
+    findings = locksafety.check_source("fix.py", src)
+    assert rules_of(findings) == ["lock/unguarded-write",
+                                  "lock/unguarded-read"]
+
+
+def test_lock_suppression_and_holds_lock():
+    src = textwrap.dedent("""
+        class W:
+            def __init__(self):
+                self._lock = object()
+                self._state = {}  # guarded-by: _lock
+
+            def racy_but_ok(self):
+                return self._state  # analysis-ok: lock/unguarded-read snapshot
+
+            def helper(self):  # holds-lock: _lock
+                self._state["k"] = 1
+    """)
+    assert locksafety.check_source("fix.py", src) == []
+
+
+def test_lock_nested_function_loses_lock():
+    src = textwrap.dedent("""
+        class W:
+            def __init__(self):
+                self._lock = object()
+                self._state = {}  # guarded-by: _lock
+
+            def spawn(self):
+                with self._lock:
+                    def worker():
+                        return self._state
+                    return worker
+    """)
+    findings = locksafety.check_source("fix.py", src)
+    assert rules_of(findings) == ["lock/unguarded-read"]
+
+
+def test_module_level_guard():
+    src = textwrap.dedent("""
+        import threading
+        _pending = []  # guarded-by: _pending_lock
+        _pending_lock = threading.Lock()
+
+        def good():
+            with _pending_lock:
+                _pending.append(1)
+
+        def bad():
+            _pending.append(1)
+    """)
+    findings = locksafety.check_source("fix.py", src)
+    assert rules_of(findings) == ["lock/unguarded-read"]
+    assert "_pending" in findings[0].message
+
+
+def test_pr6_style_unlocked_delete_loop_is_flagged():
+    """Re-introduce the PR-6 bug class: strip every `with self._lock:`
+    from the real lifecycle module and the lock pass must flag the
+    delete loop's `_segments` traversal (among others)."""
+    with open("src/repro/core/lifecycle.py") as fh:
+        src = fh.read()
+    assert "with self._lock:" in src
+    mutated = src.replace("with self._lock:", "if True:  # lock removed")
+    findings = locksafety.check_source("lifecycle.py", mutated)
+    assert any(f.rule.startswith("lock/") and "_segments" in f.message
+               for f in findings)
+    assert any(f.rule == "lock/unguarded-write" for f in findings)
+    # ... and the unmutated module is clean
+    assert locksafety.check_source("lifecycle.py", src) == []
+
+
+# ---------------------------------------------------------------------------
+# backend-exhaustiveness pass
+# ---------------------------------------------------------------------------
+
+BACKEND_FIXTURE = textwrap.dedent("""
+    PLAN_NODE_KINDS = ("leaf", "not", "fold")
+
+    def build(i):
+        return ("fold", ("and",), (("leaf", i), ("not", ("leaf", i))))
+
+    def register_backend(name):
+        def deco(cls):
+            return cls
+        return deco
+
+    @register_backend("good")
+    class GoodBackend:
+        def run(self, node):
+            if node[0] == "leaf":
+                return 1
+            if node[0] == "not":
+                return 2
+            if node[0] != "fold":
+                raise ValueError(node[0])
+            return 3
+
+    @register_backend("partial")
+    class MissingFold:
+        def run(self, node):
+            if node[0] in ("leaf", "not"):
+                return 0
+            raise ValueError(node[0])
+""")
+
+
+def test_backend_missing_dispatch_arm_fires_once():
+    findings = backendcheck.check_sources({"fix.py": BACKEND_FIXTURE})
+    assert rules_of(findings) == ["backend/missing-kind"]
+    (f,) = findings
+    assert f.detail == "MissingFold:fold"
+
+
+def test_backend_undeclared_kind():
+    src = BACKEND_FIXTURE.replace(
+        'PLAN_NODE_KINDS = ("leaf", "not", "fold")',
+        'PLAN_NODE_KINDS = ("leaf", "not", "fold", "xor")')
+    src += textwrap.dedent("""
+        def sneak(c):
+            return ("shiny", (c,))
+    """)
+    findings = backendcheck.check_sources({"fix.py": src})
+    by_rule = {f.rule: f for f in findings}
+    assert by_rule["backend/undeclared-kind"].detail == "shiny"
+    # "xor" declared but dispatched nowhere -> both backends flagged
+    missing = [f.detail for f in findings
+               if f.rule == "backend/missing-kind"]
+    assert set(missing) == {"GoodBackend:xor", "MissingFold:xor",
+                            "MissingFold:fold"}
+
+
+def test_backend_missing_declaration():
+    findings = backendcheck.check_sources({"fix.py": "x = 1\n"})
+    assert rules_of(findings) == ["backend/missing-declaration"]
+
+
+def test_backend_real_tree_exhaustive():
+    findings = backendcheck.check_files(
+        ["src/repro/core/query.py", "src/repro/core/encodings.py"])
+    assert findings == []
+
+
+# ---------------------------------------------------------------------------
+# kernel pass
+# ---------------------------------------------------------------------------
+
+KERNEL_FIXTURE = textwrap.dedent("""
+    import jax.numpy as jnp
+
+    def good_kernel(x_ref, o_ref):
+        v = x_ref[...]
+        o_ref[...] = jnp.where(v > 0, v, 0)
+
+    def bad_kernel(x_ref, o_ref):
+        v = x_ref[0, 0]
+        if v > 0:
+            o_ref[...] = v
+""")
+
+
+def test_kernel_traced_branch_fires_once():
+    findings = kernelcheck.check_source("fix.py", KERNEL_FIXTURE)
+    assert rules_of(findings) == ["kernel/traced-branch"]
+    (f,) = findings
+    assert "bad_kernel" in f.detail and "v" in f.detail
+
+
+def test_kernel_host_callback():
+    src = textwrap.dedent("""
+        def chatty_kernel(x_ref, o_ref):
+            print("step")
+            o_ref[...] = x_ref[...]
+    """)
+    findings = kernelcheck.check_source("fix.py", src)
+    assert rules_of(findings) == ["kernel/host-callback"]
+
+
+def test_kernel_nonstatic_grid():
+    src = textwrap.dedent("""
+        import jax.numpy as jnp
+        import jax.experimental.pallas as pl
+
+        def launch(x):
+            grid = (jnp.ceil(x.shape[0] / 8),)
+            return pl.pallas_call(lambda r, o: None, grid=grid)(x)
+    """)
+    findings = kernelcheck.check_source("fix.py", src)
+    assert rules_of(findings) == ["kernel/nonstatic-grid"]
+
+
+def test_kernel_ceil_div_nested_flagged_two_step_clean():
+    nested = "rows_p = -(-(-(-n // lanes)) // RT) * RT\n"
+    findings = kernelcheck.check_source("fix.py", nested)
+    assert rules_of(findings) == ["kernel/ceil-div"]
+    two_step = "rows = -(-n // lanes)\nrows_p = -(-rows // RT) * RT\n"
+    assert kernelcheck.check_source("fix.py", two_step) == []
+
+
+def test_kernel_static_kwonly_param_not_tainted():
+    src = textwrap.dedent("""
+        def k(x_ref, o_ref, *, flip):
+            if flip:
+                o_ref[...] = ~x_ref[...]
+            else:
+                o_ref[...] = x_ref[...]
+    """)
+    assert kernelcheck.check_source("fix.py", src) == []
+
+
+# ---------------------------------------------------------------------------
+# api pass
+# ---------------------------------------------------------------------------
+
+def test_api_deprecated_shim_fires_once():
+    src = textwrap.dedent("""
+        import warnings
+
+        def search(*args, **kwargs):
+            warnings.warn("legacy", DeprecationWarning, stacklevel=2)
+    """)
+    findings = apicheck.check_deprecated_shims("fix.py", src)
+    assert rules_of(findings) == ["api/deprecated-shim"]
+    # a comment mentioning the class is NOT a resurrection
+    assert apicheck.check_deprecated_shims(
+        "fix.py", "# DeprecationWarning was removed here\n") == []
+
+
+def test_api_unseeded_random_fires_in_string_literals():
+    src = 'SCRIPT = r"""\nx = np.random.randint(0, 10, 4)\n"""\n'  # analysis-ok: api/unseeded-random fixture input
+    findings = apicheck.check_unseeded_random("fix.py", src)
+    assert rules_of(findings) == ["api/unseeded-random"]
+    seeded = "rng = np.random.default_rng(0)\nx = rng.integers(0, 10)\n"
+    assert apicheck.check_unseeded_random("fix.py", seeded) == []
+
+
+# ---------------------------------------------------------------------------
+# whole-tree run + baseline protocol
+# ---------------------------------------------------------------------------
+
+def test_clean_tree_zero_findings():
+    assert run_analysis(".") == []
+
+
+def test_baseline_roundtrip_and_new_finding_detection(tmp_path):
+    old = [Finding("lock/unguarded-read", "a.py", 10, "m", "W:_x:read"),
+           Finding("lock/unguarded-read", "a.py", 44, "m", "W:_x:read")]
+    path = tmp_path / "baseline.json"
+    save_baseline(path, old)
+    baseline = load_baseline(path)
+    assert sum(baseline.values()) == 2
+    # same findings at shifted lines stay suppressed; a third is new
+    drifted = [Finding("lock/unguarded-read", "a.py", 12, "m", "W:_x:read"),
+               Finding("lock/unguarded-read", "a.py", 46, "m", "W:_x:read")]
+    assert new_findings(drifted, baseline) == []
+    extra = drifted + [Finding("lock/unguarded-write", "a.py", 50, "m",
+                               "W:_y:write")]
+    fresh = new_findings(extra, baseline)
+    assert [f.rule for f in fresh] == ["lock/unguarded-write"]
+    assert json.loads(path.read_text())  # file is real JSON
+
+
+def test_cli_clean_and_list_rules(capsys):
+    from repro.analysis.__main__ import main
+
+    assert main(["--root", "."]) == 0
+    assert "clean" in capsys.readouterr().out
+    assert main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    assert "lock/unguarded-write" in out and "kernel/traced-branch" in out
+
+
+def test_cli_flags_new_finding(tmp_path, capsys):
+    bad = tmp_path / "src" / "repro" / "kernels"
+    bad.mkdir(parents=True)
+    (tmp_path / "src" / "repro" / "core").mkdir()
+    (bad / "k.py").write_text(
+        "def k(x_ref, o_ref):\n"
+        "    v = x_ref[0]\n"
+        "    if v:\n"
+        "        o_ref[0] = v\n")
+    (tmp_path / "src" / "repro" / "core" / "query.py").write_text(
+        'PLAN_NODE_KINDS = ()\n')
+    from repro.analysis.__main__ import main
+
+    assert main(["--root", str(tmp_path)]) == 1
+    out = capsys.readouterr().out
+    assert "kernel/traced-branch" in out
+    # baselining the violation makes the run clean again
+    base = tmp_path / "b.json"
+    assert main(["--root", str(tmp_path), "--baseline", str(base),
+                 "--update-baseline"]) == 0
+    assert main(["--root", str(tmp_path), "--baseline", str(base)]) == 0

@@ -59,11 +59,12 @@ with ShardingCtx(mesh):
         "data" in str(l.sharding.spec) for l in m_leaves)
 
     b_sh = batch_shardings(mesh, cfg, "train")
+    rng = np.random.default_rng(0)
     batch = {
         "inputs": jax.device_put(
-            np.random.randint(0, cfg.vocab_size, (8, 32)), b_sh["inputs"]),
+            rng.integers(0, cfg.vocab_size, (8, 32)), b_sh["inputs"]),
         "labels": jax.device_put(
-            np.random.randint(0, cfg.vocab_size, (8, 32)), b_sh["labels"]),
+            rng.integers(0, cfg.vocab_size, (8, 32)), b_sh["labels"]),
     }
     opt_cfg = OptConfig(total_steps=10, warmup_steps=1)
     step = jax.jit(partial(train_step, cfg=cfg, opt_cfg=opt_cfg,

@@ -17,6 +17,7 @@ import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
+from repro.analysis.runtime import sanitized
 from repro.core import (And, BackgroundCompactor, BitmapIndex, Eq, In,
                         IndexSpec, IndexWriter, Not, Or, Range, Segment,
                         SegmentedIndex, compact, evaluate_mask,
@@ -381,12 +382,13 @@ def test_random_schedules_match_monolithic_rebuild(chunks, seed):
     preds = [Eq(0, 1), In(1, [0, 2, 5]), Range(1, 1, 4),
              And(Eq(0, 2), Not(Eq(1, 3))), Or(Eq(0, 0), Eq(1, 6)),
              Not(In(0, [0, 3]))]
-    for backend in ("numpy", "jax"):
-        for pred, (got, _) in zip(preds,
-                                  si.query_many(preds, backend=backend)):
-            mono_rows, _ = mono.query(pred, backend=backend)
-            np.testing.assert_array_equal(
-                got, np.sort(mono.row_perm[mono_rows]))
+    with sanitized():  # every compressed result structurally validated
+        for backend in ("numpy", "jax"):
+            for pred, (got, _) in zip(preds,
+                                      si.query_many(preds, backend=backend)):
+                mono_rows, _ = mono.query(pred, backend=backend)
+                np.testing.assert_array_equal(
+                    got, np.sort(mono.row_perm[mono_rows]))
 
 # -- deletes (tombstones) ----------------------------------------------------
 
@@ -766,8 +768,9 @@ def test_random_lsm_schedules_match_dense_oracle(ops, seed):
              And(Eq(0, 2), Not(Eq(1, 3))), Or(Eq(0, 0), Eq(1, 6)),
              Not(In(0, [0, 3]))]
     assert w.live_rows() == mask.sum()
-    for backend in ("numpy", "jax"):
-        for pred, (got, _) in zip(preds,
-                                  w.index.query_many(preds, backend=backend)):
-            np.testing.assert_array_equal(
-                got, np.flatnonzero(evaluate_mask(pred, cols) & mask))
+    with sanitized():  # every compressed result structurally validated
+        for backend in ("numpy", "jax"):
+            for pred, (got, _) in zip(
+                    preds, w.index.query_many(preds, backend=backend)):
+                np.testing.assert_array_equal(
+                    got, np.flatnonzero(evaluate_mask(pred, cols) & mask))

@@ -1,0 +1,366 @@
+"""REPRO_SANITIZE runtime sanitizers: EwahStream.validate structural
+rules, the execute_compressed boundary hook, and the lock-order wrapper.
+
+Also the lock regression tests for the races the static pass surfaced:
+concurrent seal/append buffer accounting, admission admit/retire/pack,
+and compactor stats snapshots.
+"""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.analysis.runtime import (LockOrderError, make_lock,
+                                    maybe_validate, reset_order_graph,
+                                    sanitize_enabled, sanitized)
+from repro.core import And, BitmapIndex, Eq, IndexSpec, IndexWriter, ewah
+from repro.core import ewah_stream as es
+from repro.core.ewah import FULL, MAX_CLEAN, MAX_DIRTY, make_marker
+from repro.core.ewah_stream import EwahStream, EwahValidationError
+from repro.core.lifecycle import BackgroundCompactor
+from repro.core.query import compile_plan, get_backend
+from repro.launch.serve import SegmentedAdmission
+
+
+# ---------------------------------------------------------------------------
+# EwahStream.validate
+# ---------------------------------------------------------------------------
+
+
+def compress_random(n_rows, seed=0, p_clean=0.6):
+    rng = np.random.default_rng(seed)
+    n_words = -(-n_rows // 32)
+    words = rng.integers(1, FULL, n_words, dtype=np.uint32)
+    clean = rng.random(n_words) < p_clean
+    words[clean] = np.where(rng.random(int(clean.sum())) < 0.5,
+                            0, FULL).astype(np.uint32)
+    return ewah.compress(words), words
+
+
+@pytest.mark.parametrize("n_rows", [0, 1, 31, 32, 33, 4096, 100_003])
+def test_validate_accepts_compressor_output(n_rows):
+    stream, _ = compress_random(n_rows, seed=n_rows)
+    EwahStream(stream, n_rows).validate(origin="test")
+
+
+def test_validate_accepts_overflow_chains():
+    n = (MAX_CLEAN + 7) * 32
+    EwahStream(ewah.compress(np.zeros(MAX_CLEAN + 7, np.uint32)),
+               n).validate()
+    rng = np.random.default_rng(1)
+    dirty = rng.integers(1, FULL, MAX_DIRTY + 9, dtype=np.uint32)
+    EwahStream(ewah.compress(dirty), len(dirty) * 32).validate()
+
+
+def test_validate_accepts_stream_ops_output():
+    a, _ = compress_random(2048, seed=2)
+    b, _ = compress_random(2048, seed=3)
+    for op in ("and", "or", "xor"):
+        r, _ = es.logical_op(a, b, op)
+        EwahStream(r, 2048).validate()
+    r, _ = es.logical_not(a, 64)
+    EwahStream(r, 2048).validate()
+    c = es.concat_streams([a, b])
+    EwahStream(c, 4096).validate()
+
+
+def test_validate_malformed_marker():
+    bad = EwahStream(np.array([make_marker(0, 0, 3)], np.uint32), 96)
+    with pytest.raises(EwahValidationError, match="3 verbatim words"):
+        bad.validate()
+
+
+def test_validate_clean_word_encoded_dirty():
+    bad = EwahStream(
+        np.array([make_marker(0, 1, 1), 0], np.uint32), 64)
+    with pytest.raises(EwahValidationError, match="clean run"):
+        bad.validate()
+
+
+def test_validate_uncoalesced_clean_runs():
+    bad = EwahStream(np.array([make_marker(1, 1, 0),
+                               make_marker(1, 1, 0)], np.uint32), 64)
+    with pytest.raises(EwahValidationError, match="uncoalesced"):
+        bad.validate()
+
+
+def test_validate_split_dirty_run():
+    w = np.uint32(0xDEADBEEF)
+    bad = EwahStream(np.array([make_marker(0, 0, 1), w,
+                               make_marker(0, 0, 1), w], np.uint32), 64)
+    with pytest.raises(EwahValidationError, match="dirty continuation"):
+        bad.validate()
+
+
+def test_validate_length_mismatch():
+    s = ewah.compress(np.zeros(4, np.uint32))
+    with pytest.raises(EwahValidationError, match="decodes 4 words"):
+        EwahStream(s, 10 * 32).validate()
+
+
+def test_validate_popcount_cross_check():
+    """count() (compressed-domain cursor walk) and to_bits().sum() (dense
+    decompress) are independent implementations; the dense check catches
+    one of them drifting."""
+    stream, _ = compress_random(1024, seed=5)
+    EwahStream(stream, 1024).validate(dense_check=True)
+
+    class Lying(EwahStream):
+        def count(self):
+            return super().count() + 1
+
+    with pytest.raises(EwahValidationError, match="popcount"):
+        Lying(stream, 1024).validate(dense_check=True)
+
+
+# ---------------------------------------------------------------------------
+# sanitize gating + the execute_compressed boundary
+# ---------------------------------------------------------------------------
+
+
+def test_sanitized_context_flips_env(monkeypatch):
+    monkeypatch.delenv("REPRO_SANITIZE", raising=False)
+    assert not sanitize_enabled()
+    with sanitized():
+        assert sanitize_enabled()
+        with sanitized(False):
+            assert not sanitize_enabled()
+        assert sanitize_enabled()
+    assert not sanitize_enabled()
+
+
+def test_maybe_validate_gates_on_env():
+    bad = EwahStream(np.array([make_marker(0, 0, 3)], np.uint32), 96)
+    with sanitized(False):
+        assert maybe_validate(bad, origin="off") is bad  # no-op when off
+    with sanitized():
+        with pytest.raises(EwahValidationError, match="boundary"):
+            maybe_validate(bad, origin="boundary")
+
+
+def _small_plan(seed=0):
+    rng = np.random.default_rng(seed)
+    cols = [rng.integers(0, 6, 512), rng.integers(0, 9, 512)]
+    idx = BitmapIndex.build(cols, IndexSpec(k=2))
+    return compile_plan(idx, And(Eq(0, 1), Eq(1, 2)))
+
+
+def test_numpy_boundary_catches_corrupt_merge(monkeypatch):
+    from repro.core import query as q
+
+    plan = _small_plan()
+    be = q.NumpyBackend(cache_size=4)
+    bad = np.array([make_marker(0, 0, 3)], np.uint32)
+    monkeypatch.setattr(q.ewah_stream, "logical_many",
+                        lambda streams, op="and": (bad, 1))
+    # sanitizer off: the corrupt stream sails through the boundary
+    with sanitized(False):
+        assert len(be.execute_compressed(plan).data) == 1
+    be.result_cache.clear()
+    with sanitized():
+        with pytest.raises(EwahValidationError,
+                           match="NumpyBackend.execute_compressed"):
+            be.execute_compressed(plan)
+
+
+def test_backends_validate_clean_results_under_sanitize():
+    plan = _small_plan(seed=1)
+    with sanitized():
+        for name in ("numpy", "jax"):
+            be = get_backend(name)
+            stream = be.execute_compressed(plan)
+            stream.validate(origin=name)  # idempotent re-check
+            assert stream.n_rows == plan.n_rows
+
+
+# ---------------------------------------------------------------------------
+# lock-order sanitizer
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture
+def fresh_graph():
+    reset_order_graph()
+    yield
+    reset_order_graph()
+
+
+def test_make_lock_plain_when_off(monkeypatch):
+    monkeypatch.delenv("REPRO_SANITIZE", raising=False)
+    lock = make_lock("plain")
+    assert isinstance(lock, type(threading.RLock()))
+
+
+def test_lock_order_inversion_raises(fresh_graph):
+    with sanitized():
+        a = make_lock("order.a")
+        b = make_lock("order.b")
+        with a:
+            with b:
+                pass
+        with pytest.raises(LockOrderError, match="order.a"):
+            with b:
+                with a:
+                    pass
+
+
+def test_lock_order_consistent_and_reentrant_ok(fresh_graph):
+    with sanitized():
+        a = make_lock("order.a")
+        b = make_lock("order.b")
+        c = make_lock("order.c", reentrant=False)
+        for _ in range(3):
+            with a:
+                with a:  # reentrant re-acquire adds no edge
+                    with b:
+                        with c:
+                            pass
+
+
+def test_lock_order_transitive_cycle(fresh_graph):
+    with sanitized():
+        a, b, c = (make_lock(f"tri.{n}") for n in "abc")
+        with a:
+            with b:
+                pass
+        with b:
+            with c:
+                pass
+        with pytest.raises(LockOrderError):
+            with c:
+                with a:
+                    pass
+
+
+def test_lifecycle_locks_order_clean_under_sanitize(fresh_graph):
+    """Writer/compactor/admission churn acquires writer._lock,
+    writer._compact_lock, admission._lock and result_cache in a single
+    consistent order — the instrumented run must not raise."""
+    rng = np.random.default_rng(7)
+    with sanitized():
+        q = SegmentedAdmission(seal_rows=64, compactor=True,
+                               compact_interval=0.005)
+        try:
+            for wave in range(12):
+                q.admit(rng.integers(8, 96, 48))
+                q.pack(16)
+                if wave % 3 == 2:
+                    live = q.writer.n_rows
+                    q.retire(rng.integers(0, max(live, 1), 8))
+        finally:
+            q.close()
+        assert q.writer.compact() or True  # drain remaining tiers
+
+
+# ---------------------------------------------------------------------------
+# satellite regressions: the races the lock pass surfaced
+# ---------------------------------------------------------------------------
+
+
+def test_concurrent_seal_append_conserves_buffer():
+    """Two racing seals computing n_seal from an unlocked read used to
+    drive _buffered negative (rows double-sealed)."""
+    for trial in range(8):
+        w = IndexWriter(IndexSpec())
+        stop = threading.Event()
+        errors = []
+
+        def hammer_seal():
+            while not stop.is_set():
+                try:
+                    w.seal()
+                except Exception as exc:  # noqa: BLE001
+                    errors.append(exc)
+                    return
+
+        threads = [threading.Thread(target=hammer_seal) for _ in range(3)]
+        for t in threads:
+            t.start()
+        total = 0
+        rng = np.random.default_rng(trial)
+        for _ in range(60):
+            n = int(rng.integers(1, 70))
+            w.append([rng.integers(0, 5, n)])
+            total += n
+            assert w.buffered_rows >= 0
+        stop.set()
+        for t in threads:
+            t.join()
+        assert not errors
+        w.seal()
+        assert w.buffered_rows >= 0
+        assert w.n_rows == total
+        assert sum(s.n_rows for s in w.segments) + w.buffered_rows == total
+
+
+def test_append_close_race_never_loses_rows():
+    """close() now seals and flips _closed under _lock, so an append
+    either lands before the final seal or raises writer-closed."""
+    for trial in range(12):
+        w = IndexWriter(IndexSpec())
+        accepted = []
+        barrier = threading.Barrier(2)
+
+        def appender():
+            rng = np.random.default_rng(trial)
+            barrier.wait()
+            for k in range(40):
+                n = int(rng.integers(1, 20))
+                try:
+                    w.append([rng.integers(0, 4, n)])
+                except ValueError:
+                    return
+                accepted.append(n)
+
+        t = threading.Thread(target=appender)
+        t.start()
+        barrier.wait()
+        w.close()
+        t.join()
+        sealed = sum(s.n_rows for s in w.segments)
+        leftover = w.buffered_rows
+        assert sealed + leftover == sum(accepted)
+
+
+def test_admission_concurrent_admit_retire_pack():
+    """_lengths and the writer's rows must stay in lockstep under
+    concurrent admits (the shadow store was unguarded)."""
+    q = SegmentedAdmission(seal_rows=128)
+    errors = []
+
+    def worker(seed):
+        rng = np.random.default_rng(seed)
+        try:
+            for _ in range(25):
+                q.admit(rng.integers(8, 96, rng.integers(1, 12)))
+                q.pack(8)
+        except Exception as exc:  # noqa: BLE001
+            errors.append(exc)
+
+    threads = [threading.Thread(target=worker, args=(s,)) for s in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    assert len(q.lengths) == q.writer.n_rows
+    batches = q.pack(16)
+    packed = np.concatenate(batches) if batches else np.zeros(0, int)
+    assert len(packed) == q.writer.live_rows()
+
+
+def test_compactor_stats_snapshot_consistent():
+    w = IndexWriter(IndexSpec(), seal_rows=64)
+    rng = np.random.default_rng(3)
+    with BackgroundCompactor(w, interval=0.002) as comp:
+        for _ in range(30):
+            w.append([rng.integers(0, 6, 48)])
+            snap = comp.stats
+            assert set(snap) == {"cycles", "compactions", "failures"}
+            assert all(isinstance(v, int) and v >= 0 for v in snap.values())
+    final = comp.stats
+    assert final["failures"] == 0
+    # snapshot is a copy, not the live dict
+    final["cycles"] += 100
+    assert comp.stats["cycles"] != final["cycles"]
