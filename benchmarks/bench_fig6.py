@@ -44,9 +44,9 @@ import time
 
 import numpy as np
 
-from repro.core import And, BitmapIndex, Eq, In, IndexSpec, IndexWriter
+from repro.core import And, BitmapIndex, Eq, In, IndexSpec, IndexWriter, Or
 from repro.core.query import (NumpyBackend, compile_plan, count_merges,
-                              get_backend)
+                              get_backend, lower_plan)
 from repro.data.tables import make_census_like
 
 
@@ -115,6 +115,193 @@ def run(n=60_000, queries=40, quick=False):
     out.extend(run_segmented(cols, queries=queries))
     out.extend(run_lsm(cols, queries=queries))
     out.extend(run_range_sweep(n=n // 3, queries=queries))
+    out.extend(run_fusion(n=n // 2, queries=queries))
+    return out
+
+
+def run_fusion(n=30_000, queries=40):
+    """Plan-fusion scenario: whole compiled plans in ONE launch (the
+    instruction-tape megakernel, ``repro.kernels.planfuse``) vs the
+    per-stage jax path, across plan shapes (1/3/4 merge stages — a
+    *stage* is an interior op node, one kernel dispatch on the per-stage
+    path) and two capacity buckets (two index sizes).
+
+    Timings per cell:
+
+    * ``us_per_query`` — end-to-end ``execute_compressed_many`` on the
+      real backend paths (``get_backend("jax")`` fused vs ``fuse=False``
+      per-stage), result cache cleared every trial so the engine always
+      executes.  Informational + trend-gated; off TPU both paths run the
+      Pallas *interpreter*, whose per-op constant is a correctness
+      vehicle, not a perf signal.
+    * ``fused_eval_us`` vs ``stage_eval_us`` — the plan evaluation alone
+      (decompressed planes already on device) through the machine's
+      COMPILED executors.  Fused: one program (megakernel on TPU, the
+      XLA-fused tape program elsewhere — intermediates never leave
+      chip).  Per-stage: one separately-compiled kernel call per
+      interior node, every stage's intermediate materialized — exactly
+      the dispatch + HBM bounce a Pallas call per stage costs on TPU.
+      The fused-beats-per-stage acceptance check runs on this surface
+      (>= 3 stages), and the within-2x-of-roofline check compares
+      ``fused_eval_us`` against ``roofline.query_bound_us``.
+    * ``fused_kernel_us`` — the actual Pallas launch (interpret mode off
+      TPU), informational.
+
+    Every fused stream must be bit-identical (canonical EWAH words) to
+    both the per-stage jax result and the numpy oracle.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import ewah, ewah_jax
+    from repro.core.query import PLAN_STATS
+    from repro.kernels import ops as kops
+    from .roofline import query_bound_us, stream_bandwidth
+
+    rng = np.random.default_rng(17)
+    spec = IndexSpec(k=1, row_order="lex", column_order="given")
+    fused = get_backend("jax")
+    per_stage = get_backend("jax", fuse=False)
+    oracle = NumpyBackend()
+    on_tpu = jax.default_backend() == "tpu"
+    bw = stream_bandwidth()
+
+    def count_stages(node):
+        kind = node[0]
+        if kind == "leaf":
+            return 0
+        if kind == "not":
+            return count_stages(node[1])
+        children = node[2] if kind == "fold" else node[1]
+        return 1 + sum(count_stages(c) for c in children)
+
+    out = []
+    for bucket, rows_n in (("small", n // 4), ("large", n)):
+        cols = make_census_like(rows_n)
+        idx = BitmapIndex.build(cols, spec)
+        cards = [int(c.max()) + 1 for c in cols]
+        cell_preds = (
+            # nested trees: per-stage dispatches one kernel per interior
+            # node, so these are 1 / 3 / 4 launches vs fused's one
+            (1, lambda v: And(Eq(0, v % cards[0]), Eq(1, v % cards[1]))),
+            (3, lambda v: Or(And(Eq(0, v % cards[0]), Eq(1, v % cards[1])),
+                             And(Eq(2, v % cards[2]),
+                                 Eq(3, v % cards[3])))),
+            (4, lambda v: Or(And(Eq(0, v % cards[0]),
+                                 In(1, (v % cards[1],
+                                        (v + 1) % cards[1]))),
+                             And(Eq(2, v % cards[2]),
+                                 Eq(3, v % cards[3])))),
+        )
+        for stages, make_pred in cell_preds:
+            preds = [make_pred(int(v))
+                     for v in rng.integers(0, 100_000, size=queries)]
+            plans = [compile_plan(idx, p) for p in preds]
+            merges = count_merges(plans[0].root)
+            assert count_stages(plans[0].root) == stages, plans[0].root
+            n_words = plans[0].n_words
+            cap = PLAN_STATS.capacity_for(
+                max(len(s) for s in plans[0].streams))
+
+            def timed_engine(be):
+                be.execute_compressed_many(plans)   # jit warmup untimed
+
+                def cold():
+                    be.result_cache.clear()         # engine must execute
+                    return be.execute_compressed_many(plans)
+
+                streams, best = _best_of(cold)
+                return streams, best / queries * 1e6
+
+            fused_streams, us_fused = timed_engine(fused)
+            stage_streams, us_stage = timed_engine(per_stage)
+            ref = oracle.execute_compressed_many(plans)
+            agrees_f = all(np.array_equal(a.data, b.data)
+                           for a, b in zip(fused_streams, ref))
+            agrees_s = all(np.array_equal(a.data, b.data)
+                           for a, b in zip(stage_streams, ref))
+            agrees_fs = all(np.array_equal(a.data, b.data)
+                            for a, b in zip(fused_streams, stage_streams))
+
+            # fused evaluation alone over on-device planes: the roofline
+            # comparison surface (see docstring for the executor choice)
+            tape, _ = lower_plan(plans[0].root)
+            m = sum(1 for opcode, _ in tape if opcode == 0)
+            planes = np.stack([
+                np.concatenate([
+                    ewah.decompress(np.asarray(p.streams[j], np.uint32),
+                                    n_words)
+                    for p in plans])
+                for j in range(m)])
+            # tile the batch up to a floor byte volume so the timing
+            # measures bandwidth, not the fixed dispatch overhead (at
+            # quick sizes a whole batch is a few hundred KB and the
+            # ~30us jit-call cost would swamp the data movement)
+            reps = max(1, -(-8 * 2**20 // planes.nbytes))
+            eval_queries = queries * reps
+            x = jax.numpy.asarray(np.tile(planes, (1, reps)))
+
+            def eval_with(use_kernel):
+                def go():
+                    r, _k = kops.plan_fuse(x, tape, use_kernel=use_kernel)
+                    jax.block_until_ready(r)
+                    return r
+
+                go()                                # compile untimed
+                _, best = _best_of(go)
+                return best / eval_queries * 1e6
+
+            # per-stage evaluation surface: one separately-compiled
+            # kernel call per interior node (kops.* are individually
+            # jitted), every stage's intermediate materialized — the
+            # dispatch + memory bounce fusion removes
+            def stage_node(node):
+                kind = node[0]
+                if kind == "leaf":
+                    return x[node[1]]
+                if kind == "not":
+                    return stage_node(node[1]) ^ jnp.uint32(0xFFFFFFFF)
+                if kind == "fold":
+                    parts = jnp.stack([stage_node(c) for c in node[2]])
+                    return kops.slice_fold(parts, node[1],
+                                           use_kernel=on_tpu)
+                parts = jnp.stack([stage_node(c) for c in node[1]])
+                return kops.wordops_fold(parts, kind, use_kernel=on_tpu)
+
+            classify = jax.jit(ewah_jax.classify)
+
+            def stage_go():
+                r = stage_node(plans[0].root)
+                k = classify(r)                     # fused does this in-kernel
+                jax.block_until_ready((r, k))
+                return r
+
+            stage_go()                              # compile untimed
+            _, best = _best_of(stage_go)
+            stage_eval_us = best / eval_queries * 1e6
+
+            fused_eval_us = eval_with(on_tpu)
+            fused_kernel_us = eval_with(True)
+            roofline_us = query_bound_us(m * n_words, n_words, bw=bw)
+
+            out.append({"scenario": "fusion", "bucket": bucket,
+                        "stages": stages, "merges": merges,
+                        "backend": "jax-fused",
+                        "capacity": float(cap),
+                        "us_per_query": us_fused,
+                        "fused_eval_us": fused_eval_us,
+                        "stage_eval_us": stage_eval_us,
+                        "fused_kernel_us": fused_kernel_us,
+                        "roofline_us": roofline_us,
+                        "roofline_ratio": fused_eval_us / roofline_us,
+                        "agrees_with_numpy": agrees_f,
+                        "agrees_with_per_stage": agrees_fs})
+            out.append({"scenario": "fusion", "bucket": bucket,
+                        "stages": stages, "merges": merges,
+                        "backend": "jax-per-stage",
+                        "capacity": float(cap),
+                        "us_per_query": us_stage,
+                        "agrees_with_numpy": agrees_s})
     return out
 
 
@@ -503,4 +690,62 @@ def validate(rows):
             f"range-sweep: card-{card} wide-range bit-sliced "
             f"{b:.0f}us < equality {e:.0f}us: "
             f"{'PASS' if b < e else 'FAIL'}")
+    # fusion scenario: megakernel streams bit-identical everywhere, the
+    # fused (one-launch) evaluation beats the per-stage (one compiled
+    # kernel per interior node, materialized intermediates) evaluation on
+    # deep (>= 3 stage) plans, and stays within 2x of the memory-bandwidth
+    # roofline bound
+    fus = [r for r in rows if r.get("scenario") == "fusion"]
+    ok = bool(fus) and all(r["agrees_with_numpy"] for r in fus) \
+        and all(r.get("agrees_with_per_stage", True) for r in fus)
+    checks.append(f"fusion: streams bit-identical (numpy oracle + "
+                  f"per-stage) across {len(fus)} cells: "
+                  f"{'PASS' if ok else 'FAIL'}")
+    for f in (r for r in fus if r["backend"] == "jax-fused"):
+        if f["stages"] >= 3:
+            ok = f["fused_eval_us"] < f["stage_eval_us"]
+            checks.append(
+                f"fusion: {f['bucket']}/{f['stages']}-stage fused eval "
+                f"{f['fused_eval_us']:.2f}us < per-stage eval "
+                f"{f['stage_eval_us']:.2f}us: {'PASS' if ok else 'FAIL'}")
+        ok = f["roofline_ratio"] <= 2.0
+        checks.append(
+            f"fusion: {f['bucket']}/{f['stages']}-stage fused eval "
+            f"{f['fused_eval_us']:.2f}us within 2x of roofline "
+            f"{f['roofline_us']:.2f}us (ratio {f['roofline_ratio']:.2f}): "
+            f"{'PASS' if ok else 'FAIL'}")
     return checks
+
+
+def main():
+    """``python -m benchmarks.bench_fig6 --fusion-smoke``: the CI smoke
+    for the fused path — tiny inputs, gates only on the noise-immune
+    checks (bit-identical streams everywhere, fused eval within 2x of
+    the roofline bound); the fused-vs-per-stage eval race gates in
+    ``benchmarks.run``'s validate at full bench sizes."""
+    import argparse
+    import sys
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fusion-smoke", action="store_true",
+                    help="run only the plan-fusion scenario at smoke size")
+    args = ap.parse_args()
+    if not args.fusion_smoke:
+        ap.error("only --fusion-smoke is supported as a direct entrypoint")
+    rows = run_fusion(n=12_000, queries=8)
+    failed = False
+    for r in (r for r in rows if r["backend"] == "jax-fused"):
+        ok = (r["agrees_with_numpy"] and r["agrees_with_per_stage"]
+              and r["roofline_ratio"] <= 2.0)
+        failed |= not ok
+        print(f"fusion-smoke {r['bucket']}/{r['stages']}-stage: "
+              f"bit-identical={r['agrees_with_numpy'] and r['agrees_with_per_stage']} "
+              f"roofline-ratio={r['roofline_ratio']:.2f} "
+              f"fused-eval={r['fused_eval_us']:.2f}us "
+              f"stage-eval={r['stage_eval_us']:.2f}us: "
+              f"{'PASS' if ok else 'FAIL'}")
+    sys.exit(1 if failed else 0)
+
+
+if __name__ == "__main__":
+    main()

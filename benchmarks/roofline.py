@@ -26,6 +26,50 @@ from . import analytic
 
 SDS = jax.ShapeDtypeStruct
 
+# ---------------------------------------------------------------------------
+# Query-plane memory-bandwidth bound (the bench_fig6 fusion scenario and
+# benchmarks/trend.py's wall-clock-vs-roofline column)
+# ---------------------------------------------------------------------------
+
+_MEASURED_BW = None
+
+
+def stream_bandwidth() -> float:
+    """Achievable streaming memory bandwidth (bytes/s) on the machine the
+    benchmarks actually run on: ``analytic.HBM_BW`` on TPU, otherwise
+    measured once by streaming large uint32 arrays through a bitwise op —
+    the same instruction mix the word-space kernels execute, so the bound
+    is what THIS machine could do with zero non-memory overhead.
+    Memoized; the probe costs ~100 ms."""
+    global _MEASURED_BW
+    if jax.default_backend() == "tpu":
+        return analytic.HBM_BW
+    if _MEASURED_BW is None:
+        import time
+
+        a = np.arange(8 * 2**20, dtype=np.uint32)   # 32 MiB each side
+        b = a[::-1].copy()
+        best = float("inf")
+        for _ in range(5):
+            t0 = time.perf_counter()
+            c = np.bitwise_and(a, b)
+            best = min(best, time.perf_counter() - t0)
+        _MEASURED_BW = (a.nbytes + b.nbytes + c.nbytes) / best
+    return _MEASURED_BW
+
+
+def query_bound_us(leaf_words: float, result_words: float = 0.0,
+                   bw: float | None = None) -> float:
+    """Memory-bandwidth lower bound (us) for evaluating one fused plan
+    over decompressed word planes: every leaf plane word is read once
+    (``leaf_words`` = m * W for an m-leaf plan) and the result plus its
+    EWAH classification written once (``2 * result_words``) — no
+    execution strategy beats moving those bytes.  The fusion acceptance
+    gate compares the megakernel's warm wall-clock against this."""
+    if bw is None:
+        bw = stream_bandwidth()
+    return 4.0 * (leaf_words + 2.0 * result_words) / bw * 1e6
+
 
 def param_count(cfg) -> int:
     shapes = jax.eval_shape(

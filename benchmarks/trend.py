@@ -48,7 +48,7 @@ import sys
 
 VOLATILE = {"us_per_query", "words_scanned", "cache_hit_rate",
             "agrees_with_numpy", "agrees_with_dense",
-            "agrees_with_equality"}
+            "agrees_with_equality", "agrees_with_per_stage"}
 
 
 def row_identity(suite: str, row: dict):
@@ -100,6 +100,28 @@ def find_regressions(base: dict, cur: dict, tolerance: float,
         elif c < b_adj:
             improvements += 1
     return regressions, factor, improvements
+
+
+def roofline_lines(results: dict) -> list[str]:
+    """Informational wall-clock-vs-roofline column: one line per current
+    row that carries roofline data (the bench_fig6 fusion scenario).
+    The hard within-2x gate lives in the producer's ``validate``; this
+    surfaces the margin in the trend report so drift toward the bound is
+    visible before it fails."""
+    lines = []
+    for suite, payload in results.items():
+        for row in payload.get("rows", []):
+            if not isinstance(row, dict) or "roofline_us" not in row:
+                continue
+            cell = "/".join(str(row[k]) for k in ("scenario", "bucket",
+                                                  "stages") if k in row)
+            lines.append(
+                f"# roofline {suite}[{cell}]: fused eval "
+                f"{row['fused_eval_us']:.2f}us vs bound "
+                f"{row['roofline_us']:.2f}us = {row['roofline_ratio']:.2f}x "
+                f"(pallas launch {row['fused_kernel_us']:.2f}us, "
+                f"end-to-end {row['us_per_query']:.0f}us)")
+    return lines
 
 
 def rerun_suites(suites) -> dict:
@@ -175,8 +197,11 @@ def main() -> None:
     with open(args.baseline) as f:
         base = collect(json.load(f))
     with open(args.current) as f:
-        cur = collect(json.load(f))
+        cur_raw = json.load(f)
+    cur = collect(cur_raw)
 
+    for line in roofline_lines(cur_raw):
+        print(line)
     normalize = not args.no_normalize
     for ident in sorted(set(base) - set(cur)):
         print(f"# WARN row gone from current run: {fmt(ident)}")

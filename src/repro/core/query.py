@@ -43,6 +43,7 @@ tests/test_compressed_engine.py).
 from __future__ import annotations
 
 import hashlib
+import json
 import weakref
 from collections import OrderedDict
 from dataclasses import dataclass
@@ -229,6 +230,170 @@ def count_merges(node) -> int:
     return len(node[1]) - 1 + sum(count_merges(c) for c in node[1])
 
 
+# Instruction-tape opcodes, mirrored from kernels/planfuse.py (kept as
+# plain ints here so the numpy-only import path never pulls jax;
+# tests/test_planfuse.py asserts the two definitions agree).
+TAPE_PUSH, TAPE_NOT, TAPE_OP = 0, 1, 2
+_TAPE_OP_IDS = {"and": 0, "or": 1, "xor": 2}
+
+
+def lower_plan(root) -> tuple:
+    """Linearize a plan op tree into the static stack-machine tape the
+    Pallas megakernel interprets (kernels/planfuse.py); returns
+    ``(tape, max_depth)``.
+
+    Instructions are ``(opcode, arg)`` int pairs: ``(TAPE_PUSH, i)``
+    pushes leaf plane ``i`` onto the operand stack, ``(TAPE_NOT, 0)``
+    complements the top of stack, and ``(TAPE_OP, k)`` pops two operands
+    and pushes their combination (k: 0=and, 1=or, 2=xor).  Fan-ins lower
+    to left folds and ``fold`` children keep their semantic bit order, so
+    the tape visits leaves exactly in the planner's canonical
+    tree-traversal numbering and evaluates to the same result as the
+    per-stage recursion.  ``max_depth`` is the operand stack's peak — the
+    megakernel's live-register high-water mark, which the VMEM fallback
+    gate prices (``planfuse.fits_vmem``).
+    """
+    tape: list = []
+
+    def rec(node):
+        kind = node[0]
+        if kind == "leaf":
+            tape.append((TAPE_PUSH, node[1]))
+            return
+        if kind == "not":
+            rec(node[1])
+            tape.append((TAPE_NOT, 0))
+            return
+        if kind == "fold":
+            _, fops, children = node
+            rec(children[0])
+            for op, child in zip(fops, children[1:]):
+                rec(child)
+                tape.append((TAPE_OP, _TAPE_OP_IDS[op]))
+            return
+        if kind not in ("and", "or"):
+            raise ValueError(f"unknown plan-node kind {kind!r}")
+        children = node[1]
+        rec(children[0])
+        for child in children[1:]:
+            rec(child)
+            tape.append((TAPE_OP, _TAPE_OP_IDS[kind]))
+
+    rec(root)
+    depth = max_depth = 0
+    for opcode, _ in tape:
+        if opcode == TAPE_PUSH:
+            depth += 1
+            max_depth = max(max_depth, depth)
+        elif opcode == TAPE_OP:
+            depth -= 1
+    assert depth == 1, f"tape leaves {depth} operands on the stack"
+    return tuple(tape), max_depth
+
+
+class PlanStats:
+    """Observed plan-shape distribution -> autotuned jax capacity buckets.
+
+    The planner feeds it: :func:`compile_plan` records every compiled
+    plan's max leaf stream length — the quantity the jax backend pads to
+    when batching.  Until :meth:`autotune` derives boundaries (or
+    :meth:`load` restores a previous run's), :meth:`capacity_for` falls
+    back to power-of-two buckets, so cold processes behave exactly as
+    before.  Boundaries are quantiles of the observed distribution
+    rounded up to a multiple of 8: buckets hug the live workload instead
+    of doubling (less padding per dispatch), while ``max_buckets`` caps
+    how many jit variants a shifting query mix can create.
+    :meth:`save`/:meth:`load` persist boundaries plus a sample tail, so a
+    restarted server warms up with last run's buckets and keeps refining
+    them (``serve --plan-stats``).
+
+    Thread-safe: serving records from worker threads while autotune runs
+    wherever the operator calls it.
+    """
+
+    MAX_SAMPLES = 8192
+
+    def __init__(self):
+        self._mutex = make_lock("plan_stats")
+        self._max_lens: list = []      # guarded-by: _mutex
+        self._boundaries: tuple = ()   # guarded-by: _mutex
+        self.recorded = 0              # guarded-by: _mutex
+
+    def record(self, plan) -> None:
+        if not plan.streams:
+            return
+        ml = max(len(s) for s in plan.streams)
+        with self._mutex:
+            self.recorded += 1
+            self._max_lens.append(int(ml))
+            if len(self._max_lens) > self.MAX_SAMPLES:
+                # keep the newest half: bounded memory, recency-weighted
+                self._max_lens = self._max_lens[self.MAX_SAMPLES // 2:]
+
+    def autotune(self, max_buckets: int = 8) -> tuple:
+        """Derive bucket boundaries (at most ``max_buckets``) from the
+        recorded distribution's quantiles; returns the new boundaries
+        (unchanged when nothing was recorded)."""
+        with self._mutex:
+            lens = sorted(self._max_lens)
+            if not lens:
+                return self._boundaries
+            qs = [lens[min(len(lens) - 1, (i * len(lens)) // max_buckets)]
+                  for i in range(1, max_buckets + 1)]
+            self._boundaries = tuple(sorted({-(-q // 8) * 8 for q in qs}))
+            return self._boundaries
+
+    @property
+    def boundaries(self) -> tuple:
+        with self._mutex:
+            return self._boundaries
+
+    def capacity_for(self, n: int) -> int:
+        """Smallest autotuned bucket holding ``n`` stream words; plans
+        past the largest boundary use the power-of-two fallback (they are
+        the tail the quantiles deliberately don't chase)."""
+        with self._mutex:
+            bounds = self._boundaries
+        for b in bounds:
+            if n <= b:
+                return b
+        return _capacity_bucket(n)
+
+    def stats(self) -> dict:
+        with self._mutex:
+            return {"recorded": self.recorded,
+                    "samples": len(self._max_lens),
+                    "boundaries": list(self._boundaries)}
+
+    def save(self, path) -> None:
+        with self._mutex:
+            payload = {"boundaries": list(self._boundaries),
+                       "recorded": self.recorded,
+                       "max_lens": self._max_lens[-1024:]}
+        with open(path, "w") as fh:
+            json.dump(payload, fh)
+
+    def load(self, path) -> bool:
+        """Restore persisted boundaries (+ sample tail); returns False
+        when the file is missing or unreadable — a cold start, not an
+        error."""
+        try:
+            with open(path) as fh:
+                payload = json.load(fh)
+        except (OSError, ValueError):
+            return False
+        with self._mutex:
+            self._boundaries = tuple(
+                int(b) for b in payload.get("boundaries", []))
+            self._max_lens = [int(x) for x in payload.get("max_lens", [])]
+        return True
+
+
+#: Process-wide recorder every ``compile_plan`` feeds and the jax
+#: backend's batch grouping reads.  serve --plan-stats persists it.
+PLAN_STATS = PlanStats()
+
+
 @lru_cache(maxsize=32)
 def _ones_stream(n_rows: int) -> np.ndarray:
     n_words = (n_rows + ewah.WORD_BITS - 1) // ewah.WORD_BITS
@@ -340,6 +505,7 @@ def compile_plan(index, pred: Predicate, names=None) -> Plan:
                 scope=getattr(index, "cache_scope", None))
     plan.root = _cost_order(plan.root, plan.streams, plan.n_words)
     _renumber_leaves(plan)
+    PLAN_STATS.record(plan)
     return plan
 
 
@@ -793,18 +959,29 @@ class JaxBackend:
     Plans are grouped by (root op tree, capacity bucket): compiled plans
     carry canonically numbered leaves, so structurally equal plans share one
     root tuple and hence one compiled program with a correct leaf mapping.
-    Each group's leaf streams pad into one (B, m, C) uint32 batch, decompress
-    via a doubly-vmapped ``ewah_jax.decompress``, and fan-ins fold in word
-    space through ``kernels.ops.wordops_fold`` (the Pallas word-op kernel,
-    whole batch per launch).  Capacities bucket to powers of two so jit
+    Each group's leaf streams pad into one (B, m, C) uint32 batch and
+    decompress via a doubly-vmapped ``ewah_jax.decompress``.  With
+    ``fuse=True`` (the default) the whole op tree THEN runs as one Pallas
+    megakernel launch: the plan root lowers to a static instruction tape
+    (:func:`lower_plan`) that ``kernels.ops.plan_fuse`` interprets in
+    VMEM — every fold, interior merge, the root op, and the recompress
+    classification in a single dispatch, intermediates never leaving the
+    chip.  Plans whose tape or operand stack exceeds the VMEM budget
+    (``kernels.planfuse.fits_vmem``) fall back automatically to the
+    per-stage path (``wordops_fold`` per tree level + ``slice_fold`` per
+    comparison + the recompress kernel).  Capacities bucket through
+    :data:`PLAN_STATS` (autotuned from the observed plan-size
+    distribution; powers of two until boundaries are trained) so jit
     variants stay bounded across query mixes.
     """
 
     def __init__(self, use_kernel: bool = True, interpret=None,
-                 cache_size: int = 256):
+                 cache_size: int = 256, fuse: bool = True):
         self.use_kernel = use_kernel
         self.interpret = interpret
+        self.fuse = fuse
         self._jit_cache: dict = {}
+        self._tape_memo: dict = {}
         self.result_cache = ResultCache(cache_size)
 
     def execute(self, plan: Plan):
@@ -874,7 +1051,7 @@ class JaxBackend:
         groups: dict = {}
         for i in range(len(plans)) if idxs is None else idxs:
             p = plans[i]
-            cap = _capacity_bucket(max(len(s) for s in p.streams))
+            cap = PLAN_STATS.capacity_for(max(len(s) for s in p.streams))
             # key on the full root (leaf indices included), not signature():
             # only plans with an identical leaf-to-stream mapping may share
             # a compiled program
@@ -892,9 +1069,28 @@ class JaxBackend:
                 lengths[b, j] = len(s)
         return batch, lengths
 
+    def _fused_tape(self, root):
+        """The lowered instruction tape for ``root`` when the megakernel
+        can run it, else None — the automatic per-stage fallback for
+        plans whose tape length or operand-stack depth would blow the
+        VMEM budget (``kernels.planfuse``)."""
+        if not self.fuse:
+            return None
+        if root in self._tape_memo:
+            return self._tape_memo[root]
+        from ..kernels import planfuse
+
+        tape, depth = lower_plan(root)
+        m = sum(1 for opcode, _ in tape if opcode == TAPE_PUSH)
+        ok = (len(tape) <= planfuse.MAX_TAPE_LEN
+              and planfuse.fits_vmem(m, depth))
+        self._tape_memo[root] = tape if ok else None
+        return self._tape_memo[root]
+
     def _compiled(self, root, capacity: int, n_words: int,
                   compressed: bool = False):
-        key = (root, capacity, n_words, compressed,
+        tape = self._fused_tape(root)
+        key = (root, capacity, n_words, compressed, tape is not None,
                self.use_kernel, self.interpret)
         if key in self._jit_cache:
             return self._jit_cache[key]
@@ -909,6 +1105,28 @@ class JaxBackend:
         def run(batch, lengths):  # (B, m, C), (B, m) -> (B, W)
             dec = jax.vmap(jax.vmap(
                 lambda s, l: ewah_jax.decompress(s, l, n_words)))(batch, lengths)
+
+            if tape is not None:
+                # fused: the whole op tree + recompress classification in
+                # ONE megakernel launch over the flattened batch
+                B, m = dec.shape[0], dec.shape[1]
+                planes = dec.transpose(1, 0, 2).reshape(m, -1)  # (m, B*W)
+                flat, kflat = kops.plan_fuse(
+                    planes, tape, use_kernel=use_kernel, interpret=interpret)
+                words = flat.reshape(B, n_words)
+                if not compressed:
+                    return words
+                kind = kflat.reshape(B, n_words)
+                # per-row run starts from the fused classification: word 0
+                # always opens a run (recompress_batch's opposite-class
+                # sentinel reduces to exactly this), then any class change
+                first = jnp.ones((B, 1), jnp.int32)
+                start = jnp.concatenate(
+                    [first, (kind[:, 1:] != kind[:, :-1]).astype(jnp.int32)],
+                    axis=1)
+                return jax.vmap(
+                    lambda w, k, s: ewah_jax.compress_from_runs(
+                        w, k, s, n_words + 1))(words, kind, start)
 
             def ev(node):
                 if node[0] == "leaf":

@@ -18,6 +18,7 @@ from .bitpack import LANE_TILE, ROW_TILE, bitpack_kernel
 from .gray import gray_kernel
 from .histmm import TOK_TILE, VAL_TILE, histmm_kernel
 from .moe_route import moe_route_kernel
+from .planfuse import planfuse_kernel
 from .recompress import recompress_kernel
 from .slicefold import slicefold_kernel
 from .wordops import wordops_kernel
@@ -124,6 +125,51 @@ def slice_fold(stacked, ops, use_kernel=True, interpret=None):
          .at[:, :n].set(stacked).reshape(m, rows_p, lanes))
     out = slicefold_kernel(x, tuple(ops), interpret=interpret)
     return out.reshape(-1)[:n]
+
+
+@partial(jax.jit, static_argnames=("tape", "use_kernel", "interpret"))
+def plan_fuse(stacked, tape, use_kernel=True, interpret=None):
+    """Evaluate a lowered plan tape over (m, n) word planes in ONE Pallas
+    launch -> (result (n,), kind (n,)).
+
+    ``tape`` is the static stack-machine program from
+    ``core.query.lower_plan`` (``(opcode, arg)`` int pairs — PUSH leaf /
+    NOT / binary OP); the jax backend flattens a whole batch of queries
+    into n = B * words-per-query, so every fold, interior merge, the root
+    op, AND the recompress classification of the entire plan dispatch in
+    one padded megakernel call (``kernels.planfuse``) instead of one
+    launch per stage.  ``kind`` is the per-word EWAH class of the result
+    (0 = clean-0, 1 = clean-1, 2 = dirty) — the run-start/scan emit stages
+    of recompression consume it directly.
+    """
+    from .planfuse import ROW_TILE as RT
+    from .planfuse import NOT, OP_AND, OP_OR, PUSH
+
+    m, n = stacked.shape
+    if not use_kernel:
+        full = jnp.uint32(0xFFFFFFFF)
+        stack = []
+        for opcode, arg in tape:
+            if opcode == PUSH:
+                stack.append(stacked[arg])
+            elif opcode == NOT:
+                stack.append(stack.pop() ^ full)
+            else:
+                b = stack.pop()
+                a = stack.pop()
+                fn = (jnp.bitwise_and if arg == OP_AND else
+                      jnp.bitwise_or if arg == OP_OR else jnp.bitwise_xor)
+                stack.append(fn(a, b))
+        r = stack.pop()
+        return r, ewah_jax.classify(r)
+    interpret = not _on_tpu() if interpret is None else interpret
+    lanes = 128
+    rows = -(-n // lanes)
+    rows_p = -(-rows // RT) * RT
+    x = (jnp.zeros((m, rows_p * lanes), jnp.uint32)
+         .at[:, :n].set(stacked).reshape(m, rows_p, lanes))
+    r, kind = planfuse_kernel(x, tape, interpret=interpret)
+    return r.reshape(-1)[:n], kind.reshape(-1)[:n]
 
 
 @partial(jax.jit, static_argnames=("capacity", "use_kernel", "interpret"))

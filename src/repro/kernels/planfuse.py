@@ -1,0 +1,109 @@
+"""Pallas TPU megakernel: a whole compiled plan in ONE launch.
+
+The jax backend's per-stage path dispatches one Pallas call per fold/merge
+stage (``wordops_fold`` per tree level, ``slice_fold`` per comparison,
+``recompress`` at the root), bouncing every intermediate through HBM.
+This kernel instead *interprets a static instruction tape* — the
+stack-machine linearization of the plan DAG produced by
+``core.query.lower_plan`` — so the entire op tree plus the recompress
+classification evaluates in VMEM in a single launch: each grid tile loads
+its (m, ROW_TILE, LANE_TILE) block of decompressed leaf planes once,
+unrolls the tape over a Python-list operand stack (every tape entry is a
+static int pair, so the unrolled trace contains straight-line bitwise ops
+only — no traced branches), and writes the root result together with its
+EWAH word classification (0 = clean-0, 1 = clean-1, 2 = dirty), the first
+half of the recompress stage fused in.
+
+Tape instructions (``(opcode, arg)`` int pairs):
+
+  (0, i)  PUSH   leaf plane i onto the operand stack
+  (1, 0)  NOT    complement the top of stack (x ^ 0xFFFFFFFF)
+  (2, k)  OP     pop b, pop a, push ``a <op_k> b``; k: 0=and, 1=or, 2=xor
+
+  in : x (m, N, 128) uint32 — the m decompressed leaf planes
+  out: r (N, 128) uint32    — the root result words
+       kind (N, 128) int32  — per-word EWAH class of r
+
+VMEM model.  A tile holds the m-plane input block, the live operand stack
+(``max_depth`` registers at the peak), and the two output tiles; anything
+past the budget falls back to the per-stage path (``fits_vmem`` is the
+backend's gate, sized to half a TPU core's ~16 MiB so double-buffering
+and compiler temporaries keep headroom).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROW_TILE = 64
+LANE_TILE = 128
+
+# half of a v5e core's ~16 MiB VMEM: leave room for pipelining/temporaries
+VMEM_BUDGET_BYTES = 8 * 2**20
+# unrolled-trace backstop: past this the kernel would compile, but trace
+# and compile time grow linearly and the per-stage path stops being the
+# bottleneck anyway
+MAX_TAPE_LEN = 512
+
+PUSH, NOT, OP = 0, 1, 2
+OP_AND, OP_OR, OP_XOR = 0, 1, 2
+
+
+def tape_vmem_bytes(m: int, max_depth: int) -> int:
+    """Worst-case VMEM bytes one grid tile needs: the m-plane input block,
+    the operand stack at its peak, and the two output tiles."""
+    tiles = m + max_depth + 2
+    return tiles * ROW_TILE * LANE_TILE * 4
+
+
+def fits_vmem(m: int, max_depth: int,
+              budget: int = VMEM_BUDGET_BYTES) -> bool:
+    return tape_vmem_bytes(m, max_depth) <= budget
+
+
+def _kernel(x_ref, r_ref, kind_ref, *, tape: tuple):
+    full = jnp.uint32(0xFFFFFFFF)
+    stack = []
+    for opcode, arg in tape:
+        if opcode == PUSH:
+            stack.append(x_ref[arg])
+        elif opcode == NOT:
+            stack.append(stack.pop() ^ full)
+        elif arg == OP_AND:
+            b = stack.pop()
+            stack.append(stack.pop() & b)
+        elif arg == OP_OR:
+            b = stack.pop()
+            stack.append(stack.pop() | b)
+        else:
+            b = stack.pop()
+            stack.append(stack.pop() ^ b)
+    r = stack.pop()
+    r_ref[...] = r
+    kind_ref[...] = jnp.where(r == 0, 0, jnp.where(r == full, 1, 2)
+                              ).astype(jnp.int32)
+
+
+def planfuse_kernel(x: jax.Array, tape: tuple, *, interpret: bool = True):
+    """x (m, N, C) uint32, tape — static ``(opcode, arg)`` pairs from
+    ``core.query.lower_plan``; returns (result (N, C), kind (N, C))."""
+    m, N, C = x.shape
+    assert N % ROW_TILE == 0 and C % LANE_TILE == 0
+    n_push = sum(1 for opcode, _ in tape if opcode == PUSH)
+    assert n_push <= m, (n_push, m)
+    grid = (N // ROW_TILE, C // LANE_TILE)
+    in_spec = pl.BlockSpec((m, ROW_TILE, LANE_TILE), lambda i, j: (0, i, j))
+    out_spec = pl.BlockSpec((ROW_TILE, LANE_TILE), lambda i, j: (i, j))
+    return pl.pallas_call(
+        partial(_kernel, tape=tuple(tape)),
+        grid=grid,
+        in_specs=[in_spec],
+        out_specs=(out_spec, out_spec),
+        out_shape=(jax.ShapeDtypeStruct((N, C), jnp.uint32),
+                   jax.ShapeDtypeStruct((N, C), jnp.int32)),
+        interpret=interpret,
+    )(x)

@@ -12,6 +12,7 @@ from __future__ import annotations
 
 import argparse
 import time
+from contextlib import contextmanager, nullcontext
 from functools import partial
 
 import jax
@@ -22,6 +23,7 @@ from repro.analysis.runtime import make_lock
 from repro.configs import get_config
 from repro.core import BitmapIndex, Eq, IndexSpec, IndexWriter
 from repro.core.lifecycle import BackgroundCompactor
+from repro.core.query import PLAN_STATS
 from repro.dist.sharding import (batch_shardings, cache_shardings,
                                  param_shardings, replicated)
 from repro.launch.mesh import make_cli_mesh
@@ -210,6 +212,34 @@ def pack_batches(lengths, batch_size, histogram_aware=True, backend="numpy",
     return [order[i : i + batch_size] for i in range(0, n, batch_size)]
 
 
+class PhaseProfile:
+    """Wall-clock accounting per serving phase — the top-ops summary
+    ``serve --profile`` prints next to the JAX profiler trace (the trace
+    has per-HLO detail for TensorBoard; this table answers "where did the
+    wall time go" without leaving the terminal).  Spans are cheap enough
+    to always run; callers block on device results inside a span only
+    when profiling, so honest per-phase attribution never perturbs the
+    unprofiled path's async dispatch pipelining."""
+
+    def __init__(self):
+        self.acc: dict = {}
+
+    @contextmanager
+    def span(self, name: str):
+        t0 = time.perf_counter()
+        try:
+            yield
+        finally:
+            self.acc[name] = (self.acc.get(name, 0.0)
+                              + time.perf_counter() - t0)
+
+    def report(self, total: float | None = None) -> None:
+        tot = total or sum(self.acc.values()) or 1.0
+        print("# top serving phases (wall-clock)")
+        for name, s in sorted(self.acc.items(), key=lambda kv: -kv[1]):
+            print(f"  {name:<12} {s * 1e3:9.1f} ms  {s / tot:6.1%}")
+
+
 def padding_waste(lengths, batches):
     total = 0
     used = 0
@@ -248,12 +278,27 @@ def main(argv=None):
                     help="run a background compactor thread over the "
                          "segmented admission writer while requests stream "
                          "in (requires --admission segmented)")
+    ap.add_argument("--profile", default=None, metavar="DIR",
+                    help="emit a JAX profiler trace of the serving loop to "
+                         "DIR (read with: tensorboard --logdir DIR) plus a "
+                         "wall-clock top-phase summary on stdout; see "
+                         "docs/fusion.md for the reading workflow")
+    ap.add_argument("--plan-stats", default=None, metavar="PATH",
+                    help="persist the query plan-shape recorder "
+                         "(core.query.PLAN_STATS): load at startup so the "
+                         "jax backend warms up with last run's autotuned "
+                         "capacity buckets, autotune + save at exit")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = cfg.smoke()
     rng = np.random.default_rng(0)
+
+    if args.plan_stats:
+        warm = PLAN_STATS.load(args.plan_stats)
+        print(f"plan-stats {'loaded from' if warm else 'cold start at'} "
+              f"{args.plan_stats}: buckets {list(PLAN_STATS.boundaries)}")
 
     mesh = make_cli_mesh(args.mesh)
     dp = mesh.shape["data"]
@@ -281,43 +326,68 @@ def main(argv=None):
                   f"admission {args.admission}): "
                   f"padding waste {waste:.1%}")
 
-        batches = pack_batches(lengths, args.batch, histogram_aware=True,
-                               backend=args.query_backend,
-                               query_fanout=args.query_fanout,
-                               admission=args.admission,
-                               compactor=args.compactor)
+        prof = PhaseProfile()
+        with prof.span("pack"):
+            batches = pack_batches(lengths, args.batch, histogram_aware=True,
+                                   backend=args.query_backend,
+                                   query_fanout=args.query_fanout,
+                                   admission=args.admission,
+                                   compactor=args.compactor)
         step = jax.jit(partial(serve_step, cfg=cfg),
                        in_shardings=(p_sh, tok_sh, c_sh, replicated(mesh)),
                        out_shardings=(tok_sh, c_sh), donate_argnums=(2,))
         prefill = jax.jit(
             lambda p, toks: prefill_with_cache(p, cfg, toks, args.max_len),
             in_shardings=(p_sh, tok_sh), out_shardings=(None, c_sh))
+        # --profile wraps the loop in a JAX profiler trace (per-HLO detail
+        # for TensorBoard); spans block on device results only then, so
+        # the unprofiled path keeps its async dispatch pipelining
+        trace_cm = (jax.profiler.trace(args.profile) if args.profile
+                    else nullcontext())
         t0 = time.time()
         generated = 0
-        for bi, idx in enumerate(batches):
-            b = len(idx)
-            # ragged tail: pad to the full batch (one compiled shape, and the
-            # data axis always divides); surplus rows are dropped on count
-            if b < args.batch:
-                idx = np.concatenate([idx, np.repeat(idx[-1], args.batch - b)])
-            # pad to a 16-token bucket so jit reuses compiled prefill variants
-            prompt_len = min(-(-int(lengths[idx].max()) // 16) * 16,
-                             args.max_len - args.gen_tokens)
-            prompts = rng.integers(0, cfg.vocab_size,
-                                   size=(args.batch, prompt_len),
-                                   dtype=np.int32)
-            # fused prefill: one forward pass fills the whole KV cache
-            logits, cache = prefill(params, jnp.asarray(prompts))
-            tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-            cache_len = jnp.int32(prompt_len)
-            generated += b
-            for t in range(args.gen_tokens - 1):
-                tok, cache = step(params, tok, cache, cache_len)
-                cache_len += 1
+        with trace_cm:
+            for bi, idx in enumerate(batches):
+                b = len(idx)
+                # ragged tail: pad to the full batch (one compiled shape,
+                # and the data axis always divides); surplus rows are
+                # dropped on count
+                if b < args.batch:
+                    idx = np.concatenate(
+                        [idx, np.repeat(idx[-1], args.batch - b)])
+                # pad to a 16-token bucket so jit reuses compiled prefill
+                # variants
+                prompt_len = min(-(-int(lengths[idx].max()) // 16) * 16,
+                                 args.max_len - args.gen_tokens)
+                prompts = rng.integers(0, cfg.vocab_size,
+                                       size=(args.batch, prompt_len),
+                                       dtype=np.int32)
+                # fused prefill: one forward pass fills the whole KV cache
+                with prof.span("prefill"):
+                    logits, cache = prefill(params, jnp.asarray(prompts))
+                    if args.profile:
+                        jax.block_until_ready(cache)
+                tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+                cache_len = jnp.int32(prompt_len)
                 generated += b
+                for t in range(args.gen_tokens - 1):
+                    with prof.span("decode"):
+                        tok, cache = step(params, tok, cache, cache_len)
+                        if args.profile:
+                            jax.block_until_ready(tok)
+                    cache_len += 1
+                    generated += b
     dt = time.time() - t0
     print(f"served {len(lengths)} requests, {generated} tokens "
           f"in {dt:.1f}s ({generated/dt:.1f} tok/s)")
+    if args.profile:
+        print(f"profiler trace written to {args.profile} "
+              f"(tensorboard --logdir {args.profile})")
+        prof.report()
+    if args.plan_stats:
+        PLAN_STATS.autotune()
+        PLAN_STATS.save(args.plan_stats)
+        print(f"plan-stats saved to {args.plan_stats}: {PLAN_STATS.stats()}")
 
 
 if __name__ == "__main__":

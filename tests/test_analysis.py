@@ -261,6 +261,41 @@ def test_kernel_static_kwonly_param_not_tainted():
     assert kernelcheck.check_source("fix.py", src) == []
 
 
+def test_kernel_static_tape_interpreter_clean():
+    """The planfuse megakernel pattern: branching on a keyword-only
+    static instruction tape inside a loop is compile-time unrolling, not
+    a traced branch — the pass must stay quiet."""
+    src = textwrap.dedent("""
+        import jax.numpy as jnp
+
+        def tape_kernel(x_ref, o_ref, *, tape):
+            stack = []
+            for opcode, arg in tape:
+                if opcode == 0:
+                    stack.append(x_ref[arg])
+                elif opcode == 1:
+                    stack.append(stack.pop() ^ jnp.uint32(0xFFFFFFFF))
+                else:
+                    b = stack.pop()
+                    stack.append(stack.pop() & b)
+            o_ref[...] = stack.pop()
+    """)
+    assert kernelcheck.check_source("fix.py", src) == []
+
+
+def test_kernel_traced_tape_still_flagged():
+    """Counter-fixture: the same interpreter shape but with the opcode
+    READ FROM A REF (a traced value) must keep firing."""
+    src = textwrap.dedent("""
+        def tape_kernel(x_ref, t_ref, o_ref):
+            opcode = t_ref[0]
+            if opcode == 0:
+                o_ref[...] = x_ref[...]
+    """)
+    findings = kernelcheck.check_source("fix.py", src)
+    assert "kernel/traced-branch" in rules_of(findings)
+
+
 # ---------------------------------------------------------------------------
 # api pass
 # ---------------------------------------------------------------------------

@@ -1,0 +1,68 @@
+"""COLLECTIVE_budget.json coverage: every *runnable* nightly dryrun cell
+(mesh x arch x shape, minus the cells ``launch.shapes.runnable`` skips by
+spec) must carry a committed collective-bytes ceiling, and no committed
+entry may point at a cell that can no longer run.
+
+This locks the audited state: the budget file covers the runnable grid
+exactly, so ``repro.launch.dryrun --budget`` never reports an
+unbudgeted-cell finding on a nightly sweep.  Adding an arch or a shape
+without extending the budget (``--update-budget``) fails here instead of
+silently weakening the collective-volume gate.
+"""
+
+import json
+import os
+
+from repro.configs import get_config, list_archs
+from repro.launch.dryrun import budget_key
+from repro.launch.shapes import SHAPES, runnable
+
+BUDGET_PATH = os.path.join(os.path.dirname(__file__), os.pardir,
+                           "benchmarks", "COLLECTIVE_budget.json")
+
+
+def grid():
+    for mesh in ("16x16", "2x16x16"):
+        for arch in sorted(list_archs()):
+            cfg = get_config(arch)
+            for shape in SHAPES.values():
+                ok, _ = runnable(cfg, shape)
+                yield ({"mesh": mesh, "arch": arch, "shape": shape.name},
+                       ok)
+
+
+def test_every_runnable_cell_has_a_budget_entry():
+    with open(BUDGET_PATH) as f:
+        budget = json.load(f)
+    missing = [budget_key(rec) for rec, ok in grid()
+               if ok and budget_key(rec) not in budget]
+    assert not missing, (
+        f"{len(missing)} runnable dryrun cells lack a collective-bytes "
+        f"ceiling (run dryrun --update-budget and commit): {missing[:6]}")
+
+
+def test_no_stale_budget_entries():
+    with open(BUDGET_PATH) as f:
+        budget = json.load(f)
+    runnable_keys = {budget_key(rec) for rec, ok in grid() if ok}
+    stale = sorted(set(budget) - runnable_keys)
+    assert not stale, f"budget entries for non-runnable cells: {stale[:6]}"
+
+
+def test_skipped_cells_stay_skipped_by_spec():
+    """The only non-runnable cells are long_500k on full-attention archs
+    (quadratic history, skipped per DESIGN.md) — a change here means the
+    applicability spec moved and the budget grid must be revisited."""
+    skipped = [rec for rec, ok in grid() if not ok]
+    assert skipped, "no skipped cells: did runnable() lose its spec gate?"
+    assert all(rec["shape"] == "long_500k" for rec in skipped)
+    assert all(not get_config(rec["arch"]).subquadratic for rec in skipped)
+
+
+def test_budget_entries_are_well_formed():
+    with open(BUDGET_PATH) as f:
+        budget = json.load(f)
+    assert budget, "empty budget file"
+    for key, entry in budget.items():
+        assert entry["total_bytes"] > 0, key
+        assert isinstance(entry["counts"], dict), key

@@ -1,0 +1,437 @@
+"""Plan-level megakernel fusion: the lower_plan instruction tape, the
+planfuse Pallas kernel, the jax backend's fused execution path (bit
+identity vs the per-stage path and the numpy oracle across every
+encoding, segmented/tombstoned plans, sanitized boundaries), the VMEM /
+tape-length fallback gate, the result-cache contract, and the PlanStats
+capacity autotuner."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.analysis.runtime import sanitized
+from repro.core import (And, BitmapIndex, Eq, In, IndexSpec, IndexWriter,
+                        Not, Or, Range)
+from repro.core import query as Q
+from repro.core.query import (JaxBackend, NumpyBackend, compile_plan,
+                              lower_plan)
+from repro.kernels import planfuse
+
+
+def make_index(n=2011, cards=(7, 12, 30), k=1, seed=3, **spec):
+    r = np.random.default_rng(seed)
+    cols = [r.integers(0, c, size=n) for c in cards]
+    return BitmapIndex.build(
+        cols, IndexSpec(k=k, row_order="lex", **spec)), cols
+
+
+PREDICATES = [
+    Eq(0, 3),
+    Not(Eq(1, 2)),
+    In(1, [1, 5, 9]),
+    Range(2, 4, 21),
+    And(Eq(0, 2), Eq(1, 4)),
+    Or(Eq(0, 1), Eq(0, 2), Eq(1, 0)),
+    And(In(0, [0, 1, 2]), Range(1, 0, 6), Not(Eq(2, 5))),
+    Or(And(Eq(0, 1), Eq(1, 1)), Not(In(2, [0, 1, 2]))),
+]
+
+
+# ---------------------------------------------------------------------------
+# tape constants + lower_plan
+# ---------------------------------------------------------------------------
+
+
+def test_tape_opcodes_agree_with_kernel():
+    """query.py duplicates the opcode ids so the numpy-only path never
+    imports jax; the two definitions must stay identical."""
+    assert (Q.TAPE_PUSH, Q.TAPE_NOT, Q.TAPE_OP) == (
+        planfuse.PUSH, planfuse.NOT, planfuse.OP)
+    assert Q._TAPE_OP_IDS == {"and": planfuse.OP_AND, "or": planfuse.OP_OR,
+                              "xor": planfuse.OP_XOR}
+
+
+def test_lower_plan_leaf():
+    assert lower_plan(("leaf", 4)) == (((Q.TAPE_PUSH, 4),), 1)
+
+
+def test_lower_plan_not_and_fanin():
+    tape, depth = lower_plan(("not", ("leaf", 0)))
+    assert tape == ((Q.TAPE_PUSH, 0), (Q.TAPE_NOT, 0)) and depth == 1
+
+    tape, depth = lower_plan(
+        ("and", (("leaf", 0), ("leaf", 1), ("leaf", 2))))
+    # left fold: push 0, then (push k, AND) per further child
+    assert tape == ((Q.TAPE_PUSH, 0), (Q.TAPE_PUSH, 1),
+                    (Q.TAPE_OP, planfuse.OP_AND), (Q.TAPE_PUSH, 2),
+                    (Q.TAPE_OP, planfuse.OP_AND))
+    assert depth == 2  # left fold keeps at most two live operands
+
+
+def test_lower_plan_fold_keeps_bit_order():
+    root = ("fold", ("xor", "or"),
+            (("leaf", 0), ("leaf", 1), ("leaf", 2)))
+    tape, _ = lower_plan(root)
+    assert tape == ((Q.TAPE_PUSH, 0), (Q.TAPE_PUSH, 1),
+                    (Q.TAPE_OP, planfuse.OP_XOR), (Q.TAPE_PUSH, 2),
+                    (Q.TAPE_OP, planfuse.OP_OR))
+
+
+def test_lower_plan_depth_tracks_right_heavy_tree():
+    # ((leaf and leaf) or (leaf and leaf)): right subtree evaluates while
+    # the left result is live -> peak three operands
+    root = ("or", (("and", (("leaf", 0), ("leaf", 1))),
+                   ("and", (("leaf", 2), ("leaf", 3)))))
+    _, depth = lower_plan(root)
+    assert depth == 3
+
+
+def test_lower_plan_rejects_unknown_kind():
+    with pytest.raises(ValueError, match="unknown plan-node kind"):
+        lower_plan(("nand", (("leaf", 0), ("leaf", 1))))
+
+
+def test_lower_plan_on_real_compiled_plans():
+    idx, _ = make_index()
+    for pred in PREDICATES:
+        plan = compile_plan(idx, pred)
+        tape, depth = lower_plan(plan.root)
+        pushes = [arg for opcode, arg in tape if opcode == Q.TAPE_PUSH]
+        # tape visits leaves exactly in the planner's canonical numbering
+        assert pushes == list(range(len(plan.streams)))
+        assert 1 <= depth <= len(plan.streams)
+
+
+# ---------------------------------------------------------------------------
+# megakernel vs a straight numpy stack machine
+# ---------------------------------------------------------------------------
+
+
+def _numpy_tape_eval(planes, tape):
+    stack = []
+    for opcode, arg in tape:
+        if opcode == Q.TAPE_PUSH:
+            stack.append(planes[arg])
+        elif opcode == Q.TAPE_NOT:
+            stack.append(stack.pop() ^ np.uint32(0xFFFFFFFF))
+        else:
+            b, a = stack.pop(), stack.pop()
+            stack.append([np.bitwise_and, np.bitwise_or,
+                          np.bitwise_xor][arg](a, b))
+    return stack.pop()
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_planfuse_kernel_matches_numpy_stack_machine(seed):
+    import jax.numpy as jnp
+
+    r = np.random.default_rng(seed)
+    m, N, C = 4, planfuse.ROW_TILE * 2, planfuse.LANE_TILE
+    planes = r.integers(0, 2**32, size=(m, N, C), dtype=np.uint32)
+    # sprinkle clean-0 / clean-1 tiles so every kind class appears
+    planes[0, :, :] = 0
+    planes[1, : planfuse.ROW_TILE, :] = 0xFFFFFFFF
+    tape = ((Q.TAPE_PUSH, 0), (Q.TAPE_PUSH, 1), (Q.TAPE_OP, planfuse.OP_OR),
+            (Q.TAPE_PUSH, 2), (Q.TAPE_NOT, 0),
+            (Q.TAPE_OP, planfuse.OP_AND), (Q.TAPE_PUSH, 3),
+            (Q.TAPE_OP, planfuse.OP_XOR))
+    res, kind = planfuse.planfuse_kernel(jnp.asarray(planes), tape)
+    want = _numpy_tape_eval(planes.reshape(m, -1), tape).reshape(N, C)
+    np.testing.assert_array_equal(np.asarray(res), want)
+    want_kind = np.where(want == 0, 0, np.where(want == 0xFFFFFFFF, 1, 2))
+    np.testing.assert_array_equal(np.asarray(kind), want_kind)
+
+
+# ---------------------------------------------------------------------------
+# fused vs per-stage vs numpy: bit-identical EwahStreams
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("encoding", ["equality", "bitsliced", "binned"])
+def test_fused_bit_identical_across_encodings(encoding):
+    idx, _ = make_index(cards=(7, 12, 64), encoding=encoding)
+    preds = PREDICATES + [Range(2, 3, 40)]
+    plans = [compile_plan(idx, p) for p in preds]
+    fused = JaxBackend()
+    stage = JaxBackend(fuse=False)
+    oracle = NumpyBackend()
+    for plan in plans:
+        s_f = fused.execute_compressed(plan)
+        s_s = stage.execute_compressed(plan)
+        s_n = oracle.execute_compressed(plan)
+        np.testing.assert_array_equal(s_f.data, s_n.data)
+        np.testing.assert_array_equal(s_f.data, s_s.data)
+        assert s_f.n_rows == s_n.n_rows
+    # the row-id path flows through the same fused program
+    for (rows_f, _), (rows_n, _) in zip(fused.execute_many(plans),
+                                        [oracle.execute(p) for p in plans]):
+        np.testing.assert_array_equal(rows_f, rows_n)
+
+
+def test_fused_tape_actually_used():
+    """The fused path must really be on: the backend lowers a tape for
+    these plans (guards against silently falling back everywhere)."""
+    idx, _ = make_index()
+    plan = compile_plan(idx, PREDICATES[-1])
+    be = JaxBackend()
+    be.execute_compressed(plan)
+    assert be._fused_tape(plan.root) is not None
+    assert JaxBackend(fuse=False)._fused_tape(plan.root) is None
+
+
+def test_fused_segmented_and_tombstoned_plans():
+    """Segmented views route per-segment plans (live-mask wrapped after a
+    delete) through the fused path; answers must match the dense oracle."""
+    from repro.core import evaluate_mask
+
+    r = np.random.default_rng(5)
+    n = 1600
+    cols = [r.integers(0, c, size=n) for c in (6, 11, 23)]
+    spec = IndexSpec(k=1, row_order="lex", column_order="given")
+    w = IndexWriter(spec)
+    step = -(-n // 3)
+    for i in range(0, n, step):
+        w.append([c[i : i + step] for c in cols])
+        w.seal()
+    w.close()
+    view = w.index
+    alive = np.ones(n, dtype=bool)
+    preds = [And(Eq(0, 2), In(1, [1, 3, 5])), Or(Eq(2, 4), Not(Eq(0, 1)))]
+
+    def check():
+        got = view.query_many(preds, backend="jax")
+        for p, (rows, _) in zip(preds, got):
+            want = np.flatnonzero(evaluate_mask(p, cols) & alive)
+            np.testing.assert_array_equal(rows, want)
+
+    check()
+    dead = np.arange(64, 256)          # tombstone inside segment 0
+    w.delete(row_ids=dead)
+    alive[dead] = False
+    check()                            # live-mask plans, still fused-path
+
+
+def test_fused_under_sanitizer():
+    """REPRO_SANITIZE=1 structurally validates every stream crossing the
+    fused boundary — canonical-form bugs in the fused recompress epilogue
+    would throw here."""
+    idx, _ = make_index()
+    plans = [compile_plan(idx, p) for p in PREDICATES]
+    with sanitized():
+        for s in JaxBackend().execute_compressed_many(plans):
+            s.validate(origin="test_fused_under_sanitizer")
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_fused_matches_numpy_oracle_schedule(seed):
+    """Property test: random tables + random nested predicates, fused jax
+    streams bit-identical to the numpy backend."""
+    r = np.random.default_rng(seed)
+    n = int(r.integers(64, 1200))
+    cards = [int(c) for c in r.integers(2, 24, size=3)]
+    cols = [r.integers(0, c, size=n) for c in cards]
+    idx = BitmapIndex.build(cols, IndexSpec(k=1, row_order="lex"))
+
+    def rand_pred(depth=0):
+        kind = r.integers(0, 6 if depth < 2 else 3)
+        col = int(r.integers(0, len(cards)))
+        card = cards[col]
+        if kind == 0:
+            return Eq(col, int(r.integers(0, card)))
+        if kind == 1:
+            vals = r.integers(0, card, size=int(r.integers(1, 4)))
+            return In(col, [int(v) for v in vals])
+        if kind == 2:
+            lo = int(r.integers(0, card))
+            return Range(col, lo, lo + int(r.integers(0, card)))
+        if kind == 3:
+            return Not(rand_pred(depth + 1))
+        cls = And if kind == 4 else Or
+        return cls(*(rand_pred(depth + 1)
+                     for _ in range(int(r.integers(2, 4)))))
+
+    plans = [compile_plan(idx, rand_pred()) for _ in range(4)]
+    fused = JaxBackend().execute_compressed_many(plans)
+    ref = NumpyBackend().execute_compressed_many(plans)
+    for s_f, s_n in zip(fused, ref):
+        np.testing.assert_array_equal(s_f.data, s_n.data)
+
+
+# ---------------------------------------------------------------------------
+# fallback gate: tape length / VMEM budget
+# ---------------------------------------------------------------------------
+
+
+def test_vmem_model_prices_stack_peak():
+    assert planfuse.tape_vmem_bytes(1, 1) == \
+        4 * planfuse.ROW_TILE * planfuse.LANE_TILE * 4
+    assert planfuse.fits_vmem(4, 3)
+    assert not planfuse.fits_vmem(4, 3, budget=0)
+
+
+def test_fallback_when_tape_too_long(monkeypatch):
+    idx, _ = make_index()
+    plan = compile_plan(idx, And(Eq(0, 2), Eq(1, 4)))
+    monkeypatch.setattr(planfuse, "MAX_TAPE_LEN", 1)
+    be = JaxBackend()
+    assert be._fused_tape(plan.root) is None      # falls back per-stage
+    s = be.execute_compressed(plan)
+    np.testing.assert_array_equal(
+        s.data, NumpyBackend().execute_compressed(plan).data)
+
+
+def test_fallback_when_vmem_budget_exceeded(monkeypatch):
+    idx, _ = make_index()
+    plan = compile_plan(idx, And(Eq(0, 2), Eq(1, 4)))
+    monkeypatch.setattr(planfuse, "VMEM_BUDGET_BYTES", 1)
+    monkeypatch.setattr(
+        planfuse, "fits_vmem",
+        lambda m, d, budget=None: planfuse.tape_vmem_bytes(m, d) <= 1)
+    be = JaxBackend()
+    assert be._fused_tape(plan.root) is None
+    s = be.execute_compressed(plan)
+    np.testing.assert_array_equal(
+        s.data, NumpyBackend().execute_compressed(plan).data)
+
+
+# ---------------------------------------------------------------------------
+# result-cache contract: fused execution populates/hits the same entries
+# ---------------------------------------------------------------------------
+
+
+def _cascade_hit_rate(be, plans):
+    be.execute_compressed_many(plans)              # cold populate
+    be.result_cache.hits = be.result_cache.misses = 0
+    be.execute_compressed_many(plans)              # warm cascade
+    return be.result_cache.hit_rate
+
+
+def test_warm_cascade_hit_rate_unchanged_by_fusion():
+    idx, cols = make_index()
+    card0 = int(cols[0].max()) + 1
+    shared = In(1, [1, 2, 3])
+    plans = [compile_plan(idx, And(shared, Eq(0, v % card0)))
+             for v in range(12)]
+    fused_rate = _cascade_hit_rate(JaxBackend(), plans)
+    stage_rate = _cascade_hit_rate(JaxBackend(fuse=False), plans)
+    assert fused_rate == stage_rate == 1.0
+
+
+def test_fused_cache_respects_generation_invalidation():
+    """Same predicate, mutated index (new generation -> new leaf digests):
+    the fused path must MISS, not serve the stale stream."""
+    r = np.random.default_rng(9)
+    n = 512
+    cols = [r.integers(0, 6, size=n)]
+    spec = IndexSpec(k=1, row_order="lex", column_order="given")
+    w = IndexWriter(spec)
+    w.append(cols)
+    w.seal()
+    be = JaxBackend()
+    pred = Eq(0, 3)
+    plan0 = compile_plan(w.segments[0].index, pred)
+    s1 = be.execute_compressed(plan0)
+    be.result_cache.hits = be.result_cache.misses = 0
+    assert be.execute_compressed(plan0) == s1     # warm: same entry hits
+    assert be.result_cache.hits == 1
+    extra = [r.integers(0, 6, size=128)]
+    w.append(extra)
+    w.seal()
+    seg = w.segments[-1].index
+    be.result_cache.hits = be.result_cache.misses = 0
+    s2 = be.execute_compressed(compile_plan(seg, pred))
+    assert be.result_cache.misses == 1            # new digests: no stale hit
+    want = np.flatnonzero(extra[0] == 3)
+    np.testing.assert_array_equal(np.sort(seg.row_perm[s2.to_rows()]), want)
+    assert s1.n_rows == n and s2.n_rows == 128
+
+
+# ---------------------------------------------------------------------------
+# PlanStats: recording, autotuned buckets, persistence, grouping
+# ---------------------------------------------------------------------------
+
+
+def test_plan_stats_records_and_autotunes():
+    ps = Q.PlanStats()
+
+    class FakePlan:
+        def __init__(self, lens):
+            self.streams = [np.zeros(l, np.uint32) for l in lens]
+
+    for l in [3] * 40 + [100] * 40:
+        ps.record(FakePlan([l, 1]))
+    assert ps.recorded == 80 and ps.boundaries == ()
+    assert ps.capacity_for(3) == Q._capacity_bucket(3)   # cold: pow2
+    bounds = ps.autotune(max_buckets=4)
+    assert bounds == ps.boundaries and bounds
+    assert all(b % 8 == 0 for b in bounds)               # padded to 8
+    assert bounds[-1] >= 100
+    assert ps.capacity_for(2) == bounds[0]
+    # past the top boundary: the pow2 fallback, never a too-small bucket
+    assert ps.capacity_for(bounds[-1] + 1) == \
+        Q._capacity_bucket(bounds[-1] + 1)
+
+
+def test_plan_stats_eviction_keeps_newest_half():
+    ps = Q.PlanStats()
+
+    class FakePlan:
+        def __init__(self, l):
+            self.streams = [np.zeros(l, np.uint32)]
+
+    for l in range(ps.MAX_SAMPLES + 10):
+        ps.record(FakePlan(1 + l % 7))
+    assert ps.recorded == ps.MAX_SAMPLES + 10
+    assert len(ps.stats()["boundaries"]) == 0
+    assert ps.stats()["samples"] <= ps.MAX_SAMPLES
+
+
+def test_plan_stats_save_load_roundtrip(tmp_path):
+    ps = Q.PlanStats()
+
+    class FakePlan:
+        def __init__(self, l):
+            self.streams = [np.zeros(l, np.uint32)]
+
+    for l in (4, 9, 200):
+        ps.record(FakePlan(l))
+    ps.autotune()
+    path = tmp_path / "plan_stats.json"
+    ps.save(path)
+    fresh = Q.PlanStats()
+    assert fresh.load(path)
+    assert fresh.boundaries == ps.boundaries
+    fresh.autotune()                     # sample tail restored too
+    assert fresh.boundaries
+    assert not Q.PlanStats().load(tmp_path / "missing.json")
+
+
+def test_compile_plan_feeds_global_recorder():
+    idx, _ = make_index()
+    before = Q.PLAN_STATS.recorded
+    compile_plan(idx, Eq(0, 1))
+    assert Q.PLAN_STATS.recorded == before + 1
+
+
+def test_autotuned_buckets_drive_jax_grouping(monkeypatch):
+    """With trained boundaries the backend pads to the quantile bucket,
+    not the power of two — and answers stay identical."""
+    idx, _ = make_index()
+    plans = [compile_plan(idx, p) for p in PREDICATES[:4]]
+    ml = max(max(len(s) for s in p.streams) for p in plans)
+    ps = Q.PlanStats()
+    monkeypatch.setattr(Q, "PLAN_STATS", ps)
+    for p in plans:
+        ps.record(p)
+    ps.autotune(max_buckets=2)
+    cap = ps.capacity_for(ml)
+    assert cap % 8 == 0 and cap >= ml
+    be = JaxBackend()
+    groups = be._group(plans)
+    assert all(key[1] in set(ps.boundaries) | {Q._capacity_bucket(ml)}
+               for key in groups)
+    for s, p in zip(be.execute_compressed_many(plans), plans):
+        np.testing.assert_array_equal(
+            s.data, NumpyBackend().execute_compressed(p).data)
