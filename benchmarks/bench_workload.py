@@ -1,0 +1,89 @@
+"""Workload-replay smoke: the cost model's re-encoding choice must track
+the recorded query mix.
+
+Untimed (no ``us_per_query`` rows — ``trend.py`` ignores the suite): two
+synthetic workloads are replayed into a fresh ``WorkloadStats`` through
+the real telemetry path (queries against a live ``SegmentedIndex``), and
+``make_compaction_chooser`` must flip the column's encoding when the mix
+flips from point lookups to wide ranges — roaring for the point mix
+(Eq = one container fold, zero stream merges), a range-friendly encoding
+(bit-sliced at this cardinality) for the range mix.  The timed version of
+the same loop is ``bench_fig6``'s adaptive scenario; this suite is the
+fast deterministic gate on the *decision*, not the wall clock.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import Eq, IndexSpec, IndexWriter, Range
+from repro.workload import WORKLOAD_STATS, make_compaction_chooser
+
+
+def _replay(col, preds, queries_needed=48):
+    """Build a two-segment writer over ``col``, replay ``preds`` against
+    the live view until the global stats (the sink the telemetry wrappers
+    feed) have enough samples, compact, and probe the chooser the
+    compaction consulted.  Returns a result row sans the mix label."""
+    spec = IndexSpec(k=1, row_order="lex", column_order="given",
+                     encoding="auto")
+    w = IndexWriter(spec, workload_stats=WORKLOAD_STATS)
+    half = len(col) // 2
+    w.append([col[:half]])
+    w.seal()
+    w.append([col[half:]])
+    w.seal()
+    view = w.index
+    WORKLOAD_STATS.clear()
+    while len(WORKLOAD_STATS) < queries_needed:
+        view.query_many(preds, backend="numpy")
+    merged = w.compact(span=(0, 2))
+    chooser = make_compaction_chooser(WORKLOAD_STATS)
+    row = {"chosen": merged.index.encodings()[0],
+           "samples": len(WORKLOAD_STATS),
+           "chooser_fitted": chooser is not None,
+           "untracked_column_untouched":
+               chooser is not None and chooser(5, None, 1) is None}
+    WORKLOAD_STATS.clear()
+    return row
+
+
+def run(quick=False):
+    n = 4_000 if quick else 12_000
+    rng = np.random.default_rng(31)
+    card = 300
+    col = np.minimum((rng.random(n) ** 2.5 * card).astype(np.int64),
+                     card - 1)
+    card = int(col.max()) + 1
+    width = max(2, int(card * 0.85))
+    mixes = {
+        "point": [Eq(0, int(v))
+                  for v in rng.integers(0, card, size=16)],
+        "range": [Range(0, int(lo), int(lo) + width - 1)
+                  for lo in rng.integers(0, card - width + 1, size=16)],
+    }
+    out = []
+    for mix, preds in mixes.items():
+        out.append({"scenario": "workload-replay", "mix": mix,
+                    **_replay(col, preds)})
+    return out
+
+
+def validate(rows):
+    by_mix = {r["mix"]: r for r in rows}
+    pt, rg = by_mix["point"], by_mix["range"]
+    checks = [
+        f"workload-replay: point mix re-encodes to roaring "
+        f"(got {pt['chosen']}, {pt['samples']} samples): "
+        f"{'PASS' if pt['chosen'] == 'roaring' else 'FAIL'}",
+        f"workload-replay: chosen encoding flips when the mix flips "
+        f"point->range ({pt['chosen']} -> {rg['chosen']}): "
+        f"{'PASS' if rg['chosen'] != pt['chosen'] else 'FAIL'}",
+        f"workload-replay: range mix picks a range-friendly encoding "
+        f"(got {rg['chosen']}): "
+        f"{'PASS' if rg['chosen'] in ('bitsliced', 'binned') else 'FAIL'}",
+        f"workload-replay: chooser leaves untracked columns to the "
+        f"static per-column choice: "
+        f"{'PASS' if all(r['untracked_column_untouched'] for r in rows) else 'FAIL'}",
+    ]
+    return checks

@@ -23,7 +23,7 @@ def main() -> None:
 
     from . import (bench_fig2, bench_fig3, bench_fig4, bench_fig6,
                    bench_moe_dispatch, bench_scaling, bench_table3,
-                   bench_table4)
+                   bench_table4, bench_workload)
 
     suites = {
         "fig2_dirty_probability": bench_fig2,
@@ -34,6 +34,7 @@ def main() -> None:
         "fig6_query_cost": bench_fig6,
         "scaling_prefix_growth": bench_scaling,
         "moe_dispatch_bitmaps": bench_moe_dispatch,
+        "workload_replay": bench_workload,
     }
     if args.only:
         keys = [k for k in suites if any(s in k for s in args.only.split(","))]

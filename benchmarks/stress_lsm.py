@@ -15,6 +15,17 @@ that contract under real scheduling jitter.
 
   PYTHONPATH=src python -m benchmarks.stress_lsm [--seconds 120] [--seed 0]
 
+``--workload`` runs the adaptive-re-encoding phase instead: an
+``IndexWriter`` carrying ``workload_stats`` ingests skewed waves while a
+background compactor merges — and *re-encodes* — segments toward the
+recorded point-heavy query mix (docs/containers.md), racing live
+``query_many`` traffic and rolling deletes.  Every wave diffs a census
+query and sampled predicates against a dense numpy oracle: no dropped,
+duplicated, or resurrected ids, no drift, even when a query lands mid
+re-encode; at the end the converged column must have left the static
+chooser's bit-sliced pick for a point-cheap encoding (``roaring``, or its
+analytic-model tie ``equality`` at k=1).
+
 Exit status 0 = clean; 1 = an id was dropped/duplicated (details printed).
 """
 
@@ -92,6 +103,86 @@ def run(seconds=120.0, seed=0, batch_size=16, wave_rows=96):
     return problems, stats
 
 
+def run_workload(seconds=60.0, seed=0, wave_rows=96):
+    """The adaptive phase: a workload-stats-carrying writer under a live
+    background compactor whose merges re-encode toward the observed mix,
+    racing queries and deletes.  Returns ``(problems, stats)`` like
+    :func:`run`."""
+    # deferred like run(): --sanitize must set REPRO_SANITIZE first
+    from repro.core import (BackgroundCompactor, Eq, IndexSpec, IndexWriter,
+                            Range, evaluate_mask)
+    from repro.workload import WORKLOAD_STATS
+
+    rng = np.random.default_rng(seed)
+    card = 300
+    spec = IndexSpec(k=1, row_order="lex", column_order="given",
+                     encoding="auto")
+    w = IndexWriter(spec, seal_rows=64, workload_stats=WORKLOAD_STATS)
+    WORKLOAD_STATS.clear()
+    values = np.zeros(0, dtype=np.int64)   # every admitted row, ingest order
+    alive = np.zeros(0, dtype=bool)
+    problems = []
+    waves = 0
+    queries = 0
+    deadline = time.time() + seconds
+    with BackgroundCompactor(w, interval=0.005):
+        while time.time() < deadline and not problems:
+            waves += 1
+            n = int(rng.integers(16, wave_rows))
+            batch = np.minimum(
+                (rng.random(n) ** 2.5 * card).astype(np.int64), card - 1)
+            w.append([batch])
+            values = np.concatenate([values, batch])
+            alive = np.concatenate([alive, np.ones(n, dtype=bool)])
+            if alive.any() and rng.integers(0, 2):
+                live_ids = np.flatnonzero(alive)
+                victims = rng.choice(live_ids,
+                                     size=min(len(live_ids), 24),
+                                     replace=False)
+                w.delete(row_ids=victims)
+                alive[victims] = False
+            # point-heavy mix (so the chooser should converge on roaring)
+            # with occasional ranges, racing the compactor on purpose
+            preds = [Eq(0, int(v)) for v in rng.integers(0, card, size=6)]
+            if waves % 4 == 0:
+                lo = int(rng.integers(0, card // 2))
+                preds.append(Range(0, lo, lo + card // 3))
+            preds.append(Range(0, 0, card - 1))   # the full id census
+            results = w.index.query_many(preds)
+            queries += len(preds)
+            for p, (got, _) in zip(preds, results):
+                want = np.flatnonzero(evaluate_mask(p, [values]) & alive)
+                if not np.array_equal(np.sort(got), want):
+                    dup = len(got) - len(np.unique(got))
+                    problems.append(
+                        f"wave {waves}: {p!r} drifted from the dense "
+                        f"oracle ({len(got)} rows vs {len(want)}, "
+                        f"{dup} duplicated)")
+    # converged: one explicit full-span compaction under the recorded mix
+    # must land on a point-cheap encoding — the static auto rule picks
+    # bitsliced at this cardinality, so leaving it proves the workload
+    # model (not the histogram) chose.  roaring and equality tie on the
+    # analytic model at k=1 (both answer Eq in zero stream merges), so
+    # either proves the re-encode; the fitted lines break the tie.
+    segs = w.segments
+    merged = (w.compact(span=(0, len(segs))) if len(segs) >= 2
+              else segs[0] if segs else None)
+    encoding = merged.index.encodings()[0] if merged is not None else None
+    samples = len(WORKLOAD_STATS)
+    if not problems and samples >= 32 and encoding not in ("roaring",
+                                                           "equality"):
+        problems.append(
+            f"workload: point-heavy mix ({samples} samples) compacted to "
+            f"{encoding!r}, expected a point-cheap re-encode "
+            f"(roaring/equality) instead of the static bitsliced choice")
+    WORKLOAD_STATS.clear()
+    stats = {"waves": waves, "admitted": len(values),
+             "live": int(alive.sum()), "segments": len(w.segments),
+             "queries": queries, "workload_samples": samples,
+             "final_encoding": encoding}
+    return problems, stats
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--seconds", type=float, default=120.0)
@@ -101,11 +192,19 @@ def main(argv=None) -> int:
                     help="run with REPRO_SANITIZE=1: every pack result is "
                          "structurally validated and lock acquisition "
                          "order is checked for inversions")
+    ap.add_argument("--workload", action="store_true",
+                    help="run the adaptive-re-encoding phase: the "
+                         "background compactor re-encodes segments toward "
+                         "the live query mix while queries and deletes "
+                         "race it")
     args = ap.parse_args(argv)
     if args.sanitize:
         os.environ["REPRO_SANITIZE"] = "1"
-    problems, stats = run(seconds=args.seconds, seed=args.seed,
-                          batch_size=args.batch)
+    if args.workload:
+        problems, stats = run_workload(seconds=args.seconds, seed=args.seed)
+    else:
+        problems, stats = run(seconds=args.seconds, seed=args.seed,
+                              batch_size=args.batch)
     print(f"stress_lsm: {stats}")
     if problems:
         for p in problems:

@@ -21,9 +21,9 @@ commits while a genuine regression still trips every layer:
 2. **windowed min-of-N timing** at the producer (`bench_fig6._best_of`
    grows each timed window to >= 50ms);
 3. **confirmation re-runs** — suspected regressions re-run *only their
-   suites* (``--confirm``, default 1) and a row fails only when it
+   suites* (``--confirm``, default 2) and a row fails only when it
    regresses in every pass.  Scheduler phantoms (this container shows
-   per-row swings up to 2x) don't reproduce; a real slowdown does.
+   per-row swings up to 2x) don't reproduce twice; a real slowdown does.
 
 Rows are matched by suite + their non-volatile fields (k, sort, column,
 backend, scenario, ...); measurements (``us_per_query``,
@@ -48,7 +48,8 @@ import sys
 
 VOLATILE = {"us_per_query", "words_scanned", "cache_hit_rate",
             "agrees_with_numpy", "agrees_with_dense",
-            "agrees_with_equality", "agrees_with_per_stage"}
+            "agrees_with_equality", "agrees_with_per_stage",
+            "agrees_with_dense_oracle"}
 
 
 def row_identity(suite: str, row: dict):
@@ -179,7 +180,7 @@ def main() -> None:
                     help="ignore regressions smaller than this many us")
     ap.add_argument("--no-normalize", action="store_true",
                     help="skip the median machine-factor normalization")
-    ap.add_argument("--confirm", type=int, default=1,
+    ap.add_argument("--confirm", type=int, default=2,
                     help="re-run suspect suites this many times; a row "
                          "fails only if it regresses in every pass (0 = "
                          "gate on the single sample)")

@@ -37,6 +37,11 @@ RULES = {
         "PLAN_NODE_KINDS",
     "backend/missing-declaration":
         "PLAN_NODE_KINDS declaration not found",
+    "container/missing-class":
+        "a container-class dispatch covers only some CONTAINER_CLASSES "
+        "and has no raise on the fall-through",
+    "container/missing-declaration":
+        "CONTAINER_CLASSES declaration not found",
     "kernel/traced-branch":
         "Python if/while/ternary on a traced value inside a kernel body",
     "kernel/host-callback":
@@ -60,6 +65,10 @@ RULES = {
 # (and cheap) to run it over the whole tree
 _BACKEND_FILES = ("src/repro/core/query.py", "src/repro/core/encodings.py")
 
+# container-class dispatch sites: the numpy container module plus the jax
+# backend's batched container fold (core/query.py)
+_CONTAINER_FILES = ("src/repro/core/containers.py", "src/repro/core/query.py")
+
 
 def _iter_py(root, rel):
     base = os.path.join(root, rel)
@@ -72,7 +81,8 @@ def _iter_py(root, rel):
 def run_analysis(root: str = ".") -> list[Finding]:
     """Run every static pass over the tree at ``root``; returns findings
     with paths relative to ``root``."""
-    from . import apicheck, backendcheck, kernelcheck, locksafety
+    from . import (apicheck, backendcheck, containercheck, kernelcheck,
+                   locksafety)
 
     findings: list[Finding] = []
 
@@ -96,6 +106,14 @@ def run_analysis(root: str = ".") -> list[Finding]:
             with open(path) as fh:
                 backend_sources[relpath] = fh.read()
     findings += backendcheck.check_sources(backend_sources)
+
+    container_sources = {}
+    for relpath in _CONTAINER_FILES:
+        path = os.path.join(root, relpath)
+        if os.path.exists(path):
+            with open(path) as fh:
+                container_sources[relpath] = fh.read()
+    findings += containercheck.check_sources(container_sources)
 
     for path in _iter_py(root, "src/repro/kernels"):
         with open(path) as fh:

@@ -27,6 +27,7 @@ table).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from time import perf_counter
 
 import numpy as np
 
@@ -35,6 +36,15 @@ from .encodings import (ColumnEncoding, assign_codes,  # noqa: F401 (re-export)
 from .histogram import column_histogram
 from .query import compile_plan, get_backend
 from .strategies import IndexSpec
+
+
+def _observe_workload(plans, seconds: float) -> None:
+    """Feed one executed batch into the workload-telemetry subsystem
+    (lazy import: the core package must not depend on repro.workload at
+    import time)."""
+    from ..workload import record_execution
+
+    record_execution(plans, seconds)
 
 _LEGACY_KWARGS = ("k", "row_order", "code_order", "value_policy",
                   "column_order")
@@ -155,7 +165,10 @@ class BitmapIndex:
         reordered row space (``self.row_perm[row_ids]`` maps back).
         """
         plan = compile_plan(self, pred, names=names)
-        return get_backend(backend, **backend_opts).execute(plan)
+        t0 = perf_counter()
+        out = get_backend(backend, **backend_opts).execute(plan)
+        _observe_workload([plan], perf_counter() - t0)
+        return out
 
     def query_compressed(self, pred, backend: str = "numpy", names=None,
                          **backend_opts):
@@ -165,7 +178,10 @@ class BitmapIndex:
         sub-plan results are memoized in the backend's LRU result cache so
         cascaded predicates reuse shared work."""
         plan = compile_plan(self, pred, names=names)
-        return get_backend(backend, **backend_opts).execute_compressed(plan)
+        t0 = perf_counter()
+        out = get_backend(backend, **backend_opts).execute_compressed(plan)
+        _observe_workload([plan], perf_counter() - t0)
+        return out
 
     def query_many(self, preds, backend: str = "numpy", names=None,
                    **backend_opts):
@@ -173,7 +189,10 @@ class BitmapIndex:
         plans share one padded device dispatch.  Returns a list of
         (row_ids, words_scanned)."""
         plans = [compile_plan(self, p, names=names) for p in preds]
-        return get_backend(backend, **backend_opts).execute_many(plans)
+        t0 = perf_counter()
+        out = get_backend(backend, **backend_opts).execute_many(plans)
+        _observe_workload(plans, perf_counter() - t0)
+        return out
 
     def equality_query(self, col_idx: int, value: int, backend: str = "numpy"):
         """Rows where column == value (planner-compiled AND of the value's
@@ -197,15 +216,23 @@ class BitmapIndex:
 
 
 def _construct(table_cols: list, spec: IndexSpec | None,
-               materialize: bool = True) -> "BitmapIndex":
+               materialize: bool = True,
+               encoding_chooser=None) -> "BitmapIndex":
     """The actual Algorithm-1 pipeline over one run of rows.
 
     This is what :meth:`IndexWriter.seal` runs per segment (and what
     ``BitmapIndex.build`` reaches through its one-segment writer): column
     histograms -> column permutation -> row sort -> per-column encoding
     choice (the spec's ``encoding`` strategy reads each histogram) ->
-    per-encoding EWAH streams (k-of-N value bitmaps, bit-slice planes, or
-    histogram-equalized bins; see :mod:`repro.core.encodings`).
+    per-encoding EWAH streams (k-of-N value bitmaps, bit-slice planes,
+    histogram-equalized bins, or Roaring container sets; see
+    :mod:`repro.core.encodings`).
+
+    ``encoding_chooser(original_col, hist, k) -> kind | None`` overrides
+    the spec's static chooser per column — the workload-driven
+    re-encoding hook compaction passes down
+    (:func:`repro.workload.make_compaction_chooser`); a None return
+    defers that column back to the spec.
     """
     spec = (spec or IndexSpec()).validate()
     strategies = spec.strategies()
@@ -230,8 +257,12 @@ def _construct(table_cols: list, spec: IndexSpec | None,
     idx = BitmapIndex(n_rows=n, spec=spec, row_perm=np.asarray(row_perm),
                       col_perm=perm_cols)
     chooser = strategies["encoding"]
-    for col, card, hist in zip(cols, cards, hists):
-        kind = chooser(hist, spec.k)
+    for pos, col, card, hist in zip(perm_cols, cols, cards, hists):
+        kind = None
+        if encoding_chooser is not None:
+            kind = encoding_chooser(int(pos), hist, spec.k)
+        if kind is None:
+            kind = chooser(hist, spec.k)
         enc = build_encoding(kind, col, card, hist, spec,
                              materialize=materialize)
         idx.columns.append(ColumnIndex(encoding=enc))

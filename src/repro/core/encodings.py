@@ -31,6 +31,14 @@ Three encodings implement the protocol:
   compile time so both backends execute the result unchanged, and without
   ever reading the segment's raw columns (``keep_columns=False`` safe).
 
+* :class:`RoaringEncoding` — one Roaring-style container set per value
+  (:mod:`repro.core.containers`): array / bitmap / run containers per
+  aligned 2^16-row chunk, chosen by the classic cardinality/run-count
+  thresholds at seal time.  Predicates compile to ``("cfold", ...)`` plan
+  nodes evaluated container-wise (galloping intersections, batched Pallas
+  word merges) and lowered to one canonical ``EwahStream`` leaf at the
+  plan root — see docs/containers.md.
+
 Which encoding a column gets is decided by an ``encoding`` *strategy*
 (:mod:`repro.core.strategies`) reading the column histogram — the built-in
 ``"auto"`` chooser sends high-cardinality columns to bit-sliced, skewed
@@ -50,7 +58,8 @@ from .index_size import column_bitmap_sizes
 
 __all__ = [
     "ColumnEncoding", "EqualityEncoding", "BitSlicedEncoding",
-    "BinnedEncoding", "assign_codes", "build_encoding", "encoding_kinds",
+    "BinnedEncoding", "RoaringEncoding", "assign_codes", "build_encoding",
+    "encoding_kinds",
 ]
 
 
@@ -183,6 +192,74 @@ class EqualityEncoding(ColumnEncoding):
         # a range spanning more than half the domain compiles through the
         # compressed-domain complement: rows hold exactly one dense value
         # id, so Not(In(complement)) is exact and halves the OR fan-in
+        if width > self.card - width:
+            return ("not", self.compile_in(
+                ctx, [*range(0, lo), *range(hi + 1, self.card)]))
+        return self.compile_in(ctx, range(lo, hi + 1))
+
+
+class RoaringEncoding(ColumnEncoding):
+    """Roaring-style chunked containers, one container set per value.
+
+    Each attribute value's row set is a :class:`~repro.core.containers.
+    ContainerSet`: per aligned 2^16-row chunk, a sorted-array / bitmap /
+    run container chosen by the Roaring cardinality/run-count thresholds
+    at seal time (docs/containers.md).  ``Eq`` compiles to a single
+    ``("cfold", ...)`` node, ``In``/``Range`` to a container-wise OR fold
+    over the member values, and a range wider than half the domain goes
+    through the compressed-domain complement exactly like the equality
+    encoding.  Backends evaluate the fold container-wise — galloping
+    array∩array / array∩bitmap intersection, batched word-space Pallas
+    merges — and lower the result to one canonical ``EwahStream`` leaf,
+    so everything downstream of the plan root (caching, tombstones,
+    fan-out, sanitizers) is unchanged.  Raw columns are not needed at
+    query time (``keep_columns=False`` safe).
+    """
+
+    kind = "roaring"
+
+    def __init__(self, csets, sizes, card, n_rows):
+        self.csets = csets
+        self.streams = csets  # non-None marks the column queryable
+        self.sizes = sizes
+        self.card = card
+        self.n_rows = n_rows
+
+    @classmethod
+    def build(cls, col, card, hist, spec, materialize: bool = True):
+        from . import containers
+        order = np.argsort(col, kind="stable")
+        sorted_vals = col[order]
+        boundaries = np.flatnonzero(np.diff(sorted_vals)) + 1
+        groups = np.split(order, boundaries)
+        vals = (sorted_vals[np.concatenate(([0], boundaries))]
+                if len(col) else [])
+        pos_per_value = {int(v): g for v, g in zip(vals, groups)}
+        empty = np.empty(0, dtype=np.int64)
+        csets = [containers.from_positions(
+            np.sort(pos_per_value.get(v, empty)), len(col))
+            for v in range(card)]
+        sizes = np.asarray([cs.size_words() for cs in csets],
+                           dtype=np.int64)
+        return cls(csets if materialize else None, sizes, card, len(col))
+
+    def _cfold(self, ctx, csets):
+        cids = tuple(ctx.container(cs) for cs in csets)
+        est = int(sum(cs.size_words() for cs in csets))
+        return ("cfold", ("or",) * (len(cids) - 1), cids, est)
+
+    def compile_eq(self, ctx, value: int):
+        return self._cfold(ctx, [self.csets[int(value)]])
+
+    def compile_in(self, ctx, values):
+        return self._cfold(ctx, [self.csets[int(v)] for v in values])
+
+    def compile_range(self, ctx, lo: int, hi: int):
+        width = hi - lo + 1
+        if width == self.card:
+            return ctx.ones()
+        # same complement trick as EqualityEncoding: over half the domain,
+        # fold the complement values and marker-flip the result
         if width > self.card - width:
             return ("not", self.compile_in(
                 ctx, [*range(0, lo), *range(hi + 1, self.card)]))
@@ -436,6 +513,7 @@ ENCODINGS: dict[str, type] = {
     BitSlicedEncoding.kind: BitSlicedEncoding,
     BitSlicedGrayEncoding.kind: BitSlicedGrayEncoding,
     BinnedEncoding.kind: BinnedEncoding,
+    RoaringEncoding.kind: RoaringEncoding,
 }
 
 

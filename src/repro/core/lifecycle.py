@@ -86,16 +86,26 @@ class IndexWriter:
     clock:
         TTL time source (absolute seconds; default ``time.time``).
         Injectable so tests can expire rows deterministically.
+    workload_stats:
+        Optional :class:`~repro.workload.WorkloadStats`.  When set,
+        every compaction fits a cost model over the recorded query mix
+        and re-encodes the merged segment's columns toward the cheapest
+        candidate (``repro.workload.make_compaction_chooser``); unset
+        keeps the spec's static per-histogram chooser.
     """
 
     def __init__(self, spec: IndexSpec | None = None, *, names=None,
                  seal_rows: int | None = None, materialize: bool = True,
-                 clock=time.time):
+                 clock=time.time, workload_stats=None):
         self.spec = (spec or IndexSpec()).validate()
         self.names = tuple(names) if names is not None else None
         self.seal_rows = seal_rows
         self.materialize = materialize
         self.clock = clock
+        # optional WorkloadStats: compactions consult the fitted cost
+        # model and re-encode merged segments toward the observed query
+        # mix (repro.workload.make_compaction_chooser)
+        self.workload_stats = workload_stats
         self._segments: tuple[Segment, ...] = ()    # guarded-by: _lock
         self._chunks: list[list[np.ndarray]] = []   # guarded-by: _lock
         self._chunk_deleted: list[np.ndarray] = []  # guarded-by: _lock
@@ -403,8 +413,13 @@ class IndexWriter:
             # found by diffing against this and replayed onto the merged
             # segment before the swap publishes it
             pre_dead = [frozenset(s.dead_ids(now).tolist()) for s in retired]
+            chooser = None
+            if self.workload_stats is not None:
+                from ..workload import make_compaction_chooser
+                chooser = make_compaction_chooser(self.workload_stats)
             merged = compact(retired, self.spec,
-                             materialize=self.materialize, now=now)
+                             materialize=self.materialize, now=now,
+                             encoding_chooser=chooser)
             with self._lock:
                 cur = self._segments
                 # seals only append and compactions are single-file, so the
@@ -424,9 +439,16 @@ class IndexWriter:
 
 
 def compact(segments, spec: IndexSpec | None = None, *,
-            materialize: bool = True, now=None) -> Segment:
+            materialize: bool = True, now=None,
+            encoding_chooser=None) -> Segment:
     """Merge adjacent sealed segments into one re-sorted segment, dropping
     tombstoned rows (and rows expired at ``now``).
+
+    ``encoding_chooser(original_col, hist, k) -> kind | None`` overrides
+    the spec's per-column encoding choice for the merged segment — the
+    workload-driven re-encoding hook
+    (:func:`repro.workload.make_compaction_chooser`); None keeps the
+    spec's static chooser for that column.
 
     Surviving rows concatenate in original ingest order and the full
     pipeline (histogram refresh over the merged distribution, reordering,
@@ -482,7 +504,7 @@ def compact(segments, spec: IndexSpec | None = None, *,
         [c[kept] for c in cat_cols], spec, row_start=row_start,
         span_stop=span_stop, row_ids=cat_ids[kept], expiry=cat_exp[kept],
         tombstone_rows=np.searchsorted(kept, fillers),
-        materialize=materialize)
+        materialize=materialize, encoding_chooser=encoding_chooser)
 
 
 class BackgroundCompactor:

@@ -163,12 +163,20 @@ class Not(Predicate):
 #                                  children[i + 1]); child order is
 #                                  SEMANTIC — the bit-sliced comparison
 #                                  circuit — so it is never cost-reordered
+#   ("cfold", ops, (cids...), est) -> left fold over plan.containers[cid]
+#                                  Roaring container sets (core/containers);
+#                                  est is the estimated compressed word cost.
+#                                  Backends replace every cfold with a
+#                                  canonical-EWAH leaf via lower_containers()
+#                                  BEFORE stream evaluation, so caches,
+#                                  tombstone ANDs, fan-out, and sanitizers
+#                                  only ever see leaf streams
 
 # The closed set of plan-node kinds.  Every backend must dispatch on all
 # of these (repro.analysis enforces it: `backend/missing-kind`), and any
 # new kind constructed below must be added here (`backend/undeclared-kind`)
 # *and* handled by every backend before it ships.
-PLAN_NODE_KINDS = ("leaf", "not", "and", "or", "fold")
+PLAN_NODE_KINDS = ("leaf", "not", "and", "or", "fold", "cfold")
 
 
 @dataclass
@@ -185,6 +193,12 @@ class Plan:
     root: tuple
     n_rows: int
     scope: tuple | None = None
+    # Roaring container sets referenced by ("cfold", ...) nodes; None once
+    # lower_containers() has rewritten every cfold into a leaf stream.
+    containers: list | None = None
+    # per-predicate telemetry events (column, shape, width, encoding,
+    # merges) — what WorkloadStats aggregates into cost-model samples
+    workload: tuple = ()
 
     @property
     def n_words(self) -> int:
@@ -210,6 +224,10 @@ def _sig(node):
         return ("not", _sig(node[1]))
     if kind == "fold":
         return ("fold", node[1], tuple(_sig(c) for c in node[2]))
+    if kind == "cfold":
+        # container ids are per-plan positions (like leaf numbering), so
+        # the structural shape is the op list + fan-in width
+        return ("cfold", node[1], len(node[2]))
     return (kind, tuple(_sig(c) for c in node[1]))
 
 
@@ -225,6 +243,10 @@ def count_merges(node) -> int:
         return 1 + count_merges(node[1])
     if kind == "fold":
         return len(node[2]) - 1 + sum(count_merges(c) for c in node[2])
+    if kind == "cfold":
+        # container-wise merges inside the fold, plus nothing per leaf —
+        # the lowered EWAH bridge is accounted as part of the fold
+        return max(len(node[2]) - 1, 0)
     if kind not in ("and", "or"):
         raise ValueError(f"unknown plan-node kind {kind!r}")
     return len(node[1]) - 1 + sum(count_merges(c) for c in node[1])
@@ -271,6 +293,10 @@ def lower_plan(root) -> tuple:
                 rec(child)
                 tape.append((TAPE_OP, _TAPE_OP_IDS[op]))
             return
+        if kind == "cfold":
+            raise ValueError(
+                "container fold nodes cannot lower to the megakernel tape; "
+                "lower_containers() must replace them with leaves first")
         if kind not in ("and", "or"):
             raise ValueError(f"unknown plan-node kind {kind!r}")
         children = node[1]
@@ -408,17 +434,25 @@ def _zero_stream(n_rows: int) -> np.ndarray:
 
 class PlanContext:
     """What a :class:`~repro.core.encodings.ColumnEncoding` compiles
-    against: leaf registration plus the constant-result streams."""
+    against: leaf/container registration plus the constant-result
+    streams."""
 
-    __slots__ = ("streams", "n_rows")
+    __slots__ = ("streams", "n_rows", "containers")
 
     def __init__(self, n_rows: int):
         self.streams: list = []
+        self.containers: list = []
         self.n_rows = n_rows
 
     def leaf(self, stream) -> tuple:
         self.streams.append(stream)
         return ("leaf", len(self.streams) - 1)
+
+    def container(self, cset) -> int:
+        """Register a Roaring container set; returns its cid for a
+        ``("cfold", ...)`` node."""
+        self.containers.append(cset)
+        return len(self.containers) - 1
 
     def zero(self) -> tuple:
         """Constant-empty leaf (out-of-domain value, empty range)."""
@@ -449,6 +483,8 @@ def compile_plan(index, pred: Predicate, names=None) -> Plan:
     inv[col_perm] = np.arange(len(col_perm))
     ctx = PlanContext(index.n_rows)
 
+    events: list = []
+
     def resolve(col):
         if isinstance(col, str):
             if names is None:
@@ -467,32 +503,38 @@ def compile_plan(index, pred: Predicate, names=None) -> Plan:
         ci = index.columns[int(inv[col])]
         if ci.streams is None:
             raise ValueError("index built with materialize=False cannot be queried")
-        return ci.encoding
+        return col, ci.encoding
+
+    def record(col, shape, width, enc, node):
+        events.append((col, shape, width, enc.kind, count_merges(node)))
+        return node
 
     def build(p) -> tuple:
         if isinstance(p, Eq):
-            enc = resolve(p.col)
+            col, enc = resolve(p.col)
             if not 0 <= p.value < enc.card:
                 return ctx.zero()  # out-of-domain: no rows
-            return enc.compile_eq(ctx, p.value)
+            return record(col, "eq", 1, enc, enc.compile_eq(ctx, p.value))
         if isinstance(p, In):
-            enc = resolve(p.col)
+            col, enc = resolve(p.col)
             values = sorted({v for v in p.values if 0 <= v < enc.card})
             if not values:
                 return ctx.zero()
             if len(values) == enc.card:
                 return ctx.ones()  # every row holds some in-domain value
-            return enc.compile_in(ctx, values)
+            return record(col, "in", len(values), enc,
+                          enc.compile_in(ctx, values))
         if isinstance(p, Range):
             # clamp to the column domain before any value materializes —
             # Range(col, 0, 10**9) must not iterate a billion values
-            enc = resolve(p.col)
+            col, enc = resolve(p.col)
             lo, hi = max(p.lo, 0), min(p.hi, enc.card - 1)
             if lo > hi:
                 return ctx.zero()
             if lo == 0 and hi == enc.card - 1:
                 return ctx.ones()
-            return enc.compile_range(ctx, lo, hi)
+            return record(col, "range", hi - lo + 1, enc,
+                          enc.compile_range(ctx, lo, hi))
         if isinstance(p, And):
             return _fanin("and", [build(c) for c in p.children])
         if isinstance(p, Or):
@@ -502,10 +544,12 @@ def compile_plan(index, pred: Predicate, names=None) -> Plan:
         raise TypeError(f"not a Predicate: {p!r}")
 
     plan = Plan(streams=ctx.streams, root=build(pred), n_rows=index.n_rows,
-                scope=getattr(index, "cache_scope", None))
+                scope=getattr(index, "cache_scope", None),
+                containers=ctx.containers or None, workload=tuple(events))
     plan.root = _cost_order(plan.root, plan.streams, plan.n_words)
     _renumber_leaves(plan)
     PLAN_STATS.record(plan)
+    _WORKLOAD.record(plan.workload)
     return plan
 
 
@@ -580,6 +624,8 @@ def _renumber_leaves(plan: Plan) -> None:
             return ("not", rec(nd[1]))
         if nd[0] == "fold":
             return ("fold", nd[1], tuple(rec(c) for c in nd[2]))
+        if nd[0] == "cfold":
+            return nd  # container ids index plan.containers, not streams
         return (nd[0], tuple(rec(c) for c in nd[1]))
 
     plan.root = rec(plan.root)
@@ -611,6 +657,118 @@ def with_live_mask(plan: Plan, live) -> Plan:
     return plan
 
 
+def lower_containers(plan: Plan, fold, cache=None) -> Plan:
+    """Rewrite every ``("cfold", ops, cids, est)`` node into a ``("leaf",
+    i)`` over its evaluated canonical EWAH stream, in place.
+
+    ``fold(csets, ops, n_rows) -> np.uint32`` is the backend's container
+    evaluator (numpy streaming merges or batched Pallas launches — both
+    must produce the same canonical stream).  This is the one bridge out
+    of container space: after it runs, the plan holds only the closed
+    stream-node set, so result caching, tombstone ANDs, fan-out shipping,
+    and the sanitizers are untouched by the container engine.  Lowered
+    fold results are memoized in ``cache`` (a :class:`ResultCache`) under
+    content digests of the container sets, scoped like any other entry.
+    No-op for plans without containers.
+    """
+    if not plan.containers:
+        return plan
+    from .containers import digest as _container_digest
+
+    digests: dict = {}
+
+    def cdig(i):
+        if i not in digests:
+            digests[i] = _container_digest(plan.containers[i])
+        return digests[i]
+
+    def rec(nd):
+        kind = nd[0]
+        if kind == "leaf":
+            return nd
+        if kind == "cfold":
+            _, fops, cids, _est = nd
+            key = (plan.n_rows, "cfold", fops,
+                   tuple(cdig(i) for i in cids))
+            stream = cache.get(key) if cache is not None else None
+            if stream is None:
+                stream = fold([plan.containers[i] for i in cids], fops,
+                              plan.n_rows)
+                if cache is not None:
+                    cache.put(key, stream, plan.scope)
+            plan.streams.append(stream)
+            return ("leaf", len(plan.streams) - 1)
+        if kind == "not":
+            return ("not", rec(nd[1]))
+        if kind == "fold":
+            return ("fold", nd[1], tuple(rec(c) for c in nd[2]))
+        return (kind, tuple(rec(c) for c in nd[1]))
+
+    plan.root = rec(plan.root)
+    plan.containers = None
+    _renumber_leaves(plan)
+    return plan
+
+
+class _WorkloadCounters:
+    """Aggregated per-(column, predicate shape, encoding) planner counters.
+
+    :func:`compile_plan` feeds one event per column predicate it delegates
+    to an encoding; the public surface is :func:`workload_snapshot` /
+    :func:`workload_reset` — the API benchmarks and
+    :mod:`repro.workload`'s cost model read instead of private planner
+    state.
+    """
+
+    def __init__(self):
+        self._mutex = make_lock("query_workload", reentrant=False)
+        self._counts: dict = {}  # guarded-by: _mutex
+
+    def record(self, events) -> None:
+        if not events:
+            return
+        with self._mutex:
+            for col, shape, width, enc_kind, merges in events:
+                cell = self._counts.setdefault(
+                    (col, shape, enc_kind),
+                    {"count": 0, "merges": 0, "width": 0})
+                cell["count"] += 1
+                cell["merges"] += merges
+                cell["width"] += width
+
+    def snapshot(self) -> dict:
+        with self._mutex:
+            return {k: dict(v) for k, v in self._counts.items()}
+
+    def reset(self) -> None:
+        with self._mutex:
+            self._counts.clear()
+
+
+_WORKLOAD = _WorkloadCounters()
+
+
+def workload_snapshot() -> dict:
+    """Per-column predicate-flow counters accumulated by every
+    :func:`compile_plan` call in this process.
+
+    Returns ``{(column, shape, encoding): {"count", "merges", "width"}}``
+    where ``column`` is the original table position, ``shape`` is the
+    predicate kind (``"eq"`` / ``"in"`` / ``"range"``), ``encoding`` the
+    :class:`~repro.core.encodings.ColumnEncoding` kind that compiled it,
+    ``count`` how many predicates hit that cell, and ``merges`` / ``width``
+    the summed :func:`count_merges` cost and value-domain width.  The
+    snapshot is a deep copy — callers may mutate it freely.  See
+    docs/query_api.md ("Workload telemetry").
+    """
+    return _WORKLOAD.snapshot()
+
+
+def workload_reset() -> None:
+    """Clear the process-wide workload counters (test/benchmark hygiene)."""
+    _WORKLOAD.reset()
+
+
 def _fanin(op: str, children: list) -> tuple:
     """n-ary node; same-op children flatten into the parent fan-in."""
     flat: list = []
@@ -637,6 +795,8 @@ def _cost_order(node, streams, n_words: int):
             return est(nd[1]) + 1
         if nd[0] == "fold":
             return sum(est(c) for c in nd[2])
+        if nd[0] == "cfold":
+            return nd[3]  # the encoding's estimated compressed word cost
         return sum(est(c) for c in nd[1])
 
     def rec(nd):
@@ -646,6 +806,8 @@ def _cost_order(node, streams, n_words: int):
             return ("not", rec(nd[1]))
         if nd[0] == "fold":
             return ("fold", nd[1], tuple(rec(c) for c in nd[2]))
+        if nd[0] == "cfold":
+            return nd
         children = sorted((rec(c) for c in nd[1]), key=est)
         return (nd[0], tuple(children))
 
@@ -698,6 +860,10 @@ def _node_key(node, digests, n_rows: int):
             return ("not", rec(nd[1]))
         if nd[0] == "fold":
             return ("fold", nd[1], tuple(rec(c) for c in nd[2]))
+        if nd[0] == "cfold":
+            raise ValueError(
+                "container fold nodes have no stable content key; "
+                "lower_containers() must replace them first")
         return (nd[0], tuple(rec(c) for c in nd[1]))
 
     return (n_rows, rec(node))
@@ -888,6 +1054,7 @@ class NumpyBackend:
         self.result_cache = ResultCache(cache_size)
 
     def execute(self, plan: Plan):
+        plan = lower_containers(plan, self._container_fold)
         stream, scanned = self._eval(plan, plan.root)
         if plan.root[0] == "leaf":
             scanned = len(stream)
@@ -897,7 +1064,15 @@ class NumpyBackend:
     def execute_many(self, plans):
         return [self.execute(p) for p in plans]
 
+    def _container_fold(self, csets, fops, n_rows):
+        """Streaming container evaluation (core/containers.fold): the
+        per-chunk class dispatch raises on unknown container classes."""
+        from . import containers
+        return containers.fold(csets, fops, n_rows)
+
     def execute_compressed(self, plan: Plan) -> EwahStream:
+        plan = lower_containers(plan, self._container_fold,
+                                self.result_cache)
         digests = [_leaf_digest(s) for s in plan.streams]
         stream, scanned = self._eval_cached(plan, plan.root, digests)
         if plan.root[0] == "leaf":
@@ -911,6 +1086,10 @@ class NumpyBackend:
         return [self.execute_compressed(p) for p in plans]
 
     def _combine(self, plan: Plan, node, eval_child):
+        if node[0] == "cfold":
+            raise ValueError(
+                "container fold reached the stream evaluator; "
+                "lower_containers() must replace it first")
         if node[0] == "not":
             s, scanned = eval_child(node[1])
             r, sc = ewah_stream.logical_not(s, plan.n_words)
@@ -990,6 +1169,8 @@ class JaxBackend:
     def execute_many(self, plans):
         import jax.numpy as jnp
 
+        plans = [lower_containers(p, self._container_fold,
+                                  self.result_cache) for p in plans]
         out: list = [None] * len(plans)
         for (root, cap, n_rows), idxs in self._group(plans).items():
             batch, lengths = self._pad_group(plans, idxs, cap)
@@ -1012,6 +1193,8 @@ class JaxBackend:
         streams, whole-plan results land in ``result_cache``."""
         import jax.numpy as jnp
 
+        plans = [lower_containers(p, self._container_fold,
+                                  self.result_cache) for p in plans]
         out: list = [None] * len(plans)
         keys: list = [None] * len(plans)
         todo = []
@@ -1068,6 +1251,79 @@ class JaxBackend:
                 batch[b, j, : len(s)] = s
                 lengths[b, j] = len(s)
         return batch, lengths
+
+    def _container_fold(self, csets, fops, n_rows):
+        """Batched device evaluation of a ``("cfold", ...)`` node.
+
+        Each fold round dispatches its same-chunk container pairs by
+        class: array∩bitmap intersections batch into ONE padded galloping
+        membership launch (``kernels.ops.container_gallop``), every other
+        pair expands to word form and batches into ONE padded
+        container-merge launch per round (``kernels.ops.container_pairs``).
+        Chunks present on only one side short-circuit by op semantics.
+        The accumulated set compresses to the same canonical EWAH stream
+        as the numpy streaming path (``containers.fold``) — tests assert
+        bit identity.  Unknown container classes raise (``chunk_words`` /
+        ``_MERGE_OPS`` dispatch), never fall through.
+        """
+        from . import containers as C
+        from ..kernels import ops as kops
+
+        if not csets:
+            return C.fold(csets, fops, n_rows)
+        acc = {int(k): (int(c), p) for k, c, p in
+               zip(csets[0].keys, csets[0].classes, csets[0].payloads)}
+        for op, nxt in zip(fops, csets[1:]):
+            if op not in C._MERGE_OPS:
+                raise ValueError(f"unknown container merge op {op!r}")
+            rhs = {int(k): (int(c), p) for k, c, p in
+                   zip(nxt.keys, nxt.classes, nxt.payloads)}
+            out = {}
+            if op in ("or", "andnot"):
+                out.update((k, v) for k, v in acc.items() if k not in rhs)
+            if op == "or":
+                out.update((k, v) for k, v in rhs.items() if k not in acc)
+            gallop, pairs = [], []
+            for k in sorted(set(acc) & set(rhs)):
+                (ca, pa), (cb, pb) = acc[k], rhs[k]
+                if op == "and" and {ca, cb} == {C.ARRAY, C.BITMAP}:
+                    gallop.append((k, ca, pa, cb, pb))
+                else:
+                    pairs.append((k, ca, pa, cb, pb))
+            if gallop:
+                width = max(len(pa) if ca == C.ARRAY else len(pb)
+                            for _, ca, pa, _, pb in gallop)
+                pos = np.full((len(gallop), width), -1, dtype=np.int32)
+                wrd = np.empty((len(gallop), C.CHUNK_WORDS), dtype=np.uint32)
+                for i, (_, ca, pa, cb, pb) in enumerate(gallop):
+                    arr = pa if ca == C.ARRAY else pb
+                    pos[i, : len(arr)] = arr
+                    wrd[i] = pb if cb == C.BITMAP else pa
+                hits = np.asarray(kops.container_gallop(
+                    pos, wrd, use_kernel=self.use_kernel,
+                    interpret=self.interpret))
+                for i, (k, ca, pa, cb, pb) in enumerate(gallop):
+                    arr = np.asarray(pa if ca == C.ARRAY else pb,
+                                     dtype=np.int64)
+                    kept = arr[hits[i, : len(arr)].astype(bool)]
+                    if len(kept):
+                        out[k] = C.make_chunk(kept)
+            if pairs:
+                lhs = np.stack([C.chunk_words(ca, pa)
+                                for _, ca, pa, _, _ in pairs])
+                rhs_w = np.stack([C.chunk_words(cb, pb)
+                                  for _, _, _, cb, pb in pairs])
+                merged = np.asarray(kops.container_pairs(
+                    lhs, rhs_w, op, use_kernel=self.use_kernel,
+                    interpret=self.interpret))
+                for i, (k, *_cls) in enumerate(pairs):
+                    if merged[i].any():
+                        out[k] = (C.BITMAP, merged[i])
+            acc = out
+        keys = sorted(acc)
+        final = C.ContainerSet(n_rows, keys, [acc[k][0] for k in keys],
+                               [acc[k][1] for k in keys])
+        return C.to_stream(final)
 
     def _fused_tape(self, root):
         """The lowered instruction tape for ``root`` when the megakernel
@@ -1131,6 +1387,10 @@ class JaxBackend:
             def ev(node):
                 if node[0] == "leaf":
                     return dec[:, node[1]]
+                if node[0] == "cfold":
+                    raise ValueError(
+                        "container fold reached the batched evaluator; "
+                        "lower_containers() must replace it first")
                 if node[0] == "not":
                     return ev(node[1]) ^ jnp.uint32(0xFFFFFFFF)
                 if node[0] == "fold":

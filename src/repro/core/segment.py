@@ -63,12 +63,13 @@ from __future__ import annotations
 import itertools
 import time
 from dataclasses import dataclass, field
+from time import perf_counter
 
 import numpy as np
 
 from . import ewah, ewah_stream
 from ..analysis.runtime import maybe_validate
-from .bitmap_index import BitmapIndex
+from .bitmap_index import BitmapIndex, _observe_workload
 from .ewah_stream import EwahStream, concat_streams
 from .query import compile_plan, evaluate_mask, get_backend, with_live_mask
 
@@ -129,7 +130,7 @@ class Segment:
     def seal(table_cols, spec=None, *, row_start: int = 0,
              materialize: bool = True, keep_columns: bool = True,
              span_stop: int | None = None, row_ids=None, expiry=None,
-             tombstone_rows=None) -> "Segment":
+             tombstone_rows=None, encoding_chooser=None) -> "Segment":
         """Run the full per-segment pipeline and freeze the result.
 
         ``row_ids`` (ascending global ingest ids, one per row) and
@@ -137,12 +138,15 @@ class Segment:
         ingest-order absolute deadlines; ``tombstone_rows`` marks
         ingest-local positions dead at birth (buffer deletes surviving a
         seal, compaction's word-alignment filler rows).
+        ``encoding_chooser`` is the workload-driven per-column override
+        compaction threads down to ``_construct`` (docs/containers.md).
         """
         from .bitmap_index import _construct
 
         cols = tuple(np.asarray(c) for c in table_cols)
         gen = next_generation()
-        index = _construct(list(cols), spec, materialize=materialize)
+        index = _construct(list(cols), spec, materialize=materialize,
+                           encoding_chooser=encoding_chooser)
         index.cache_scope = ("segment", gen)
         if expiry is not None:
             expiry = np.asarray(expiry, dtype=np.float64)
@@ -505,10 +509,12 @@ class SegmentedIndex:
             for j in active:
                 plan = compile_plan(segs[j].index, p, names=names)
                 plans.append(with_live_mask(plan, live[j]))
+        t0 = perf_counter()
         if hasattr(be, "execute_compressed_many"):
             results = be.execute_compressed_many(plans)
         else:
             results = [be.execute_compressed(p) for p in plans]
+        _observe_workload(plans, perf_counter() - t0)
         total_rows = (sum(s.n_rows for s in segs)
                       + (len(buf[1]) if buf is not None else 0))
         out = []

@@ -159,7 +159,8 @@ def _cols_given(cardinalities, k):
 
 # -- encoding choosers (see repro.core.encodings) ---------------------------
 
-for _kind in ("equality", "bitsliced", "bitsliced-gray", "binned"):
+for _kind in ("equality", "bitsliced", "bitsliced-gray", "binned",
+              "roaring"):
     register_strategy("encoding", _kind)(
         lambda hist, k, _kind=_kind: _kind)
 

@@ -1,0 +1,85 @@
+"""Pallas kernels for batched Roaring-container merges.
+
+Two kernels back ``JaxBackend._container_fold`` (core/query.py):
+
+* ``containerops_kernel`` — elementwise AND / OR / AND-NOT over a batch of
+  same-chunk container pairs expanded to word form, shape (P, 2048)
+  uint32: every chunk pair of a fold round runs in ONE padded launch, the
+  op baked in statically (no traced branches).
+* ``member_kernel`` — the vectorized half of the galloping array∩bitmap
+  intersection: each array position has already jumped to its word
+  (``jnp.take_along_axis`` of ``pos >> 5`` at the wrapper level — per-lane
+  dynamic gathers don't belong inside a TPU kernel); the kernel tests the
+  single bit ``(word >> (pos & 31)) & 1`` for the whole padded batch at
+  once.
+
+Wrappers with padding, jnp fallbacks, and CPU interpret-mode defaults live
+in ``kernels.ops`` (``container_pairs`` / ``container_gallop``), following
+the conventions in docs/fusion.md.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROW_TILE = 8     # chunk pairs per tile (min sublane count for 32-bit)
+LANE_TILE = 128  # words / positions per tile
+
+_OPS = {"and": 0, "or": 1, "andnot": 2}
+
+
+def _pair_kernel(a_ref, b_ref, o_ref, *, op: int):
+    a = a_ref[...]
+    b = b_ref[...]
+    if op == 0:
+        o_ref[...] = a & b
+    elif op == 1:
+        o_ref[...] = a | b
+    else:
+        o_ref[...] = a & ~b
+
+
+def containerops_kernel(a, b, op: str, *, interpret=True):
+    """Batched container merge in word space: (P, W) uint32 pairs -> (P, W)
+    with ``op`` in {"and", "or", "andnot"}.  P and W must already be tile
+    multiples (kernels.ops.container_pairs pads)."""
+    if op not in _OPS:
+        raise ValueError(f"unknown container merge op {op!r}")
+    P, W = a.shape
+    grid = (P // ROW_TILE, W // LANE_TILE)
+    spec = pl.BlockSpec((ROW_TILE, LANE_TILE), lambda i, j: (i, j))
+    return pl.pallas_call(
+        partial(_pair_kernel, op=_OPS[op]),
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((P, W), jnp.uint32),
+        interpret=interpret,
+    )(a, b)
+
+
+def _member_kernel(w_ref, p_ref, o_ref):
+    w = w_ref[...]
+    shift = (p_ref[...] & 31).astype(jnp.uint32)
+    o_ref[...] = (w >> shift) & jnp.uint32(1)
+
+
+def member_kernel(gathered, pos, *, interpret=True):
+    """Bit-test stage of the galloping array∩bitmap intersection:
+    ``gathered[i, j]`` is the bitmap word holding position ``pos[i, j]``;
+    returns (P, L) uint32 membership flags."""
+    P, L = pos.shape
+    grid = (P // ROW_TILE, L // LANE_TILE)
+    spec = pl.BlockSpec((ROW_TILE, LANE_TILE), lambda i, j: (i, j))
+    return pl.pallas_call(
+        _member_kernel,
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((P, L), jnp.uint32),
+        interpret=interpret,
+    )(gathered, pos)

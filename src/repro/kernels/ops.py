@@ -90,6 +90,62 @@ def wordops_fold(stacked, op="and", use_kernel=True, interpret=None):
     return stacked[0]
 
 
+@partial(jax.jit, static_argnames=("op", "use_kernel", "interpret"))
+def container_pairs(a, b, op="and", use_kernel=True, interpret=None):
+    """Batched Roaring-container merge in word space: (P, W) uint32 pairs
+    -> (P, W), one padded Pallas launch for a whole fold round's chunk
+    pairs (W = containers.CHUNK_WORDS in the backend)."""
+    if op not in ("and", "or", "andnot"):
+        raise ValueError(f"unknown container merge op {op!r}")
+    a = jnp.asarray(a, jnp.uint32)
+    b = jnp.asarray(b, jnp.uint32)
+    if not use_kernel:
+        if op == "and":
+            return a & b
+        if op == "or":
+            return a | b
+        return a & ~b
+    interpret = not _on_tpu() if interpret is None else interpret
+    from .containers import LANE_TILE as LT
+    from .containers import ROW_TILE as RT
+    from .containers import containerops_kernel
+    P, W = a.shape
+    a2 = _pad_to(_pad_to(a, RT, 0), LT, 1)
+    b2 = _pad_to(_pad_to(b, RT, 0), LT, 1)
+    r = containerops_kernel(a2, b2, op, interpret=interpret)
+    return r[:P, :W]
+
+
+@partial(jax.jit, static_argnames=("use_kernel", "interpret"))
+def container_gallop(positions, words, use_kernel=True, interpret=None):
+    """Galloping array∩bitmap membership for a batch of chunk pairs.
+
+    ``positions``: (P, L) int32 local chunk positions, right-padded with
+    -1.  ``words``: (P, containers.CHUNK_WORDS) uint32 bitmap payloads.
+    Each position gallops straight to its word (``pos >> 5`` — the gather
+    happens here at the jnp level, not inside the kernel) and the Pallas
+    bit-test kernel checks the whole padded batch in one launch.  Returns
+    (P, L) uint32 flags: 1 where the bitmap holds the position, 0 for
+    misses and padding.
+    """
+    pos = jnp.asarray(positions, jnp.int32)
+    w = jnp.asarray(words, jnp.uint32)
+    safe = jnp.maximum(pos, 0)
+    gathered = jnp.take_along_axis(w, safe >> 5, axis=1)
+    if not use_kernel:
+        hits = (gathered >> (safe & 31).astype(jnp.uint32)) & jnp.uint32(1)
+    else:
+        interpret = not _on_tpu() if interpret is None else interpret
+        from .containers import LANE_TILE as LT
+        from .containers import ROW_TILE as RT
+        from .containers import member_kernel
+        P, L = pos.shape
+        g2 = _pad_to(_pad_to(gathered, RT, 0), LT, 1)
+        p2 = _pad_to(_pad_to(safe, RT, 0), LT, 1)
+        hits = member_kernel(g2, p2, interpret=interpret)[:P, :L]
+    return jnp.where(pos >= 0, hits, jnp.uint32(0))
+
+
 @partial(jax.jit, static_argnames=("ops", "use_kernel", "interpret"))
 def slice_fold(stacked, ops, use_kernel=True, interpret=None):
     """Left-fold (m, n) word vectors with a per-step op -> (n,).

@@ -31,6 +31,7 @@ from repro.models import transformer
 from repro.models.common import ShardingCtx
 from repro.serve.prefill import prefill_with_cache
 from repro.train import serve_step
+from repro.workload import WORKLOAD_STATS
 
 
 def make_requests(n, rng, max_len=96):
@@ -70,7 +71,11 @@ class SegmentedAdmission:
     def __init__(self, backend: str = "numpy", seal_rows: int = 256,
                  compactor: bool = False, compact_interval: float = 0.02):
         self.spec = IndexSpec(row_order="unsorted", column_order="given")
-        self.writer = IndexWriter(self.spec, seal_rows=seal_rows)
+        # feed the process-wide workload telemetry into compactions: the
+        # background compactor re-encodes merged admission segments toward
+        # the live predicate mix once enough samples accumulate
+        self.writer = IndexWriter(self.spec, seal_rows=seal_rows,
+                                  workload_stats=WORKLOAD_STATS)
         self.backend = backend
         # _lock keeps the shadow length store and the writer append one
         # atomic admission (a pack between the two would otherwise see a
@@ -288,6 +293,11 @@ def main(argv=None):
                          "(core.query.PLAN_STATS): load at startup so the "
                          "jax backend warms up with last run's autotuned "
                          "capacity buckets, autotune + save at exit")
+    ap.add_argument("--workload-stats", default=None, metavar="PATH",
+                    help="persist the workload telemetry recorder "
+                         "(repro.workload.WORKLOAD_STATS): load at startup "
+                         "so compaction's cost model starts warm with last "
+                         "run's predicate mix, save at exit")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -299,6 +309,11 @@ def main(argv=None):
         warm = PLAN_STATS.load(args.plan_stats)
         print(f"plan-stats {'loaded from' if warm else 'cold start at'} "
               f"{args.plan_stats}: buckets {list(PLAN_STATS.boundaries)}")
+
+    if args.workload_stats:
+        warm = WORKLOAD_STATS.load(args.workload_stats)
+        print(f"workload-stats {'loaded from' if warm else 'cold start at'} "
+              f"{args.workload_stats}: {WORKLOAD_STATS.stats()}")
 
     mesh = make_cli_mesh(args.mesh)
     dp = mesh.shape["data"]
@@ -388,6 +403,10 @@ def main(argv=None):
         PLAN_STATS.autotune()
         PLAN_STATS.save(args.plan_stats)
         print(f"plan-stats saved to {args.plan_stats}: {PLAN_STATS.stats()}")
+    if args.workload_stats:
+        WORKLOAD_STATS.save(args.workload_stats)
+        print(f"workload-stats saved to {args.workload_stats}: "
+              f"{WORKLOAD_STATS.stats()}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,376 @@
+"""Roaring-style containers (repro.core.containers) + RoaringEncoding.
+
+Three layers of oracle checks: the container algebra against dense numpy
+set ops (4096-boundary class selection, run coalescing across merges,
+galloping intersections), the batched jax/Pallas container fold against
+the numpy streaming fold (bit-identical canonical EWAH at every plan
+root), and the full encoding against EqualityEncoding through the query
+surface — monolithic, segmented + tombstoned, and fan-out sharded —
+under ``REPRO_SANITIZE`` structural validation on both backends.
+Unknown container classes and merge ops must raise in both backends,
+never fall through (enforced statically by
+``repro.analysis.containercheck``, probed dynamically here).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.analysis.runtime import sanitized
+from repro.core import (And, BitmapIndex, Eq, In, IndexSpec, IndexWriter,
+                        Not, Or, Range, ewah)
+from repro.core import containers as C
+from repro.core.encodings import RoaringEncoding
+from repro.core.query import evaluate_mask, get_backend
+
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
+
+
+def spec_for(enc, k=1):
+    return IndexSpec(k=k, row_order="lex", column_order="given",
+                     encoding=enc)
+
+
+def make_cols(n, cards, seed):
+    r = np.random.default_rng(seed)
+    return [r.integers(0, c, size=n) for c in cards]
+
+
+def random_positions(n_rows, density, seed):
+    r = np.random.default_rng(seed)
+    mask = r.random(n_rows) < density
+    return np.flatnonzero(mask).astype(np.int64)
+
+
+# -- container class selection ----------------------------------------------
+
+
+def test_array_bitmap_4096_boundary():
+    """Stride-2 positions have no runs, so the class flips from array to
+    bitmap exactly past ARRAY_MAX=4096 set rows."""
+    cls, payload = C.make_chunk(np.arange(C.ARRAY_MAX) * 2)
+    assert cls == C.ARRAY and payload.dtype == np.uint16
+    cls, payload = C.make_chunk(np.arange(C.ARRAY_MAX + 1) * 2)
+    assert cls == C.BITMAP and len(payload) == C.CHUNK_WORDS
+
+
+def test_run_rule_and_boundaries():
+    # one contiguous run: 2*1 + 1 = 3 < min(n, 4096)
+    cls, payload = C.make_chunk(np.arange(4, 5000))
+    assert cls == C.RUN
+    np.testing.assert_array_equal(payload, [[4, 4999]])
+    # 2r + 1 not strictly cheaper -> array wins (3 positions, 1 run)
+    cls, _ = C.make_chunk(np.asarray([7, 8, 9]))
+    assert cls == C.ARRAY
+    with pytest.raises(ValueError, match="empty"):
+        C.make_chunk(np.empty(0, dtype=np.int64))
+
+
+def test_from_positions_chunk_split_roundtrip():
+    pos = np.concatenate([
+        np.arange(0, 70_000, 3),            # spans chunks 0 and 1
+        np.arange(200_000, 201_000),        # a run chunk far away
+        [6 * C.CHUNK_ROWS - 1, 6 * C.CHUNK_ROWS],   # chunk-boundary pair
+    ]).astype(np.int64)
+    pos = np.unique(pos)
+    cs = C.from_positions(pos, 7 * C.CHUNK_ROWS)
+    assert list(cs.keys) == sorted(set(int(p) >> C.CHUNK_BITS for p in pos))
+    np.testing.assert_array_equal(C.to_positions(cs), pos)
+    assert cs.n_set() == len(pos)
+    with pytest.raises(ValueError, match="range"):
+        C.from_positions(np.asarray([70]), 64)
+
+
+def test_run_coalescing_across_merges():
+    """ORing two adjacent run halves re-chooses the class: the merged
+    chunk coalesces back to ONE run, not an array or a bitmap."""
+    n = C.CHUNK_ROWS
+    a = C.from_positions(np.arange(0, 30_000, dtype=np.int64), n)
+    b = C.from_positions(np.arange(30_000, 60_000, dtype=np.int64), n)
+    merged = C.merge(a, b, "or")
+    assert list(merged.classes) == [C.RUN]
+    np.testing.assert_array_equal(merged.payloads[0], [[0, 59_999]])
+
+
+# -- galloping intersections ------------------------------------------------
+
+
+def test_gallop_intersect_matches_numpy():
+    r = np.random.default_rng(3)
+    for na, nb in [(10, 5000), (5000, 10), (0, 50), (300, 300)]:
+        a = np.unique(r.integers(0, 10_000, size=na)) if na else \
+            np.empty(0, dtype=np.int64)
+        b = np.unique(r.integers(0, 10_000, size=nb)) if nb else \
+            np.empty(0, dtype=np.int64)
+        np.testing.assert_array_equal(C.gallop_intersect(a, b),
+                                      np.intersect1d(a, b))
+
+
+def test_array_bitmap_intersect_matches_dense():
+    r = np.random.default_rng(4)
+    dense = np.flatnonzero(r.random(C.CHUNK_ROWS) < 0.4).astype(np.int64)
+    words = ewah.positions_to_words(dense, C.CHUNK_ROWS)
+    sparse = np.unique(r.integers(0, C.CHUNK_ROWS, size=500))
+    np.testing.assert_array_equal(C.array_bitmap_intersect(sparse, words),
+                                  np.intersect1d(sparse, dense))
+
+
+# -- merges vs dense set oracles --------------------------------------------
+
+
+@pytest.mark.parametrize("op,oracle", [
+    ("and", np.intersect1d),
+    ("or", np.union1d),
+    ("andnot", lambda a, b: np.setdiff1d(a, b, assume_unique=True)),
+])
+def test_merge_matches_set_oracle(op, oracle):
+    n = 3 * C.CHUNK_ROWS + 777                  # unaligned final chunk
+    for da, db, seed in [(0.001, 0.3, 0), (0.3, 0.001, 1), (0.08, 0.08, 2),
+                         (0.9, 0.9, 3)]:
+        pa = random_positions(n, da, seed)
+        pb = random_positions(n, db, seed + 100)
+        got = C.merge(C.from_positions(pa, n), C.from_positions(pb, n), op)
+        np.testing.assert_array_equal(C.to_positions(got), oracle(pa, pb),
+                                      err_msg=f"{op} {da}/{db}")
+
+
+def test_to_stream_is_canonical_ewah():
+    """The plan-root bridge emits exactly what ewah.compress produces over
+    the dense words — so downstream caches/sanitizers see canonical form."""
+    n = 2 * C.CHUNK_ROWS + 45
+    pos = random_positions(n, 0.2, 7)
+    cs = C.from_positions(pos, n)
+    dense = ewah.positions_to_words(pos, n)
+    np.testing.assert_array_equal(C.to_stream(cs), ewah.compress(dense))
+    # and fold over several sets matches folding the dense masks
+    sets = [C.from_positions(random_positions(n, d, 20 + i), n)
+            for i, d in enumerate([0.01, 0.4, 0.1])]
+    ops = ("or", "andnot")
+    masks = [np.isin(np.arange(n), C.to_positions(s)) for s in sets]
+    expect = (masks[0] | masks[1]) & ~masks[2]
+    got = ewah.unpack_bits(ewah.decompress(C.fold(sets, ops, n)), n)
+    np.testing.assert_array_equal(got, expect)
+
+
+def test_fold_of_nothing_is_zero_stream():
+    stream = C.fold([], (), 100)
+    assert ewah.unpack_bits(ewah.decompress(stream), 100).sum() == 0
+
+
+# -- unknown classes / ops raise in both backends ---------------------------
+
+
+def test_unknown_container_class_raises():
+    payload = np.zeros(4, dtype=np.uint16)
+    for fn in (C.chunk_positions, C.chunk_words, C.chunk_cardinality,
+               C._chunk_cost_u16):
+        with pytest.raises(ValueError, match="unknown container class"):
+            fn(7, payload)
+
+
+def test_unknown_merge_op_raises_numpy_and_jax():
+    n = C.CHUNK_ROWS
+    sets = [C.from_positions(np.arange(10, dtype=np.int64) * i1, n)
+            for i1 in (1, 2)]
+    with pytest.raises(ValueError, match="unknown container merge op"):
+        C.merge(sets[0], sets[1], "xor")
+    with pytest.raises(ValueError, match="unknown container merge op"):
+        C.fold(sets, ("xor",), n)
+    jax_backend = get_backend("jax", interpret=True)
+    with pytest.raises(ValueError, match="unknown container merge op"):
+        jax_backend._container_fold(sets, ("xor",), n)
+
+
+def test_kernel_container_pairs_rejects_unknown_op():
+    import jax.numpy as jnp
+
+    from repro.kernels import ops as kops
+
+    a = jnp.zeros((2, C.CHUNK_WORDS), jnp.uint32)
+    with pytest.raises(ValueError, match="unknown container merge op"):
+        kops.container_pairs(a, a, "xor")
+
+
+# -- the batched jax fold vs the numpy streaming fold -----------------------
+
+
+def test_jax_container_fold_bit_identical_to_numpy():
+    n = 2 * C.CHUNK_ROWS + 901
+    jax_backend = get_backend("jax", interpret=True)
+    r = np.random.default_rng(11)
+    for trial in range(4):
+        k = int(r.integers(2, 5))
+        sets = [C.from_positions(
+            random_positions(n, float(r.uniform(0.001, 0.6)),
+                             int(r.integers(0, 2**31))), n)
+            for _ in range(k)]
+        ops = tuple(r.choice(["and", "or", "andnot"], size=k - 1))
+        np.testing.assert_array_equal(
+            jax_backend._container_fold(sets, ops, n),
+            C.fold(sets, tuple(ops), n), err_msg=f"trial {trial} ops={ops}")
+
+
+def test_kernel_gallop_matches_dense_membership():
+    import jax.numpy as jnp  # noqa: F401 (device arrays round-trip below)
+
+    from repro.kernels import ops as kops
+
+    r = np.random.default_rng(13)
+    dense = [np.flatnonzero(r.random(C.CHUNK_ROWS) < d)
+             for d in (0.1, 0.5, 0.0)]
+    words = np.stack([ewah.positions_to_words(d, C.CHUNK_ROWS)
+                      for d in dense])
+    pos = np.full((3, 64), -1, dtype=np.int32)
+    queries = []
+    for i in range(3):
+        q = np.unique(r.integers(0, C.CHUNK_ROWS, size=40))
+        pos[i, : len(q)] = q
+        queries.append(q)
+    for use_kernel in (True, False):
+        hits = np.asarray(kops.container_gallop(pos, words,
+                                                use_kernel=use_kernel,
+                                                interpret=True))
+        for i, q in enumerate(queries):
+            got = q[hits[i, : len(q)].astype(bool)]
+            np.testing.assert_array_equal(got, np.intersect1d(q, dense[i]))
+        # padding lanes never report hits
+        assert not hits[pos < 0].any()
+
+
+# -- RoaringEncoding through the query surface ------------------------------
+
+
+PREDICATES = [
+    Eq(0, 3), Eq(0, 10**6), In(0, [1, 5, 9]), In(1, [0]),
+    In(1, range(200)), Range(0, 4, 25), Range(0, 25, 4),
+    Range(1, 0, 10**9), Range(1, 1, 1),
+    And(Range(0, 2, 27), Not(Eq(1, 3))),
+    Or(Eq(0, 1), Range(1, 10, 60)),
+]
+
+
+def original_rows(idx, pred, backend):
+    rows, _ = idx.query(pred, backend=backend)
+    return np.sort(idx.row_perm[rows])
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_roaring_bit_identical_to_equality(backend):
+    cols = make_cols(900, [29, 300], seed=5)
+    eq = BitmapIndex.build(cols, spec_for("equality"))
+    ro = BitmapIndex.build(cols, spec_for("roaring"))
+    assert ro.encodings() == ("roaring", "roaring")
+    assert isinstance(ro.columns[0].encoding, RoaringEncoding)
+    with sanitized():
+        for pred in PREDICATES:
+            np.testing.assert_array_equal(
+                original_rows(ro, pred, backend),
+                original_rows(eq, pred, backend), err_msg=f"{pred}")
+            np.testing.assert_array_equal(
+                original_rows(ro, pred, backend),
+                np.flatnonzero(evaluate_mask(pred, cols)))
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_roaring_segmented_tombstoned(backend):
+    """Multi-segment writer + tombstones: roaring answers in global ingest
+    ids exactly like the dense oracle minus deleted rows, sanitized."""
+    cols = make_cols(700, [11, 40], seed=6)
+    w = IndexWriter(spec_for("roaring"), seal_rows=256)
+    w.append(cols)
+    w.seal()
+    alive = np.ones(700, dtype=bool)
+    w.delete(row_ids=np.arange(40, 120))
+    alive[40:120] = False
+    si = w.index
+    with sanitized():
+        for pred in (Eq(0, 3), Range(1, 5, 30), Not(In(0, [0, 2])),
+                     And(Range(0, 1, 8), Not(Eq(1, 7)))):
+            rows, _ = si.query(pred, backend=backend)
+            expect = np.flatnonzero(evaluate_mask(pred, cols) & alive)
+            np.testing.assert_array_equal(rows, expect, err_msg=f"{pred}")
+
+
+def test_roaring_fanout_sharded():
+    from repro.dist.query_fanout import ShardedIndex
+
+    cols = make_cols(2017, [150], seed=8)
+    sharded = ShardedIndex.build(cols, spec_for("roaring"), n_shards=4)
+    assert all(sh.index.encodings() == ("roaring",)
+               for sh in sharded.shards)
+    with sanitized():
+        for pred in (Range(0, 17, 120), Not(Range(0, 40, 149)),
+                     In(0, [3, 77, 149])):
+            got, _ = sharded.query(pred)
+            np.testing.assert_array_equal(
+                got, np.flatnonzero(evaluate_mask(pred, cols)))
+
+
+def test_roaring_compaction_and_cache_reuse():
+    """Compaction over roaring segments re-seals correctly, and repeated
+    compressed queries hit the lowered-cfold result cache."""
+    cols = make_cols(600, [17], seed=9)
+    w = IndexWriter(spec_for("roaring"))
+    w.append([c[:300] for c in cols])
+    w.seal()
+    w.append([c[300:] for c in cols])
+    w.seal()
+    w.compact(span=(0, 2))
+    si = w.index
+    with sanitized():
+        for pred in (Eq(0, 4), Range(0, 3, 12)):
+            _, a = si.execute_compressed(pred)
+            _, b = si.execute_compressed(pred)     # cached cfold result
+            np.testing.assert_array_equal(a.to_rows(), b.to_rows())
+            rows, _ = si.query(pred)
+            np.testing.assert_array_equal(
+                rows, np.flatnonzero(evaluate_mask(pred, cols)))
+
+
+def test_roaring_size_only_build():
+    cols = make_cols(500, [60], seed=10)
+    full = BitmapIndex.build(cols, spec_for("roaring"))
+    lean = BitmapIndex.build(cols, spec_for("roaring"), materialize=False)
+    np.testing.assert_array_equal(lean.columns[0].sizes,
+                                  full.columns[0].sizes)
+    assert lean.columns[0].streams is None
+    assert lean.size_words() == full.size_words() > 0
+
+
+# -- property tests ---------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, 3 * C.CHUNK_ROWS - 1), min_size=0,
+                max_size=400),
+       st.lists(st.integers(0, 3 * C.CHUNK_ROWS - 1), min_size=0,
+                max_size=400),
+       st.sampled_from(["and", "or", "andnot"]))
+def test_property_merge_matches_set_algebra(pa, pb, op):
+    n = 3 * C.CHUNK_ROWS
+    pa = np.unique(np.asarray(pa, dtype=np.int64))
+    pb = np.unique(np.asarray(pb, dtype=np.int64))
+    a, b = C.from_positions(pa, n), C.from_positions(pb, n)
+    oracle = {"and": np.intersect1d, "or": np.union1d,
+              "andnot": lambda x, y: np.setdiff1d(x, y, assume_unique=True)}
+    np.testing.assert_array_equal(C.to_positions(C.merge(a, b, op)),
+                                  oracle[op](pa, pb))
+    # and the stream bridge stays canonical
+    np.testing.assert_array_equal(
+        C.to_stream(a), ewah.compress(ewah.positions_to_words(pa, n)))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 40), st.integers(0, 10**6), st.integers(100, 900))
+def test_property_roaring_equality_agree(card, seed, n):
+    cols = make_cols(n, [card], seed % 2**31)
+    r = np.random.default_rng(seed % 2**31 + 1)
+    lo, hi = sorted(int(v) for v in r.integers(-2, card + 2, size=2))
+    preds = [Eq(0, lo % card), Range(0, lo, hi), Not(Range(0, lo, hi))]
+    eq = BitmapIndex.build(cols, spec_for("equality"))
+    ro = BitmapIndex.build(cols, spec_for("roaring"))
+    for p in preds:
+        np.testing.assert_array_equal(original_rows(ro, p, "numpy"),
+                                      original_rows(eq, p, "numpy"),
+                                      err_msg=f"card={card} n={n} {p}")

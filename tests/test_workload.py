@@ -1,0 +1,250 @@
+"""Workload telemetry + cost model (repro.workload) and its public
+query-surface API (``query.workload_snapshot`` / ``workload_reset``).
+
+Covers the full self-tuning loop: the planner records predicate events on
+plans, executed queries attribute wall time into :data:`WORKLOAD_STATS`,
+:class:`CostModel` fits per-encoding lines and ranks candidates per
+observed mix, and ``IndexWriter.compact(workload_stats=...)`` re-encodes
+the merged segment — the chosen encoding *flips* when the mix flips from
+point lookups to wide ranges.  Persistence mirrors PlanStats
+(``serve --workload-stats``): save/load round-trips, missing files are a
+cold start.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (BitmapIndex, Eq, In, IndexSpec, IndexWriter, Not,
+                        Range)
+from repro.core.query import (compile_plan, workload_reset,
+                              workload_snapshot)
+from repro.workload import (CANDIDATES, CostModel, WORKLOAD_STATS,
+                            WorkloadStats, column_mixes, estimate_merges,
+                            make_compaction_chooser, record_execution)
+
+
+def spec_for(enc, k=1):
+    return IndexSpec(k=k, row_order="lex", column_order="given",
+                     encoding=enc)
+
+
+def make_cols(n, cards, seed):
+    r = np.random.default_rng(seed)
+    return [r.integers(0, c, size=n) for c in cards]
+
+
+# -- the public counter API -------------------------------------------------
+
+
+def test_workload_snapshot_counts_planner_events():
+    workload_reset()
+    cols = make_cols(400, [8, 50], seed=0)
+    idx = BitmapIndex.build(cols, spec_for("equality"))
+    idx.query(Eq(0, 3))
+    idx.query(Eq(0, 3))
+    idx.query(Range(1, 5, 20))
+    snap = workload_snapshot()
+    eq_cell = snap[(0, "eq", "equality")]
+    assert eq_cell["count"] == 2 and eq_cell["width"] == 2  # summed widths
+    rg_cell = snap[(1, "range", "equality")]
+    assert rg_cell["count"] == 1 and rg_cell["width"] == 16
+    assert rg_cell["merges"] > 0
+    # snapshot is a copy: mutating it does not corrupt the counters
+    snap[(0, "eq", "equality")]["count"] = 999
+    assert workload_snapshot()[(0, "eq", "equality")]["count"] == 2
+    workload_reset()
+    assert workload_snapshot() == {}
+
+
+def test_plan_carries_workload_events():
+    cols = make_cols(300, [8, 8], seed=1)
+    idx = BitmapIndex.build(cols, spec_for("equality"))
+    plan = compile_plan(idx, Not(In(0, [1, 2, 3])))
+    assert len(plan.workload) == 1
+    col, shape, width, enc, merges = plan.workload[0]
+    assert (col, shape, width, enc) == (0, "in", 3, "equality")
+    assert merges >= 2
+
+
+# -- WorkloadStats bounding + persistence -----------------------------------
+
+
+def test_stats_record_bounds_and_persistence(tmp_path):
+    stats = WorkloadStats()
+    for i in range(stats.MAX_SAMPLES + 10):
+        stats.record(0, "eq", 1, "equality", i, 10.0)
+    # past the cap the newest half is kept
+    assert len(stats) == stats.MAX_SAMPLES // 2 + 10
+    assert stats.samples()[-1][4] == stats.MAX_SAMPLES + 9
+    assert stats.stats()["recorded"] == stats.MAX_SAMPLES + 10
+
+    path = tmp_path / "workload.json"
+    stats.save(path)
+    fresh = WorkloadStats()
+    assert fresh.load(path)
+    assert fresh.samples()[-2048:] == stats.samples()[-2048:]
+    assert not WorkloadStats().load(tmp_path / "missing.json")  # cold start
+
+    stats.clear()
+    assert len(stats) == 0 and stats.stats()["recorded"] == 0
+
+
+def test_record_execution_attributes_time():
+    stats = WorkloadStats()
+    cols = make_cols(200, [8], seed=2)
+    idx = BitmapIndex.build(cols, spec_for("equality"))
+    plans = [compile_plan(idx, Eq(0, 1)), compile_plan(idx, Eq(0, 2))]
+    record_execution(plans, 0.004, stats=stats)       # 2000 us per plan
+    samples = stats.samples()
+    assert len(samples) == 2
+    assert all(abs(s[5] - 2000.0) < 1e-6 for s in samples)
+    record_execution([], 1.0, stats=stats)            # no-op, no divide
+    assert len(stats) == 2
+
+
+# -- the analytic merge estimator -------------------------------------------
+
+
+def test_estimate_merges_orderings():
+    # point lookups: roaring folds containers, equality pays k-1
+    assert estimate_merges("roaring", "eq", 1, 300) == 0
+    assert estimate_merges("equality", "eq", 1, 300, k=2) == 1
+    # wide ranges: bit-sliced O(log card) beats value-per-value fan-ins
+    wide_bs = estimate_merges("bitsliced", "range", 200, 1024)
+    wide_eq = estimate_merges("equality", "range", 200, 1024)
+    assert wide_bs < wide_eq
+    # the over-half-domain complement trick caps equality/roaring ranges
+    assert estimate_merges("equality", "range", 290, 300) <= 11
+    with pytest.raises(ValueError, match="unknown encoding kind"):
+        estimate_merges("bogus", "eq", 1, 10)
+
+
+# -- cost-model fit + ranking -----------------------------------------------
+
+
+def synthetic_samples(n_per=40):
+    """Equality samples whose cost grows with merges (slope 3 us/merge)."""
+    out = []
+    for i in range(n_per):
+        merges = i % 7
+        out.append((0, "range", 8, "equality", merges, 5.0 + 3.0 * merges))
+    return out
+
+
+def test_cost_model_fit_and_predict():
+    model = CostModel.fit(synthetic_samples())
+    a, b = model.coef["equality"]
+    assert abs(a - 5.0) < 1e-6 and abs(b - 3.0) < 1e-6
+    assert model.predict("equality", 10) == pytest.approx(35.0)
+    # unseen kinds use the pooled default, and cost grows with merges
+    assert model.predict("roaring", 4) > model.predict("roaring", 0) - 1e-9
+    with pytest.raises(ValueError, match="zero samples"):
+        CostModel.fit([])
+
+
+def test_cost_model_degenerate_mix_still_ranks():
+    """All samples at one merge count: the through-origin fallback keeps
+    fewer-merge candidates cheaper instead of dividing by zero variance."""
+    samples = [(0, "in", 4, "equality", 3, 30.0)] * 20
+    model = CostModel.fit(samples)
+    assert model.predict("equality", 0) < model.predict("equality", 3)
+
+
+def test_rank_flips_with_mix():
+    """The core adaptive claim at model level: a point-lookup mix ranks
+    roaring first, a wide-range mix on the same column ranks bitsliced
+    first."""
+    model = CostModel.fit(synthetic_samples())
+    card = 300
+    point = model.rank([("eq", 1, 100)], card)
+    assert point[0][0] == "roaring"
+    ranged = model.rank([("range", 250, 100)], card)
+    assert ranged[0][0] == "bitsliced"
+    assert [k for k, _ in point] != [k for k, _ in ranged]
+    assert set(k for k, _ in point) == set(CANDIDATES)
+
+
+def test_column_mixes_aggregates_per_column():
+    samples = [(0, "eq", 1, "equality", 0, 10.0)] * 3 + \
+              [(0, "range", 20, "equality", 19, 50.0),
+               (1, "in", 4, "binned", 3, 20.0)]
+    mixes = column_mixes(samples)
+    assert ("eq", 1, 3) in mixes[0] and ("range", 20, 1) in mixes[0]
+    assert mixes[1] == [("in", 4, 1)]
+
+
+# -- the compaction hook ----------------------------------------------------
+
+
+def test_chooser_needs_samples_and_known_columns():
+    stats = WorkloadStats()
+    assert make_compaction_chooser(stats) is None     # too few samples
+    for _ in range(40):
+        stats.record(0, "eq", 1, "equality", 1, 25.0)
+    chooser = make_compaction_chooser(stats)
+    assert chooser(0, np.ones(300), 1) == "roaring"
+    assert chooser(5, np.ones(300), 1) is None        # untouched column
+
+
+@pytest.mark.parametrize("mix,expect", [
+    ("point", "roaring"),       # eq-only mix: container folds win
+    ("range", "bitsliced"),     # wide ranges on card 300: log-card circuit
+])
+def test_compaction_reencodes_toward_mix(mix, expect):
+    """The full loop: record a mix, compact with workload_stats, and the
+    merged segment's encoding follows the mix — flipping when it flips."""
+    r = np.random.default_rng(7)
+    stats = WorkloadStats()
+    for i in range(64):
+        if mix == "point":
+            stats.record(0, "eq", 1, "equality", 1, 40.0 + i % 3)
+        else:
+            stats.record(0, "range", 250, "equality", 249, 400.0 + i % 3)
+    w = IndexWriter(IndexSpec(), workload_stats=stats)
+    w.append([r.integers(0, 300, size=256)])
+    w.seal()
+    w.append([r.integers(0, 300, size=256)])
+    w.seal()
+    seg = w.compact(span=(0, 2))
+    assert seg.index.encodings() == (expect,)
+    # and the re-encoded segment still answers correctly
+    rows, _ = w.index.query(Range(0, 10, 200))
+    full = np.concatenate([c for c in [w.index.segments[0].columns[0]]])
+    np.testing.assert_array_equal(
+        rows, np.flatnonzero((full >= 10) & (full <= 200)))
+
+
+def test_compaction_without_stats_keeps_static_choice():
+    r = np.random.default_rng(8)
+    w = IndexWriter(IndexSpec())                      # no workload_stats
+    w.append([r.integers(0, 300, size=256)])
+    w.seal()
+    w.append([r.integers(0, 300, size=256)])
+    w.seal()
+    static = w.compact(span=(0, 2))
+    assert static.index.encodings() == ("equality",)  # spec default
+
+
+# -- the global recorder fed by the query surface ---------------------------
+
+
+def test_queries_feed_global_workload_stats():
+    WORKLOAD_STATS.clear()
+    workload_reset()
+    cols = make_cols(300, [20], seed=3)
+    idx = BitmapIndex.build(cols, spec_for("roaring"))
+    idx.query(Eq(0, 5))
+    idx.query_compressed(Range(0, 2, 9))
+    idx.query_many([Eq(0, 1), Eq(0, 2)])
+    samples = WORKLOAD_STATS.samples()
+    assert len(samples) == 4
+    assert all(s[3] == "roaring" and s[5] > 0 for s in samples)
+
+    w = IndexWriter(spec_for("equality"))
+    w.append(cols)
+    w.seal()
+    WORKLOAD_STATS.clear()
+    w.index.query(Eq(0, 5))
+    assert len(WORKLOAD_STATS) == 1                   # segmented path records
+    WORKLOAD_STATS.clear()
+    workload_reset()
