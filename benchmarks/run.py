@@ -14,12 +14,46 @@ import os
 import time
 
 
+def dist_smoke() -> None:
+    """Tiny multi-process serve-plane check for CI: spawns a real worker
+    fleet, gates only on the noise-immune claims (bit-identity with the
+    in-process engine, compressed-shipped < 0.2 of dense) — the
+    throughput race gates in the full bench where the trend machinery
+    can absorb runner noise."""
+    from repro.data.tables import make_census_like
+
+    from . import bench_fig6
+
+    # 24k rows -> 3k-row segments: big enough that the 24-byte wire
+    # header stops dominating the per-segment compressed payload
+    rows = bench_fig6.run_distributed(make_census_like(24_000), queries=8,
+                                      hosts=(2,))
+    failed = False
+    for r in rows:
+        if r["hosts"] < 2:
+            continue
+        ok = r["agrees_with_local"] and r["compressed_to_dense"] < 0.2
+        failed |= not ok
+        print(f"dist-smoke hosts={r['hosts']}: "
+              f"bit-identical={r['agrees_with_local']} "
+              f"compressed/dense={r['compressed_to_dense']:.3f} "
+              f"speedup={r['speedup_vs_one']:.2f}x "
+              f"({r['cpus']:.0f} cpus): {'PASS' if ok else 'FAIL'}")
+    raise SystemExit(1 if failed else 0)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None)
     ap.add_argument("--out", default="results/benchmarks.json")
+    ap.add_argument("--dist-smoke", action="store_true",
+                    help="run only the multi-process serve-plane smoke "
+                         "(bit-identity + wire-compression gates) and exit")
     args, _ = ap.parse_known_args()
+
+    if args.dist_smoke:
+        dist_smoke()
 
     from . import (bench_fig2, bench_fig3, bench_fig4, bench_fig6,
                    bench_moe_dispatch, bench_scaling, bench_table3,

@@ -49,7 +49,7 @@ import sys
 VOLATILE = {"us_per_query", "words_scanned", "cache_hit_rate",
             "agrees_with_numpy", "agrees_with_dense",
             "agrees_with_equality", "agrees_with_per_stage",
-            "agrees_with_dense_oracle"}
+            "agrees_with_dense_oracle", "agrees_with_local"}
 
 
 def row_identity(suite: str, row: dict):

@@ -32,6 +32,8 @@ arithmetic) and re-exports the names below for backwards compatibility.
 
 from __future__ import annotations
 
+import struct
+import zlib
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -48,6 +50,19 @@ __all__ = [
 
 class EwahValidationError(ValueError):
     """An EWAH stream violated the structural/canonical-form contract."""
+
+
+# Wire format (little-endian, 24-byte header + payload):
+#   magic   4s   b"EWAH"
+#   version u16  1
+#   flags   u16  0 (reserved)
+#   n_rows  u64  rows the stream covers
+#   n_words u32  compressed stream words that follow
+#   crc     u32  CRC-32 of the payload bytes
+#   payload n_words * 4 bytes of uint32 stream words
+_WIRE_MAGIC = b"EWAH"
+_WIRE_VERSION = 1
+_WIRE_HEADER = struct.Struct("<4sHHQII")
 
 
 class Cursor:
@@ -309,6 +324,56 @@ class EwahStream:
                 pos += 1
         return total
 
+    def to_bytes(self) -> bytes:
+        """Serialize for the wire: versioned little-endian header + CRC +
+        the compressed stream words, never the dense bitmap.  The inverse
+        of :meth:`from_bytes`."""
+        payload = np.ascontiguousarray(
+            np.asarray(self.data, dtype=np.uint32)).astype(
+                "<u4", copy=False).tobytes()
+        header = _WIRE_HEADER.pack(
+            _WIRE_MAGIC, _WIRE_VERSION, 0, self.n_rows,
+            len(self.data), zlib.crc32(payload))
+        return header + payload
+
+    @classmethod
+    def from_bytes(cls, buf: bytes) -> "EwahStream":
+        """Deserialize a :meth:`to_bytes` buffer.
+
+        Always checks magic/version/length/CRC; under ``REPRO_SANITIZE=1``
+        additionally runs the full canonical-form :meth:`validate` walk on
+        the decoded stream.  Raises :class:`EwahValidationError` on any
+        mismatch.
+        """
+        if len(buf) < _WIRE_HEADER.size:
+            raise EwahValidationError(
+                f"wire buffer truncated: {len(buf)} bytes < "
+                f"{_WIRE_HEADER.size}-byte header")
+        magic, version, _flags, n_rows, n_words, crc = _WIRE_HEADER.unpack_from(buf)
+        if magic != _WIRE_MAGIC:
+            raise EwahValidationError(f"bad wire magic {magic!r}")
+        if version != _WIRE_VERSION:
+            raise EwahValidationError(
+                f"unsupported wire version {version} (expected "
+                f"{_WIRE_VERSION})")
+        payload = buf[_WIRE_HEADER.size:]
+        if len(payload) != n_words * 4:
+            raise EwahValidationError(
+                f"wire payload is {len(payload)} bytes, header claims "
+                f"{n_words} words ({n_words * 4} bytes)")
+        if zlib.crc32(payload) != crc:
+            raise EwahValidationError(
+                f"wire CRC mismatch (header {crc:#010x}, payload "
+                f"{zlib.crc32(payload):#010x})")
+        data = np.frombuffer(payload, dtype="<u4").astype(np.uint32,
+                                                          copy=False)
+        stream = cls(data=data, n_rows=n_rows)
+        from ..analysis.runtime import sanitize_enabled
+
+        if sanitize_enabled():
+            stream.validate(origin="EwahStream.from_bytes")
+        return stream
+
 
 # ---------------------------------------------------------------------------
 # Streaming logical operations (compressed domain, O(|A| + |B|)).
@@ -440,6 +505,10 @@ def concat_streams(parts) -> np.ndarray:
     res = Appender()
     for s in parts:
         res.add_cursor(Cursor(s))
+    if not res.n_words:
+        # canonical empty: byte-identical to ewah.compress of zero words,
+        # so concatenating any all-empty partition equals the whole
+        return np.zeros(0, dtype=np.uint32)
     return res.finish()
 
 

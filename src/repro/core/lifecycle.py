@@ -123,6 +123,48 @@ class IndexWriter:
         self._compact_lock = make_lock("writer._compact_lock",
                                        reentrant=False)
 
+    @classmethod
+    def from_parts(cls, spec=None, *, names=None, segments=(),
+                   buffer=None, closed=False, seal_rows=None,
+                   materialize=True, clock=time.time,
+                   workload_stats=None) -> "IndexWriter":
+        """Reassemble a writer from previously-sealed parts — the restore
+        hook for the sharded serve-plane checkpoints
+        (``repro.dist.serve_plane.ServePlane.restore``).
+
+        ``segments`` are already-sealed :class:`Segment` objects covering
+        contiguous id spans (typically re-sealed from checkpointed raw
+        columns with their recorded encodings); ``buffer`` is the open
+        tail as ``(columns, deleted_mask, expiry)`` or None.  The writer
+        behaves exactly as if it had ingested those rows itself: appends,
+        deletes, seals, and compactions all remain legal (unless
+        ``closed``).
+        """
+        w = cls(spec, names=names, seal_rows=seal_rows,
+                materialize=materialize, clock=clock,
+                workload_stats=workload_stats)
+        segments = tuple(segments)
+        with w._lock:
+            w._segments = segments
+            if buffer is not None:
+                cols, deleted, expiry = buffer
+                cols = [np.asarray(c) for c in cols]
+                n = len(deleted)
+                if n:
+                    w._chunks = [cols]
+                    w._chunk_deleted = [np.asarray(deleted, dtype=bool)]
+                    w._chunk_expiry = [np.asarray(expiry,
+                                                  dtype=np.float64)]
+                    w._buffered = n
+                w._n_cols = len(cols)
+            elif segments:
+                live = next((s for s in segments if s.columns), None)
+                if live is not None:
+                    w._n_cols = len(live.columns)
+            w._closed = bool(closed)
+        SegmentedIndex._check(segments, buffer is not None)
+        return w
+
     # -- state -------------------------------------------------------------
 
     @property

@@ -29,6 +29,14 @@ executing in the compressed domain and shipping its compressed result
 stream; fan-out row ids are original ingest positions too (stable across
 deletes and purges — the shards carry the surviving ids), so the two modes
 answer identically.
+
+With ``hosts >= 2`` queries serve through a multi-process
+:class:`~repro.dist.serve_plane.ServePlane` instead: each worker process
+owns a word-aligned run of sealed segments (re-homed after compaction)
+and ships only compressed result streams back to the coordinator, which
+stitches them into the same original-ingest-order answers
+(docs/dist.md).  Ingest, deletes, TTLs, and compaction all keep working —
+the plane syncs worker ownership lazily before every query batch.
 """
 
 from __future__ import annotations
@@ -44,16 +52,22 @@ class MetadataIndex:
 
     def __init__(self, k: int = 1, row_order: str = "grayfreq",
                  spec: IndexSpec | None = None, query_fanout: int = 0,
-                 encoding: str = "equality"):
+                 encoding: str = "equality", hosts: int = 0):
         self.spec = spec or IndexSpec(k=k, row_order=row_order,
                                       column_order="heuristic",
                                       encoding=encoding)
+        if hosts >= 2 and query_fanout > 1:
+            raise ValueError(
+                "hosts and query_fanout are separate serving topologies "
+                "(multi-process plane vs in-process shard view); pick one")
         self.k = self.spec.k
         self.row_order = self.spec.row_order
         self.query_fanout = query_fanout
+        self.hosts = hosts
         self.writer = IndexWriter(self.spec, names=self.COLS)
         self._sharded = None
         self._compactor = None
+        self._plane = None
 
     def add_batch(self, meta: dict, ttl=None):
         """Append one metadata batch and seal its word-aligned prefix into
@@ -86,7 +100,12 @@ class MetadataIndex:
                 raise ValueError(f"unknown columns {unknown}; known: "
                                  f"{', '.join(self.COLS)}")
             pred = And(*[Eq(col, int(v)) for col, v in where.items()])
-        n = self.writer.delete(pred, row_ids=row_ids, backend=backend)
+        if self._plane is not None:
+            # the plane broadcasts tombstones to segment-owning workers
+            # (shipped segments keep their generation across a tombstone)
+            n = self._plane.delete(pred, row_ids=row_ids, backend=backend)
+        else:
+            n = self.writer.delete(pred, row_ids=row_ids, backend=backend)
         self._sharded = None
         return n
 
@@ -111,10 +130,14 @@ class MetadataIndex:
         return self._compactor
 
     def close(self) -> None:
-        """Drain and stop the background compactor, if one is running."""
+        """Drain and stop the background compactor, if one is running,
+        and shut down the serve-plane worker fleet (hosts mode)."""
         if self._compactor is not None:
             self._compactor.close()
             self._compactor = None
+        if self._plane is not None:
+            self._plane.close()
+            self._plane = None
 
     @property
     def n_rows(self) -> int:
@@ -166,6 +189,21 @@ class MetadataIndex:
         return self.writer.index
 
     @property
+    def plane(self):
+        """The multi-process :class:`~repro.dist.serve_plane.ServePlane`
+        (``hosts >= 2`` mode), spawned lazily on first use so indexes that
+        never query don't pay the worker-fleet startup."""
+        if self.hosts < 2:
+            raise ValueError(
+                f"MetadataIndex was built with hosts={self.hosts}; the "
+                "serve plane needs hosts >= 2")
+        if self._plane is None:
+            from ..dist.serve_plane import ServePlane
+
+            self._plane = ServePlane(self.writer, n_hosts=self.hosts)
+        return self._plane
+
+    @property
     def sharded(self):
         if self._sharded is None:
             from ..dist.query_fanout import ShardedIndex
@@ -182,7 +220,10 @@ class MetadataIndex:
         """Run any predicate (columns by name, e.g. ``Eq("domain", 3)`` or
         ``In("quality_bin", range(8, 16))``) through the planner.
         Returns (row_ids, compressed_words_scanned); row ids are original
-        ingest positions in both the segmented and fan-out modes."""
+        ingest positions in all three serving modes (segmented, fan-out,
+        multi-process plane)."""
+        if self.hosts >= 2:
+            return self.plane.query(pred, backend=backend)
         if self.query_fanout > 1:
             return self.sharded.query(pred, backend=backend, names=self.COLS)
         return self.index.query(pred, backend=backend)

@@ -1,15 +1,47 @@
 """Distributed layer: placement (sharding), fault tolerance (checkpoint),
-and query fan-out over row-range index shards (query_fanout)."""
+query fan-out over row-range index shards (query_fanout), and the
+cross-process serve plane (serve_plane).
 
-from . import checkpoint, query_fanout, sharding
-from .query_fanout import IndexShard, ShardedIndex, shard_ranges
-from .sharding import (batch_shardings, cache_shardings, grad_shardings_zero,
-                       opt_shardings, param_shardings, replicated,
-                       zero_pad_for)
+Submodules resolve lazily (PEP 562): serve-plane *worker* processes run
+``python -m repro.dist.serve_plane`` through this package and must not
+pay the jax import that ``sharding`` drags in — a worker imports only
+the numpy core until a query actually names ``backend="jax"``.
+"""
 
-__all__ = [
-    "checkpoint", "query_fanout", "sharding",
-    "IndexShard", "ShardedIndex", "shard_ranges",
-    "batch_shardings", "cache_shardings", "grad_shardings_zero",
-    "opt_shardings", "param_shardings", "replicated", "zero_pad_for",
-]
+_SUBMODULES = ("checkpoint", "query_fanout", "serve_plane", "sharding")
+
+_LAZY = {
+    # query_fanout: placement + in-process fan-out (numpy-only)
+    "IndexShard": "query_fanout",
+    "ShardedIndex": "query_fanout",
+    "assign_segments": "query_fanout",
+    "shard_ranges": "query_fanout",
+    # serve_plane: cross-process coordinator/worker (numpy-only)
+    "ServePlane": "serve_plane",
+    "seal_from_state": "serve_plane",
+    "segment_state": "serve_plane",
+    # sharding: jax mesh placement (imports jax)
+    "batch_shardings": "sharding",
+    "cache_shardings": "sharding",
+    "grad_shardings_zero": "sharding",
+    "opt_shardings": "sharding",
+    "param_shardings": "sharding",
+    "replicated": "sharding",
+    "zero_pad_for": "sharding",
+}
+
+__all__ = sorted([*_SUBMODULES, *_LAZY])
+
+
+def __getattr__(name):
+    from importlib import import_module
+
+    if name in _SUBMODULES:
+        return import_module(f".{name}", __name__)
+    if name in _LAZY:
+        return getattr(import_module(f".{_LAZY[name]}", __name__), name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return __all__

@@ -26,9 +26,14 @@ into up to N equal word-aligned ranges) and the fan-out framing:
      concatenated row space would produce.
 
 Shards are independent — the per-shard step parallelizes across processes
-or hosts without coordination; this module keeps the execution loop local
-and the *protocol* (word alignment, compressed shipping, coalescing merge)
-is what `docs/dist.md` specifies for a multi-host deployment.
+or hosts without coordination.  This module keeps the execution loop local
+and owns the **placement policy** shared with the cross-process serve
+plane (:mod:`repro.dist.serve_plane`): :func:`shard_ranges` splits a row
+space into word-aligned ranges, and :func:`assign_segments` maps sealed
+segments onto host ranks by carving the *cumulative compressed word
+space* with the same word-aligned splitter — so ownership rebalances
+whenever compaction changes the segment list, exactly as `docs/dist.md`
+specifies for a multi-host deployment.
 
 Row-id semantics: fan-out queries return **original** table row positions
 (each shard's local ids map through its ``row_perm`` and row offset) —
@@ -43,6 +48,40 @@ from ..core.segment import Segment, SegmentedIndex
 
 # a shard is a segment; the old name stays importable
 IndexShard = Segment
+
+
+def assign_segments(segments, n_hosts: int) -> list:
+    """Ownership map for the serve plane: one owner rank per segment.
+
+    Carves the *cumulative compressed word space* (each segment weighted
+    by its ``size_words``, floor 1 so zero-cost segments still land
+    somewhere) into up to ``n_hosts`` contiguous ranges using the same
+    word-aligned splitter queries shard rows with, then homes each
+    segment on the range containing its midpoint.  Contiguity means a
+    host owns a contiguous run of segments — compaction spans and
+    ownership spans nest — and recomputing after a compaction re-homes
+    only segments near the changed run.
+    """
+    if n_hosts < 1:
+        raise ValueError(f"n_hosts must be >= 1, got {n_hosts}")
+    sizes = [max(s.size_words(), 1) for s in segments]
+    if not sizes:
+        return []
+    ranges = shard_ranges(sum(sizes) * WORD_BITS, n_hosts)
+    starts = [start for start, _ in ranges]
+    owners, pos = [], 0
+    for words in sizes:
+        mid = (pos + words / 2.0) * WORD_BITS
+        rank = len(starts) - 1
+        while rank > 0 and starts[rank] > mid:
+            rank -= 1
+        owners.append(rank)
+        pos += words
+    # densify: ranks number 0..k-1 in first-appearance order, so a tiny
+    # fleet-of-one workload homes on rank 0, not wherever the word-aligned
+    # splitter happened to drop its midpoint
+    remap: dict = {}
+    return [remap.setdefault(r, len(remap)) for r in owners]
 
 
 def shard_ranges(n_rows: int, n_shards: int) -> list:

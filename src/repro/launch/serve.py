@@ -66,16 +66,29 @@ class SegmentedAdmission:
     pauses for index maintenance; ``retire(row_ids)`` tombstones served
     requests (one compressed merge — the compactor purges them later), so
     the queue drains without rebuilds.  ``close()`` drains the compactor.
+
+    With ``hosts >= 2`` the sealed segments serve through a
+    :class:`~repro.dist.serve_plane.ServePlane` — a fleet of worker
+    *processes*, each owning a word-aligned contiguous run of segments
+    (re-homed whenever the compactor changes the segment list) and
+    shipping only compressed result streams back; packs are bit-identical
+    to the in-process path (docs/dist.md).
     """
 
     def __init__(self, backend: str = "numpy", seal_rows: int = 256,
-                 compactor: bool = False, compact_interval: float = 0.02):
+                 compactor: bool = False, compact_interval: float = 0.02,
+                 hosts: int = 0):
         self.spec = IndexSpec(row_order="unsorted", column_order="given")
         # feed the process-wide workload telemetry into compactions: the
         # background compactor re-encodes merged admission segments toward
         # the live predicate mix once enough samples accumulate
         self.writer = IndexWriter(self.spec, seal_rows=seal_rows,
                                   workload_stats=WORKLOAD_STATS)
+        self._plane = None
+        if hosts >= 2:
+            from repro.dist.serve_plane import ServePlane
+
+            self._plane = ServePlane(self.writer, n_hosts=hosts)
         self.backend = backend
         # _lock keeps the shadow length store and the writer append one
         # atomic admission (a pack between the two would otherwise see a
@@ -98,17 +111,23 @@ class SegmentedAdmission:
     def retire(self, row_ids) -> int:
         """Tombstone served requests so later packs skip them; returns the
         newly-retired count."""
-        return self.writer.delete(row_ids=np.asarray(row_ids,
-                                                     dtype=np.int64))
+        row_ids = np.asarray(row_ids, dtype=np.int64)
+        if self._plane is not None:
+            # the plane broadcasts the tombstones to owning workers too
+            return self._plane.delete(row_ids=row_ids)
+        return self.writer.delete(row_ids=row_ids)
 
     def close(self) -> None:
-        """Drain and stop the background compactor, if one is running."""
+        """Drain and stop the background compactor, if one is running,
+        then shut down the serve-plane worker fleet (plane mode)."""
         with self._lock:
             comp, self._compactor = self._compactor, None
         if comp is not None:
             # off-lock: draining joins the scheduler thread, whose
             # compactions must not wait on an admission-held lock
             comp.close()
+        if self._plane is not None:
+            self._plane.close()
 
     @property
     def lengths(self) -> np.ndarray:
@@ -135,8 +154,12 @@ class SegmentedAdmission:
             bins = lengths // BIN_WIDTH
             uniq, counts = np.unique(bins, return_counts=True)
             by_freq = uniq[np.lexsort((uniq, -counts))]
-            results = self.writer.index.query_many(
-                [Eq(0, int(b)) for b in by_freq], backend=self.backend)
+            preds = [Eq(0, int(b)) for b in by_freq]
+            # plane mode fans the per-bin plans out across the worker
+            # processes; results are bit-identical to the local engine
+            surface = (self._plane if self._plane is not None
+                       else self.writer.index)
+            results = surface.query_many(preds, backend=self.backend)
         order = np.concatenate(
             [rows[np.argsort(lengths[rows], kind="stable")]
              for rows, _ in results])
@@ -145,7 +168,8 @@ class SegmentedAdmission:
 
 
 def pack_batches(lengths, batch_size, histogram_aware=True, backend="numpy",
-                 query_fanout=0, admission="rebuild", compactor=False):
+                 query_fanout=0, admission="rebuild", compactor=False,
+                 hosts=0):
     """Return list of index-batches; histogram-aware = Gray-Frequency order.
 
     The histogram-aware path runs through the bitmap query plane: a bitmap
@@ -167,6 +191,11 @@ def pack_batches(lengths, batch_size, histogram_aware=True, backend="numpy",
     packing also exercises concurrent off-thread compaction.  Batches are
     identical to the rebuild path — the lifecycle changes *when* index work
     happens, not the answer.
+
+    ``hosts >= 2`` (segmented mode only) serves the sealed admission
+    segments through a :class:`~repro.dist.serve_plane.ServePlane` worker
+    fleet — each pack's per-bin plans fan out across processes and only
+    compressed result streams come back.
     """
     lengths = np.asarray(lengths)
     n = len(lengths)
@@ -174,6 +203,10 @@ def pack_batches(lengths, batch_size, histogram_aware=True, backend="numpy",
         raise ValueError(
             "compactor=True requires admission='segmented' (the rebuild "
             "path has no writer to compact)")
+    if hosts >= 2 and admission != "segmented":
+        raise ValueError(
+            "hosts>=2 requires admission='segmented' (the serve plane "
+            "wraps the segmented writer)")
     if not histogram_aware:
         order = np.arange(n)
         return [order[i : i + batch_size] for i in range(0, n, batch_size)]
@@ -182,7 +215,8 @@ def pack_batches(lengths, batch_size, histogram_aware=True, backend="numpy",
             raise ValueError(
                 "segmented admission and query_fanout are separate "
                 "topologies; pick one")
-        q = SegmentedAdmission(backend=backend, compactor=compactor)
+        q = SegmentedAdmission(backend=backend, compactor=compactor,
+                               hosts=hosts)
         try:
             waves = max(1, min(4, n // max(batch_size, 1)))
             for chunk in np.array_split(lengths, waves):
@@ -283,6 +317,12 @@ def main(argv=None):
                     help="run a background compactor thread over the "
                          "segmented admission writer while requests stream "
                          "in (requires --admission segmented)")
+    ap.add_argument("--hosts", type=int, default=0,
+                    help="serve sealed admission segments through a "
+                         "multi-process ServePlane with N segment-owning "
+                         "worker processes; only compressed result streams "
+                         "cross the wire (requires --admission segmented; "
+                         "0/1 = in-process)")
     ap.add_argument("--profile", default=None, metavar="DIR",
                     help="emit a JAX profiler trace of the serving loop to "
                          "DIR (read with: tensorboard --logdir DIR) plus a "
@@ -333,12 +373,14 @@ def main(argv=None):
                                    backend=args.query_backend,
                                    query_fanout=args.query_fanout,
                                    admission=args.admission,
-                                   compactor=args.compactor)
+                                   compactor=args.compactor,
+                                   hosts=args.hosts if mode else 0)
             waste = padding_waste(lengths, batches)
             print(f"packing histogram_aware={mode} "
                   f"(query backend {args.query_backend}, "
                   f"fanout {args.query_fanout}, "
-                  f"admission {args.admission}): "
+                  f"admission {args.admission}, "
+                  f"hosts {args.hosts}): "
                   f"padding waste {waste:.1%}")
 
         prof = PhaseProfile()
@@ -347,7 +389,8 @@ def main(argv=None):
                                    backend=args.query_backend,
                                    query_fanout=args.query_fanout,
                                    admission=args.admission,
-                                   compactor=args.compactor)
+                                   compactor=args.compactor,
+                                   hosts=args.hosts)
         step = jax.jit(partial(serve_step, cfg=cfg),
                        in_shardings=(p_sh, tok_sh, c_sh, replicated(mesh)),
                        out_shardings=(tok_sh, c_sh), donate_argnums=(2,))

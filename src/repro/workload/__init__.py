@@ -12,7 +12,8 @@ by ``serve --workload-stats``.  See docs/containers.md.
 
 from .cost import (CANDIDATES, CostModel, column_mixes, estimate_merges,
                    make_compaction_chooser)
-from .stats import WORKLOAD_STATS, WorkloadStats, record_execution
+from .stats import (WORKLOAD_STATS, WorkloadStats, merge_snapshots,
+                    record_execution)
 
 __all__ = [
     "CANDIDATES",
@@ -22,5 +23,6 @@ __all__ = [
     "column_mixes",
     "estimate_merges",
     "make_compaction_chooser",
+    "merge_snapshots",
     "record_execution",
 ]

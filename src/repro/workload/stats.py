@@ -82,6 +82,38 @@ class WorkloadStats:
             return {"recorded": self.recorded,
                     "samples": len(self._samples)}
 
+    def snapshot(self) -> dict:
+        """A JSON-serializable copy of the buffer — the cross-host wire
+        payload.  Same shape as the :meth:`save` file so the two transports
+        (disk and socket) share one format."""
+        with self._mutex:
+            return {"recorded": self.recorded,
+                    "samples": [list(s) for s in self._samples]}
+
+    def drain(self) -> dict:
+        """Atomically :meth:`snapshot` and reset — what a serve-plane
+        worker ships with each reply so every sample reaches the
+        coordinator exactly once."""
+        with self._mutex:
+            snap = {"recorded": self.recorded,
+                    "samples": [list(s) for s in self._samples]}
+            self._samples = []
+            self.recorded = 0
+        return snap
+
+    def merge_snapshot(self, snap: dict) -> int:
+        """Fold one host's :meth:`snapshot`/:meth:`drain` payload into this
+        buffer; returns the number of samples merged.  Bounding applies, so
+        the buffer stays recency-weighted across hosts."""
+        samples = [(int(c), str(sh), int(w), str(e), int(m), float(u))
+                   for c, sh, w, e, m, u in snap.get("samples", [])]
+        extra = int(snap.get("recorded", len(samples))) - len(samples)
+        with self._mutex:
+            self.recorded += max(0, extra)
+        for s in samples:
+            self.record(*s)
+        return len(samples)
+
     def save(self, path) -> None:
         with self._mutex:
             payload = {"recorded": self.recorded,
@@ -109,6 +141,22 @@ class WorkloadStats:
 #: (``BitmapIndex.query*`` / ``SegmentedIndex`` timing wrappers) and
 #: ``serve --workload-stats`` persists.
 WORKLOAD_STATS = WorkloadStats()
+
+
+def merge_snapshots(snaps, stats: WorkloadStats | None = None) -> WorkloadStats:
+    """Merge per-host :meth:`WorkloadStats.snapshot` payloads into one
+    recorder (default: the process-wide :data:`WORKLOAD_STATS`).
+
+    The serve-plane coordinator calls this with every worker reply, so the
+    compaction cost model (:func:`repro.workload.cost.make_compaction_chooser`)
+    ranks candidate encodings on the *global* query mix rather than any one
+    host's slice.  Returns the target recorder.
+    """
+    target = stats if stats is not None else WORKLOAD_STATS
+    for snap in snaps:
+        if snap:
+            target.merge_snapshot(snap)
+    return target
 
 
 def record_execution(plans, seconds, stats: WorkloadStats | None = None) -> None:

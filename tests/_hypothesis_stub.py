@@ -4,8 +4,8 @@ conftest.py aliases this module into sys.modules *only* when the real
 package is missing, so environments with hypothesis keep full shrinking /
 database behaviour.  The stub covers exactly the subset this suite uses —
 ``@settings(max_examples=, deadline=)`` over ``@given`` with
-``st.integers(lo, hi)``, ``st.sampled_from(seq)``, and
-``st.lists(elem, min_size=, max_size=)`` —
+``st.integers(lo, hi)``, ``st.sampled_from(seq)``,
+``st.tuples(*elems)``, and ``st.lists(elem, min_size=, max_size=)`` —
 drawing examples from a per-test fixed-seed RNG (seeded by the test name)
 so failures reproduce across runs.  Boundary values (all-lo / all-hi) are
 always tried first, standing in for hypothesis's shrinking toward simple
@@ -43,6 +43,17 @@ def _sampled_from(elements):
         lo=elements[0], hi=elements[-1])
 
 
+def _tuples(*strats):
+    def draw(rng):
+        return tuple(s.example(rng) for s in strats)
+
+    lo = (tuple(s._lo for s in strats)
+          if all(s._lo is not None for s in strats) else None)
+    hi = (tuple(s._hi for s in strats)
+          if all(s._hi is not None for s in strats) else None)
+    return _Strategy(draw, lo=lo, hi=hi)
+
+
 def _lists(elements, min_size=0, max_size=10):
     def draw(rng):
         n = int(rng.integers(min_size, max_size + 1))
@@ -56,6 +67,7 @@ strategies = types.ModuleType("hypothesis.strategies")
 strategies.integers = _integers
 strategies.lists = _lists
 strategies.sampled_from = _sampled_from
+strategies.tuples = _tuples
 
 
 def settings(max_examples: int = 100, deadline=None, **_ignored):

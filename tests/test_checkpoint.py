@@ -92,3 +92,42 @@ def test_atomicity_no_partial_dirs(tmp_path):
         ckpt.save(str(tmp_path), s, tree)
     leftovers = [d for d in os.listdir(tmp_path) if d.startswith("tmp.")]
     assert leftovers == []
+
+
+def test_retention_survives_crash_before_pointer_flip(tmp_path, monkeypatch):
+    """Crash-safety regression: retention must retire old steps only
+    AFTER the new step's LATEST pointer flip is durable.  A crash
+    injected between the data write and the flip leaves every previously
+    committed step on disk and the pointer on the old step — the old
+    failure mode pruned first and could leave zero loadable steps."""
+    tree = make_tree()
+    for s in range(3):
+        ckpt.save(str(tmp_path), s, tree, keep=2)
+    assert ckpt.available_steps(str(tmp_path)) == [1, 2]
+    assert ckpt.latest_step(str(tmp_path)) == 2
+
+    with monkeypatch.context() as m:
+        def boom(directory, step):
+            raise RuntimeError("injected crash before LATEST flip")
+
+        m.setattr(ckpt, "flip_latest", boom)
+        with pytest.raises(RuntimeError, match="injected crash"):
+            ckpt.save(str(tmp_path), 3, tree, keep=2)
+
+    # nothing was pruned and the pointer still names the old commit
+    assert ckpt.available_steps(str(tmp_path)) == [1, 2, 3]
+    assert ckpt.latest_step(str(tmp_path)) == 2
+    restored, step, _ = ckpt.restore(str(tmp_path), tree)
+    trees_equal(tree, restored)
+
+    # the next successful save commits and only then retires old steps
+    ckpt.save(str(tmp_path), 4, tree, keep=2)
+    assert ckpt.latest_step(str(tmp_path)) == 4
+    assert ckpt.available_steps(str(tmp_path)) == [3, 4]
+
+
+def test_latest_pointer_never_moves_backwards(tmp_path):
+    tree = make_tree()
+    ckpt.save(str(tmp_path), 9, tree)
+    ckpt.flip_latest(str(tmp_path), 3)  # stale flip (e.g. replayed host)
+    assert ckpt.latest_step(str(tmp_path)) == 9

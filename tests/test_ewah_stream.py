@@ -185,3 +185,67 @@ def test_ewah_stream_equality_and_hash_by_content():
     assert hash(a) == hash(b)
     assert a != c and a != "not a stream"
     assert len({a, b, c}) == 2          # usable as dict/set keys
+
+
+# ---------------------------------------------------------------------------
+# Wire codec: versioned header + CRC (what the serve plane ships)
+# ---------------------------------------------------------------------------
+
+
+from repro.core.ewah_stream import EwahValidationError  # noqa: E402
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 400), st.integers(0, 50))
+def test_wire_roundtrip(n, seed):
+    words = random_words(n, seed=seed)
+    stream = EwahStream(ewah.compress(words), n_rows=n * 32,
+                        words_scanned=7)
+    back = EwahStream.from_bytes(stream.to_bytes())
+    assert back == stream            # content equality (data + n_rows)
+    assert back.data.dtype == np.uint32
+
+
+def test_wire_zero_row_stream():
+    empty = EwahStream(ewah.compress(np.zeros(0, dtype=np.uint32)), 0)
+    back = EwahStream.from_bytes(empty.to_bytes())
+    assert back.n_rows == 0 and back.n_words == 0
+    assert back.count() == 0
+
+
+def test_wire_rejects_corruption():
+    stream = EwahStream(ewah.compress(random_words(20, seed=1)), 640)
+    blob = bytearray(stream.to_bytes())
+    blob[-3] ^= 0xFF                 # flip a payload byte
+    with pytest.raises(EwahValidationError, match="CRC"):
+        EwahStream.from_bytes(bytes(blob))
+
+
+def test_wire_rejects_truncation_and_bad_header():
+    stream = EwahStream(ewah.compress(random_words(8, seed=2)), 256)
+    blob = stream.to_bytes()
+    with pytest.raises(EwahValidationError, match="claims"):
+        EwahStream.from_bytes(blob[:-2])      # payload shorter than header says
+    with pytest.raises(EwahValidationError, match="truncated"):
+        EwahStream.from_bytes(blob[:10])      # cut inside the header itself
+    with pytest.raises(EwahValidationError, match="magic"):
+        EwahStream.from_bytes(b"XXXX" + blob[4:])
+    bad_version = bytearray(blob)
+    bad_version[4] = 0xEE            # version field, little-endian u16
+    with pytest.raises(EwahValidationError, match="version"):
+        EwahStream.from_bytes(bytes(bad_version))
+
+
+def test_wire_sanitize_validates_stream_structure(monkeypatch):
+    """Under REPRO_SANITIZE a structurally-broken (but CRC-consistent)
+    stream is rejected at deserialization, not at first use."""
+    import repro.core.ewah_stream as es
+
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    # n_rows far smaller than the words the stream encodes
+    stream = EwahStream(ewah.compress(random_words(10, seed=3)), 320)
+    blob = stream.to_bytes()
+    hacked = bytearray(blob)
+    hacked[8:16] = (5).to_bytes(8, "little")  # claim n_rows=5
+    with pytest.raises(EwahValidationError):
+        es.EwahStream.from_bytes(bytes(hacked))

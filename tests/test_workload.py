@@ -11,6 +11,8 @@ point lookups to wide ranges.  Persistence mirrors PlanStats
 cold start.
 """
 
+import json
+
 import numpy as np
 import pytest
 
@@ -20,7 +22,8 @@ from repro.core.query import (compile_plan, workload_reset,
                               workload_snapshot)
 from repro.workload import (CANDIDATES, CostModel, WORKLOAD_STATS,
                             WorkloadStats, column_mixes, estimate_merges,
-                            make_compaction_chooser, record_execution)
+                            make_compaction_chooser, merge_snapshots,
+                            record_execution)
 
 
 def spec_for(enc, k=1):
@@ -248,3 +251,69 @@ def test_queries_feed_global_workload_stats():
     assert len(WORKLOAD_STATS) == 1                   # segmented path records
     WORKLOAD_STATS.clear()
     workload_reset()
+
+
+# -- cross-host snapshot / drain / merge (serve-plane wire payloads) --------
+
+
+def _fill(stats, column, n, us=10.0):
+    for i in range(n):
+        stats.record(column, "eq", 1, "equality", 3 + i, us)
+
+
+def test_snapshot_is_a_copy_and_json_round_trips():
+    s = WorkloadStats()
+    _fill(s, 0, 5)
+    snap = s.snapshot()
+    assert snap["recorded"] == 5 and len(snap["samples"]) == 5
+    # wire payload must survive a JSON hop unchanged
+    assert json.loads(json.dumps(snap)) == snap
+    snap["samples"].clear()
+    assert len(s) == 5                       # copy, not a view
+
+
+def test_drain_ships_each_sample_exactly_once():
+    worker = WorkloadStats()
+    coord = WorkloadStats()
+    _fill(worker, 1, 4)
+    first = worker.drain()
+    assert len(worker) == 0 and worker.stats()["recorded"] == 0
+    assert worker.drain() == {"recorded": 0, "samples": []}  # nothing twice
+    _fill(worker, 1, 2)
+    second = worker.drain()
+    merge_snapshots([first, None, second], stats=coord)      # None = no reply
+    assert len(coord) == 6
+    assert coord.stats()["recorded"] == 6
+
+
+def test_merge_snapshot_preserves_bounded_surplus():
+    """A host whose buffer already dropped old samples still reports how
+    many it recorded; the coordinator's `recorded` counts them all."""
+    host = WorkloadStats()
+    snap = host.snapshot()
+    snap["recorded"] = 100                   # 97 samples were bounded away
+    snap["samples"] = [[2, "range", 4, "binned", 7, 12.5]] * 3
+    coord = WorkloadStats()
+    assert coord.merge_snapshot(snap) == 3
+    assert len(coord) == 3
+    assert coord.stats()["recorded"] == 100
+    assert coord.samples()[0] == (2, "range", 4, "binned", 7, 12.5)
+
+
+def test_merge_snapshots_defaults_to_global_recorder():
+    WORKLOAD_STATS.clear()
+    h = WorkloadStats()
+    _fill(h, 3, 2)
+    out = merge_snapshots([h.snapshot()])
+    assert out is WORKLOAD_STATS and len(WORKLOAD_STATS) == 2
+    WORKLOAD_STATS.clear()
+
+
+def test_merge_applies_bounding_across_hosts():
+    coord = WorkloadStats()
+    snap = {"recorded": WorkloadStats.MAX_SAMPLES + 10,
+            "samples": [[0, "eq", 1, "equality", 1, 1.0]]
+            * (WorkloadStats.MAX_SAMPLES + 10)}
+    coord.merge_snapshot(snap)
+    assert len(coord) <= WorkloadStats.MAX_SAMPLES
+    assert coord.stats()["recorded"] == WorkloadStats.MAX_SAMPLES + 10
